@@ -1,0 +1,126 @@
+"""Shared toy-scale training harness for the paper-figure benchmarks.
+
+All benchmarks train the paper's Gemma3-style arch at toy size (2 layers,
+d=48) on the synthetic Markov LM so the suite finishes on a single CPU core
+while preserving the *qualitative* orderings the paper reports (MuLoCo vs
+DiLoCo, compression losslessness, streaming parity, worker-scaling slopes).
+"""
+from __future__ import annotations
+
+import functools
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import DiLoCoConfig, diloco_init, diloco_round, make_optimizer, make_streaming_masks
+from repro.core.diloco import compute_deltas, inner_step
+from repro.data import DataConfig, MarkovStream, batches_for_round
+from repro.models import ModelConfig, build_model
+from repro.optim import OptimizerConfig
+
+TOY = ModelConfig(
+    name="toy-paper", arch_type="dense", n_layers=2, d_model=48, n_heads=4,
+    n_kv_heads=2, d_ff=96, vocab=128, activation="swiglu", qk_norm=True,
+    post_norm=True, remat=False, dtype="float32",
+)
+SEQ = 32
+BPW = 4  # batch per worker
+ROUNDS = 5  # toy-scale orderings stabilize by round 5; keeps the suite CPU-friendly
+LR = {"muon": 2e-2, "adamw": 4e-3}
+
+
+def make_stream(n_workers: int, seed: int = 1, bpw: int = BPW) -> MarkovStream:
+    return MarkovStream(DataConfig(vocab=TOY.vocab, seq_len=SEQ, batch_per_worker=bpw,
+                                   n_workers=n_workers, seed=seed))
+
+
+def eval_loss(model, params, seed: int = 991) -> float:
+    stream = MarkovStream(DataConfig(vocab=TOY.vocab, seq_len=SEQ, batch_per_worker=16,
+                                     n_workers=1, seed=seed))
+    b = jax.tree.map(lambda x: x[0], stream.batch(0))
+    return float(model.loss(params, b)[0])
+
+
+def train_diloco(dcfg: DiLoCoConfig, rounds: int = ROUNDS, seed: int = 0,
+                 bpw: int = BPW, lr: float | None = None) -> tuple[float, dict]:
+    model = build_model(TOY)
+    icfg = OptimizerConfig(lr=lr or LR[dcfg.inner_name], weight_decay=1e-4,
+                           schedule="cosine", total_steps=rounds * dcfg.sync_interval)
+    opt = make_optimizer(dcfg, icfg)
+    state = diloco_init(model, dcfg, icfg, jax.random.PRNGKey(seed))
+    masks = make_streaming_masks(state, dcfg)
+    stream = make_stream(dcfg.n_workers, bpw=bpw)
+    fn = jax.jit(functools.partial(diloco_round, model, dcfg, opt, masks=masks))
+    t0 = time.time()
+    for r in range(rounds):
+        state, info = fn(state, batches_for_round(stream, r, dcfg.sync_interval))
+    wall = time.time() - t0
+    final = eval_loss(model, state["outer_params"])
+    return final, {"wall_s": wall, "state": state, "model": model}
+
+
+def dp_baseline(inner: str, rounds: int = ROUNDS, H: int = 4, total_batch: int = BPW * 4,
+                seed: int = 0) -> float:
+    """FLOP-matched data-parallel baseline: K=1 'worker', every-step sync off."""
+    dcfg = DiLoCoConfig(n_workers=1, sync_interval=1, inner_name=inner,
+                        outer_lr=1.0, outer_momentum=0.0)
+    final, _ = train_diloco(dcfg, rounds=rounds * H, bpw=total_batch, seed=seed)
+    return final
+
+
+def collect_pseudogradients(inner: str, K: int, H: int = 8, seed: int = 0,
+                            warmup_rounds: int = 4, track_steps: bool = False):
+    """Paper Fig. 2/4/5 methodology: train a DP checkpoint, *resume* it with
+    K workers (optimizer state included) for H steps, and return the stacked
+    worker deltas plus the FLOP-matched K=1 pseudogradient.
+
+    ``track_steps`` additionally returns per-inner-step hidden-weight deltas
+    [K, H, ...] for the step-norm analysis (Fig. 5).
+    """
+    model = build_model(TOY)
+    icfg = OptimizerConfig(lr=LR[inner], weight_decay=1e-4)
+
+    # --- warm up a single-worker checkpoint (mid-training regime) ---
+    warm_cfg = DiLoCoConfig(n_workers=1, sync_interval=1, inner_name=inner,
+                            outer_lr=1.0, outer_momentum=0.0)
+    opt = make_optimizer(warm_cfg, icfg)
+    wstate = diloco_init(model, warm_cfg, icfg, jax.random.PRNGKey(seed))
+    wstream = make_stream(1, seed=11, bpw=BPW * K)
+    step = jax.jit(functools.partial(inner_step, model, opt))
+    for t in range(warmup_rounds * H):
+        wstate, _ = step(wstate, wstream.batch(t))
+    ckpt_params = jax.tree.map(lambda x: x[0], wstate["worker_params"])
+    ckpt_opt = jax.tree.map(lambda x: x[0], wstate["inner_state"])
+
+    def branch(n_workers: int, bpw: int, stream_seed: int):
+        dcfg = DiLoCoConfig(n_workers=n_workers, sync_interval=H, inner_name=inner)
+        state = diloco_init(model, dcfg, icfg, jax.random.PRNGKey(seed))
+        state["outer_params"] = ckpt_params
+        state["worker_params"] = jax.tree.map(
+            lambda p: jnp.broadcast_to(p[None], (n_workers, *p.shape)), ckpt_params)
+        state["inner_state"] = jax.tree.map(
+            lambda s: jnp.broadcast_to(s[None], (n_workers, *s.shape)), ckpt_opt)
+        stream = make_stream(n_workers, seed=stream_seed, bpw=bpw)
+        per_step = []
+        sfn = jax.jit(functools.partial(inner_step, model, opt))
+        for h in range(H):
+            prev = state["worker_params"]["layers"]
+            state, _ = sfn(state, stream.batch(h))
+            if track_steps:
+                per_step.append(jax.tree.map(
+                    lambda a, b: (a - b).astype(jnp.float32),
+                    state["worker_params"]["layers"], prev))
+        steps = (jax.tree.map(lambda *xs: jnp.stack(xs, axis=1), *per_step)
+                 if track_steps else None)
+        return state, steps
+
+    state_k, steps_k = branch(K, BPW, stream_seed=5)
+    deltas_k = compute_deltas(state_k)
+    psi_k = jax.tree.map(lambda d: jnp.mean(d, axis=0), deltas_k)
+
+    state_1, _ = branch(1, BPW * K, stream_seed=5)
+    psi_1 = jax.tree.map(lambda d: d[0], compute_deltas(state_1))
+    if track_steps:
+        return deltas_k, psi_k, psi_1, steps_k
+    return deltas_k, psi_k, psi_1

@@ -1,0 +1,173 @@
+"""One benchmark per paper table/figure. Each returns CSV-able rows."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import (
+    BPW,
+    ROUNDS,
+    collect_pseudogradients,
+    dp_baseline,
+    train_diloco,
+)
+from repro.core import CompressionConfig, DiLoCoConfig
+from repro.core.analysis import frobenius_norms, interference_gap, per_matrix_cosines
+
+
+def bench_fig6a_worker_scaling() -> list[dict]:
+    """Fig. 1a/6a: % loss increase vs DP baseline as K grows."""
+    rows = []
+    H = 4
+    for inner in ("muon", "adamw"):
+        dp = dp_baseline(inner, H=H)
+        for K in (1, 2, 4):
+            dcfg = DiLoCoConfig(n_workers=K, sync_interval=H, inner_name=inner)
+            final, _ = train_diloco(dcfg)
+            rows.append({
+                "name": f"fig6a/{'muloco' if inner == 'muon' else 'diloco'}/K={K}",
+                "value": final,
+                "derived": f"pct_vs_dp={100 * (final - dp) / dp:.2f}",
+            })
+        rows.append({"name": f"fig6a/dp_{inner}", "value": dp, "derived": ""})
+    return rows
+
+
+def bench_fig6b_sync_interval() -> list[dict]:
+    """Fig. 6b: K=2, growing H."""
+    rows = []
+    for inner in ("muon", "adamw"):
+        for H in (2, 4, 8):
+            dcfg = DiLoCoConfig(n_workers=2, sync_interval=H, inner_name=inner)
+            final, _ = train_diloco(dcfg, rounds=max(ROUNDS * 4 // H, 2))
+            rows.append({"name": f"fig6b/{inner}/H={H}", "value": final, "derived": ""})
+    return rows
+
+
+def bench_tab5_quantization() -> list[dict]:
+    """Tab. 5 / Fig. 7: quantized pseudogradients, linear vs statistical, +-EF."""
+    rows = []
+    for inner in ("muon", "adamw"):
+        base, _ = train_diloco(DiLoCoConfig(n_workers=2, sync_interval=4, inner_name=inner))
+        rows.append({"name": f"tab5/{inner}/fp32", "value": base, "derived": ""})
+        for mode in ("linear", "statistical"):
+            for bits in (8, 4, 2):
+                for ef in ((False, True) if (mode == "linear" or bits == 2) else (False,)):
+                    # paper Fig. 7: EF is a no-op at >=4 bits; sweep it where it matters
+                    comp = CompressionConfig(kind="quant", bits=bits, quant_mode=mode,
+                                             error_feedback=ef)
+                    dcfg = DiLoCoConfig(n_workers=2, sync_interval=4, inner_name=inner,
+                                        compression=comp)
+                    final, _ = train_diloco(dcfg)
+                    rows.append({
+                        "name": f"tab5/{inner}/{mode}/{bits}bit/{'ef' if ef else 'noef'}",
+                        "value": final,
+                        "derived": f"delta_vs_fp32={final - base:+.4f}",
+                    })
+    return rows
+
+
+def bench_tab4_topk() -> list[dict]:
+    """Tab. 4 / Fig. 8: top-k sparsification with/without error feedback."""
+    rows = []
+    for inner in ("muon", "adamw"):
+        base, _ = train_diloco(DiLoCoConfig(n_workers=2, sync_interval=4, inner_name=inner))
+        rows.append({"name": f"tab4/{inner}/dense", "value": base, "derived": ""})
+        for frac in (0.5, 0.1, 0.01):
+            for ef in (False, True):
+                comp = CompressionConfig(kind="topk", topk_frac=frac, error_feedback=ef,
+                                         collective="gather")
+                dcfg = DiLoCoConfig(n_workers=2, sync_interval=4, inner_name=inner,
+                                    compression=comp)
+                final, _ = train_diloco(dcfg)
+                rows.append({
+                    "name": f"tab4/{inner}/top{int(frac * 100)}pct/{'ef' if ef else 'noef'}",
+                    "value": final,
+                    "derived": f"delta_vs_dense={final - base:+.4f}",
+                })
+    return rows
+
+
+def bench_fig8b_streaming() -> list[dict]:
+    """Fig. 8b: streaming (partitioned) sync matches non-streaming."""
+    rows = []
+    for inner in ("muon", "adamw"):
+        for J in (1, 2, 4):
+            dcfg = DiLoCoConfig(n_workers=2, sync_interval=4, inner_name=inner,
+                                streaming_partitions=J)
+            final, _ = train_diloco(dcfg)
+            rows.append({"name": f"fig8b/{inner}/J={J}", "value": final, "derived": ""})
+    return rows
+
+
+def bench_fig2_alignment() -> list[dict]:
+    """Fig. 2: cosine(pseudogradient_K, pseudogradient_{K=1}) per hidden
+    matrix — Muon stays aligned as K grows, AdamW decays with high spread."""
+    rows = []
+    for inner in ("muon", "adamw"):
+        for K in (2, 4):
+            _, psi_k, psi_1 = collect_pseudogradients(inner, K)
+            cos = per_matrix_cosines(psi_k, psi_1)
+            vals = np.array(list(cos.values()))
+            rows.append({
+                "name": f"fig2/{inner}/K={K}",
+                "value": float(vals.mean()),
+                "derived": f"std={vals.std():.4f};min={vals.min():.4f}",
+            })
+    return rows
+
+
+def bench_fig3_interference() -> list[dict]:
+    """Fig. 3: top-S interference gap of worker deltas during averaging."""
+    rows = []
+    for inner in ("muon", "adamw"):
+        for K in (2, 4):
+            deltas_k, _, _ = collect_pseudogradients(inner, K)
+            w = deltas_k["layers"]["mlp"]["w_in"]  # [K, L, m, n]
+            rels = []
+            for layer in range(w.shape[1]):
+                mats = w[:, layer]
+                gap = float(interference_gap(mats, s_frac=0.25))
+                # relative gap: fraction of mean worker top-S mass destroyed
+                sv = jnp.linalg.svd(mats.astype(jnp.float32), compute_uv=False)
+                S = max(int(round(0.25 * sv.shape[-1])), 1)
+                mass = float(jnp.mean(jnp.sum(sv[:, :S], axis=-1)))
+                rels.append(gap / (mass + 1e-12))
+            rows.append({
+                "name": f"fig3/{inner}/K={K}",
+                "value": float(np.mean(rels)),
+                "derived": "relative_topS_interference_gap",
+            })
+    return rows
+
+
+def bench_fig5_frobenius() -> list[dict]:
+    """Fig. 5: Frobenius norms of *individual inner optimizer steps* —
+    Muon's orthonormalized steps have near-constant norm across workers and
+    steps; AdamW's vary."""
+    rows = []
+    for inner in ("muon", "adamw"):
+        _, _, _, steps = collect_pseudogradients(inner, K=4, track_steps=True)
+        w = steps["mlp"]["w_in"]  # [K, H, L, m, n]
+        norms = jnp.sqrt(jnp.sum(w ** 2, axis=(-2, -1)))  # [K, H, L]
+        cv = float((jnp.std(norms, axis=(0, 1)) / (jnp.mean(norms, axis=(0, 1)) + 1e-12)).mean())
+        rows.append({
+            "name": f"fig5/{inner}",
+            "value": cv,
+            "derived": "step_norm_coef_of_variation",
+        })
+    return rows
+
+
+def bench_prop42_identity() -> list[dict]:
+    """Prop. 4.2 numeric check on REAL optimizer steps from a toy run."""
+    from repro.core.analysis import prop42_nuclear_identity
+
+    deltas_k, _, _ = collect_pseudogradients("muon", K=4, H=1)
+    w = deltas_k["layers"]["mlp"]["w_in"][:, 0]  # [K, m, n] single-step deltas
+    steps = w[:, None]  # H=1
+    lhs, rhs = prop42_nuclear_identity(steps, jnp.ones((1,)))
+    return [{"name": "prop42/lhs_rhs_rel_err",
+             "value": float(abs(lhs - rhs) / (abs(lhs) + 1e-12)),
+             "derived": f"lhs={float(lhs):.4f};rhs={float(rhs):.4f}"}]

@@ -1,0 +1,74 @@
+"""Benchmark harness — one function per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run            # everything
+    PYTHONPATH=src python -m benchmarks.run --only fig2,tab5
+
+Prints ``name,value,derived`` CSV rows (and writes results/benchmarks.csv).
+"""
+from __future__ import annotations
+
+import argparse
+import csv
+import os
+import sys
+import time
+
+
+def all_benchmarks():
+    from benchmarks import paper_figures as pf
+    from benchmarks import systems as sy
+
+    return {
+        "fig6a": pf.bench_fig6a_worker_scaling,
+        "fig6b": pf.bench_fig6b_sync_interval,
+        "tab5": pf.bench_tab5_quantization,
+        "tab4": pf.bench_tab4_topk,
+        "fig8b": pf.bench_fig8b_streaming,
+        "fig2": pf.bench_fig2_alignment,
+        "fig3": pf.bench_fig3_interference,
+        "fig5": pf.bench_fig5_frobenius,
+        "prop42": pf.bench_prop42_identity,
+        "tab10": sy.bench_tab10_wallclock,
+        "fig16": sy.bench_fig16_utilization,
+        "tab2": sy.bench_tab2_scaling_forms,
+        "kernels": sy.bench_kernel_micro,
+        "roofline": sy.bench_roofline_table,
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None, help="comma-separated subset")
+    ap.add_argument("--out", default="results/benchmarks.csv")
+    args = ap.parse_args()
+
+    benches = all_benchmarks()
+    names = args.only.split(",") if args.only else list(benches)
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    rows = []
+    print("name,value,derived")
+    for name in names:
+        t0 = time.time()
+        try:
+            out = benches[name]()
+        except Exception as e:  # noqa: BLE001 — keep the suite going
+            print(f"{name}/ERROR,{type(e).__name__},{e}", flush=True)
+            continue
+        finally:
+            # the suite compiles hundreds of distinct programs; without this
+            # the XLA CPU JIT eventually fails to materialize new dylibs
+            import jax
+
+            jax.clear_caches()
+        for row in out:
+            print(f"{row['name']},{row['value']},{row['derived']}", flush=True)
+            rows.append(row)
+        print(f"# {name} done in {time.time() - t0:.1f}s", file=sys.stderr, flush=True)
+    with open(args.out, "w", newline="") as f:
+        w = csv.DictWriter(f, fieldnames=["name", "value", "derived"])
+        w.writeheader()
+        w.writerows(rows)
+
+
+if __name__ == "__main__":
+    main()

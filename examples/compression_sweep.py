@@ -1,0 +1,50 @@
+"""Communication-compression sweep (paper §6.3): quantization bits x mode x
+error feedback, plus the wire-byte accounting used for the bandwidth model.
+
+    PYTHONPATH=src python examples/compression_sweep.py
+"""
+import functools
+
+import jax
+
+from repro.core import CompressionConfig, DiLoCoConfig, diloco_init, diloco_round, make_optimizer
+from repro.core.collectives import collective_bytes_tree
+from repro.data import DataConfig, MarkovStream, batches_for_round
+from repro.models import ModelConfig, build_model
+from repro.optim import OptimizerConfig
+
+cfg = ModelConfig(arch_type="dense", n_layers=2, d_model=48, n_heads=4, n_kv_heads=2,
+                  d_ff=96, vocab=128, remat=False, dtype="float32")
+model = build_model(cfg)
+K, H, ROUNDS = 2, 4, 6
+
+def run(comp: CompressionConfig) -> float:
+    dcfg = DiLoCoConfig(n_workers=K, sync_interval=H, inner_name="muon", compression=comp)
+    icfg = OptimizerConfig(lr=2e-2)
+    opt = make_optimizer(dcfg, icfg)
+    state = diloco_init(model, dcfg, icfg, jax.random.PRNGKey(0))
+    data = MarkovStream(DataConfig(vocab=cfg.vocab, seq_len=32, batch_per_worker=8,
+                                   n_workers=K, seed=1))
+    step = jax.jit(functools.partial(diloco_round, model, dcfg, opt, masks=None))
+    for r in range(ROUNDS):
+        state, info = step(state, batches_for_round(data, r, H))
+    return float(info["loss"][-1])
+
+
+params = build_model(cfg).init(jax.random.PRNGKey(0))
+print(f"{'config':38s} {'loss':>8s} {'wire bytes/sync':>16s}")
+for comp in [
+    CompressionConfig(kind="none"),
+    CompressionConfig(kind="quant", bits=8, quant_mode="linear"),
+    CompressionConfig(kind="quant", bits=4, quant_mode="linear"),
+    CompressionConfig(kind="quant", bits=4, quant_mode="linear", rowwise=True),
+    CompressionConfig(kind="quant", bits=2, quant_mode="linear", error_feedback=True),
+    CompressionConfig(kind="quant", bits=2, quant_mode="statistical", error_feedback=True),
+    CompressionConfig(kind="topk", topk_frac=0.1, error_feedback=True, collective="gather"),
+]:
+    label = f"{comp.kind}/{comp.quant_mode if comp.kind == 'quant' else ''}" \
+            f"{comp.bits if comp.kind == 'quant' else comp.topk_frac}" \
+            f"{'/rw' if comp.rowwise else ''}{'/EF' if comp.error_feedback else ''}"
+    loss = run(comp)
+    wire = collective_bytes_tree(params, comp, K)["bytes_per_sync_per_worker"]
+    print(f"{label:38s} {loss:8.4f} {wire:16,d}")

@@ -1,0 +1,26 @@
+"""End-to-end driver: train a ~small LM with MuLoCo for a few hundred steps,
+with cosine schedule, eval logging, checkpointing and resume — the full
+production path via repro.launch.train.
+
+    PYTHONPATH=src python examples/train_muloco_e2e.py
+"""
+from repro.launch.train import build_parser, train
+
+args = build_parser().parse_args([
+    "--arch", "smollm-135m",       # assigned architecture, reduced variant
+    "--reduced",
+    "--inner", "muon",             # MuLoCo
+    "--workers", "4",
+    "--sync-interval", "10",
+    "--rounds", "25",              # 250 inner steps
+    "--seq-len", "64",
+    "--batch-per-worker", "8",
+    "--lr", "2e-2",
+    "--schedule", "cosine",
+    "--checkpoint-every", "10",
+    "--out", "results/example_muloco",
+    "--verbose",
+])
+out = train(args)
+print(f"trained to smoothed eval loss {out['final_loss']:.4f}; "
+      f"checkpoint + metrics.csv in results/example_muloco/")

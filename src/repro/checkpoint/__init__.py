@@ -1,0 +1,1 @@
+from repro.checkpoint.checkpoint import load_checkpoint, save_checkpoint  # noqa: F401

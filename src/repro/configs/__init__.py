@@ -1,0 +1,11 @@
+from repro.configs.base import (  # noqa: F401
+    ASSIGNED_ARCHS,
+    INPUT_SHAPES,
+    InputShape,
+    config_for_shape,
+    get_config,
+    list_configs,
+    reduce_config,
+    register,
+    shape_supported,
+)

@@ -1,0 +1,23 @@
+"""kimi-k2-1t-a32b [moe] — trillion-param MoE, 384 experts top-8 + 1 shared.
+
+[arXiv:2501.kimi2] (paper-table). Per-expert d_ff=2048 (fine-grained).
+"""
+from repro.configs.base import register
+from repro.models.common import ModelConfig
+
+CONFIG = register(ModelConfig(
+    name="kimi-k2-1t-a32b",
+    arch_type="moe",
+    n_layers=61,
+    d_model=7168,
+    n_heads=64,
+    n_kv_heads=8,  # GQA
+    head_dim=112,
+    d_ff=2048,  # per routed expert
+    vocab=163840,
+    n_experts=384,
+    experts_per_token=8,
+    n_shared_experts=1,
+    capacity_factor=1.25,
+    citation="[arXiv:2501.kimi2]",
+))

@@ -1,0 +1,19 @@
+"""mistral-large-123b [dense] — hf:mistralai/Mistral-Large-Instruct-2407."""
+from repro.configs.base import register
+from repro.models.common import ModelConfig
+
+CONFIG = register(ModelConfig(
+    name="mistral-large-123b",
+    arch_type="dense",
+    n_layers=88,
+    d_model=12288,
+    n_heads=96,
+    n_kv_heads=8,  # GQA
+    head_dim=128,
+    d_ff=28672,
+    vocab=32768,
+    activation="swiglu",
+    qk_norm=False,
+    rope_theta=1_000_000.0,
+    citation="[hf:mistralai/Mistral-Large-Instruct-2407]",
+))

@@ -1,0 +1,24 @@
+"""moonshot-v1-16b-a3b — hf:moonshotai/Moonlight-16B-A3B.
+
+Assignment tags this [dense] but specifies `MoE 64e top-6` fields and
+Moonlight-16B-A3B *is* a DeepSeek-style MoE; implemented as MoE per its
+fields (tag discrepancy noted in DESIGN.md §4).
+"""
+from repro.configs.base import register
+from repro.models.common import ModelConfig
+
+CONFIG = register(ModelConfig(
+    name="moonshot-v1-16b-a3b",
+    arch_type="moe",
+    n_layers=48,
+    d_model=2048,
+    n_heads=16,
+    n_kv_heads=16,
+    head_dim=128,
+    d_ff=1408,  # per expert
+    vocab=163840,
+    n_experts=64,
+    experts_per_token=6,
+    n_shared_experts=2,
+    citation="[hf:moonshotai/Moonlight-16B-A3B]",
+))

@@ -1,0 +1,15 @@
+"""The paper's primary contribution: DiLoCo/MuLoCo distributed optimization,
+compressed + streaming communication, and the pseudogradient analysis suite."""
+from repro.core.compression import CompressionConfig, compress_tensor, compress_tree  # noqa: F401
+from repro.core.diloco import (  # noqa: F401
+    DiLoCoConfig,
+    compute_deltas,
+    diloco_init,
+    diloco_round,
+    dp_init,
+    dp_step,
+    inner_step,
+    make_optimizer,
+    make_streaming_masks,
+    outer_step,
+)

@@ -1,0 +1,118 @@
+"""Pseudogradient analysis tools (paper §4.2-4.3, Figs. 2-5).
+
+Implements: cosine alignment of pseudogradients / optimizer steps, singular
+value spectra before/after averaging, the top-S interference gap (Def. 4.1),
+nuclear norms via the orthonormal factor, and the exact Proposition 4.2
+identity (used as a property test and in benchmarks).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.utils.tree import tree_leaves_with_paths
+
+PyTree = Any
+
+
+def cosine(a: jax.Array, b: jax.Array, eps: float = 1e-12) -> jax.Array:
+    a = a.reshape(-1).astype(jnp.float32)
+    b = b.reshape(-1).astype(jnp.float32)
+    return jnp.vdot(a, b) / (jnp.linalg.norm(a) * jnp.linalg.norm(b) + eps)
+
+
+def hidden_matrix_leaves(tree: PyTree) -> list[tuple[str, jax.Array]]:
+    """Leaves that Muon treats as hidden matrices (per-layer matrices)."""
+    from repro.optim.muon import muon_label
+
+    out = []
+    for path, leaf in tree_leaves_with_paths(tree):
+        if muon_label(path, leaf) == "muon":
+            out.append((path, leaf))
+    return out
+
+
+def per_matrix_cosines(tree_a: PyTree, tree_b: PyTree) -> dict[str, float]:
+    """Cosine similarity per hidden weight matrix (paper Fig. 2 box plots).
+
+    Stacked [L, m, n] leaves contribute one cosine per layer slice."""
+    cos = {}
+    a_leaves = dict(hidden_matrix_leaves(tree_a))
+    b_leaves = dict(hidden_matrix_leaves(tree_b))
+    for path, a in a_leaves.items():
+        b = b_leaves[path]
+        if a.ndim > 2:
+            a2 = a.reshape((-1, *a.shape[-2:]))
+            b2 = b.reshape((-1, *b.shape[-2:]))
+            cs = jax.vmap(cosine)(a2, b2)
+            for i in range(cs.shape[0]):
+                cos[f"{path}[{i}]"] = float(cs[i])
+        else:
+            cos[path] = float(cosine(a, b))
+    return cos
+
+
+def singular_values(x: jax.Array) -> jax.Array:
+    return jnp.linalg.svd(x.astype(jnp.float32), compute_uv=False)
+
+
+def orthonormal_factor(x: jax.Array) -> jax.Array:
+    """Psi* = U V^T from the SVD of x."""
+    u, _, vt = jnp.linalg.svd(x.astype(jnp.float32), full_matrices=False)
+    return u @ vt
+
+
+def nuclear_norm(x: jax.Array) -> jax.Array:
+    return jnp.sum(singular_values(x))
+
+
+def interference_gap(worker_mats: jax.Array, s_frac: float = 0.05) -> jax.Array:
+    """Top-S interference gap G_S (Def. 4.1).
+
+    worker_mats: [K, m, n]. G_S = mean_k topS(σ(Δ_k)) − topS(σ(mean Δ)).
+    """
+    K, m, n = worker_mats.shape
+    r = min(m, n)
+    S = max(int(round(s_frac * r)), 1)
+    sv_workers = jax.vmap(singular_values)(worker_mats)  # [K, r]
+    mean_mat = jnp.mean(worker_mats, axis=0)
+    sv_mean = singular_values(mean_mat)
+    return jnp.mean(jnp.sum(sv_workers[:, :S], axis=1)) - jnp.sum(sv_mean[:S])
+
+
+def prop42_nuclear_identity(steps: jax.Array, alphas: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Proposition 4.2: for Ψ = (1/K) Σ_k Σ_h α_h ψ^(h,k),
+
+        ‖Ψ‖_* = (√r / K) Σ_{k,h} ρ^(h,k) α_h ‖ψ^(h,k)‖_F
+
+    steps: [K, H, m, n]; alphas: [H]. Returns (lhs, rhs) — equal up to fp error.
+    """
+    K, H, m, n = steps.shape
+    r = min(m, n)
+    psi = jnp.einsum("h,khmn->mn", alphas, steps) / K
+    lhs = nuclear_norm(psi)
+    psi_star = orthonormal_factor(psi)
+    norm_star = jnp.sqrt(jnp.asarray(r, jnp.float32))
+
+    fro = jnp.sqrt(jnp.sum(steps.astype(jnp.float32) ** 2, axis=(-2, -1)))  # [K, H]
+    inner = jnp.einsum("khmn,mn->kh", steps.astype(jnp.float32), psi_star)
+    rho = inner / (fro * norm_star + 1e-30)
+    rhs = norm_star / K * jnp.sum(rho * alphas[None, :] * fro)
+    return lhs, rhs
+
+
+def frobenius_norms(tree: PyTree) -> dict[str, float]:
+    """Per-hidden-matrix Frobenius norms (paper Fig. 5 step-norm traces)."""
+    out = {}
+    for path, leaf in hidden_matrix_leaves(tree):
+        x = leaf.astype(jnp.float32)
+        if x.ndim > 2:
+            x = x.reshape((-1, *x.shape[-2:]))
+            norms = jnp.sqrt(jnp.sum(x * x, axis=(-2, -1)))
+            for i in range(norms.shape[0]):
+                out[f"{path}[{i}]"] = float(norms[i])
+        else:
+            out[path] = float(jnp.linalg.norm(x))
+    return out

@@ -1,0 +1,153 @@
+"""Pseudogradient compressors (paper §2, §6.3): top-k sparsification and
+linear / statistical quantization, each in global and row-wise variants.
+
+All compressors are *value-semantics*: they return the dequantized tensor the
+receiving end would reconstruct, plus enough metadata to account bits on the
+wire. The collective layer (``repro.core.collectives``) composes them into the
+paper's all-to-all reduce-scatter + ring all-gather model (exactly two
+quantize/dequantize ops per communication).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class CompressionConfig:
+    kind: str = "none"  # none | topk | quant
+    # top-k
+    topk_frac: float = 0.01  # fraction of entries kept
+    # quantization
+    bits: int = 4
+    quant_mode: str = "linear"  # linear | statistical
+    rowwise: bool = False
+    # error feedback (Karimireddy et al., 2019; paper Alg. 2)
+    error_feedback: bool = False
+    ef_decay: float = 0.9
+    # collective model: 'a2a_rs_ag' = paper's all-to-all reduce-scatter +
+    # ring all-gather (2 quantizations); 'gather' = all-gather + local
+    # reduce (1 quantization, used for top-k)
+    collective: str = "a2a_rs_ag"
+
+    def compression_ratio(self) -> float:
+        """Approximate wire-bytes ratio vs fp32 (for wallclock modeling)."""
+        if self.kind == "none":
+            return 1.0
+        if self.kind == "topk":
+            # value (fp32) + index (~log2 n ~ 32 bits) per kept entry
+            return self.topk_frac * 2.0
+        if self.kind == "quant":
+            return self.bits / 32.0
+        raise ValueError(self.kind)
+
+
+# ---------------------------------------------------------------------------
+# Top-k sparsification
+# ---------------------------------------------------------------------------
+
+
+def topk_sparsify(x: jax.Array, frac: float) -> jax.Array:
+    """Keep exactly k = ceil(frac * n) largest-|.| entries, zero the rest."""
+    flat = x.reshape(-1)
+    n = flat.shape[0]
+    k = max(int(round(frac * n)), 1)
+    _, idx = jax.lax.top_k(jnp.abs(flat), k)
+    mask = jnp.zeros((n,), bool).at[idx].set(True)
+    return jnp.where(mask, flat, 0).reshape(x.shape)
+
+
+# ---------------------------------------------------------------------------
+# Linear quantization
+# ---------------------------------------------------------------------------
+
+
+def _row_reduce(x: jax.Array, fn, rowwise: bool):
+    if rowwise and x.ndim >= 2:
+        return fn(x, axis=-1, keepdims=True)
+    return fn(x)
+
+
+def quantize_linear(x: jax.Array, bits: int, rowwise: bool = False) -> jax.Array:
+    """Uniform levels over [min, max] (global or per last-axis row)."""
+    x32 = x.astype(jnp.float32)
+    lo = _row_reduce(x32, jnp.min, rowwise)
+    hi = _row_reduce(x32, jnp.max, rowwise)
+    nlevels = (1 << bits) - 1
+    scale = (hi - lo) / nlevels
+    scale = jnp.where(scale <= 0, 1.0, scale)
+    q = jnp.round((x32 - lo) / scale)
+    return (lo + q * scale).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Statistical (quantile codebook) quantization
+# ---------------------------------------------------------------------------
+
+
+def quantize_statistical(x: jax.Array, bits: int, rowwise: bool = False) -> jax.Array:
+    """Codebook levels at empirical quantiles (i+0.5)/2^bits; nearest-level
+    assignment via midpoint bucketing."""
+    x32 = x.astype(jnp.float32)
+    nlevels = 1 << bits
+    qs = (jnp.arange(nlevels, dtype=jnp.float32) + 0.5) / nlevels
+
+    def quantize_vec(v):  # [n] -> [n]
+        levels = jnp.quantile(v, qs)  # [nlevels], sorted
+        mids = 0.5 * (levels[1:] + levels[:-1])
+        code = jnp.searchsorted(mids, v)
+        return levels[code]
+
+    if rowwise and x.ndim >= 2:
+        rows = x32.reshape(-1, x32.shape[-1])
+        out = jax.vmap(quantize_vec)(rows).reshape(x32.shape)
+    else:
+        out = quantize_vec(x32.reshape(-1)).reshape(x32.shape)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Dispatch
+# ---------------------------------------------------------------------------
+
+
+def compress_tensor(x: jax.Array, cfg: CompressionConfig) -> jax.Array:
+    if cfg.kind == "none":
+        return x
+    if cfg.kind == "topk":
+        return topk_sparsify(x, cfg.topk_frac)
+    if cfg.kind == "quant":
+        fn = quantize_linear if cfg.quant_mode == "linear" else quantize_statistical
+        return fn(x, cfg.bits, cfg.rowwise)
+    raise ValueError(f"unknown compressor {cfg.kind!r}")
+
+
+def compress_tree(tree: PyTree, cfg: CompressionConfig) -> PyTree:
+    if cfg.kind == "none":
+        return tree
+    return jax.tree.map(lambda x: compress_tensor(x, cfg), tree)
+
+
+# ---------------------------------------------------------------------------
+# Error feedback (paper Alg. 2 lines 13-17)
+# ---------------------------------------------------------------------------
+
+
+def ef_compress_tree(delta: PyTree, residual: PyTree, cfg: CompressionConfig) -> tuple[PyTree, PyTree]:
+    """E <- beta*E + delta; comm = C(E); E <- E - comm. Returns (comm, E)."""
+
+    def per_leaf(d, e):
+        acc = cfg.ef_decay * e.astype(jnp.float32) + d.astype(jnp.float32)
+        comm = compress_tensor(acc, cfg)
+        return comm.astype(d.dtype), (acc - comm)
+
+    out = jax.tree.map(per_leaf, delta, residual)
+    is_tup = lambda t: isinstance(t, tuple)
+    comm = jax.tree.map(lambda t: t[0], out, is_leaf=is_tup)
+    new_res = jax.tree.map(lambda t: t[1], out, is_leaf=is_tup)
+    return comm, new_res

@@ -1,0 +1,231 @@
+"""DiLoCo / MuLoCo: the paper's algorithm as a composable JAX module.
+
+Algorithm 1/2 of the paper, faithfully:
+
+  * K workers each run H local steps of the **inner optimizer**
+    (AdamW -> DiLoCo, Muon -> MuLoCo) on their own data shard;
+  * every H steps, worker deltas Δ_k = θ_outer − θ_k are (optionally
+    EF-compressed and) averaged into the pseudogradient Ψ;
+  * the **outer** Nesterov-SGD applies Ψ to the outer params, which are then
+    broadcast back to all workers.
+
+Worker state is stacked on a leading K axis. On the production mesh this axis
+is sharded over `pod`, so the H inner steps incur **zero cross-pod traffic**
+and the Ψ-average is the only cross-pod all-reduce — DiLoCo's communication
+pattern expressed purely through shardings. On CPU the same code simulates
+any K via vmap. Streaming (partitioned) sync and compressed collectives plug
+in through :mod:`repro.core.streaming` / :mod:`repro.core.collectives`.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.collectives import reduce_pseudogradients
+from repro.core.compression import CompressionConfig, compress_tree, ef_compress_tree
+from repro.core.streaming import masked_update, streaming_masks
+from repro.models.api import Model
+from repro.optim import OptimizerConfig, make_inner_optimizer, nesterov_init, nesterov_step
+from repro.utils.tree import tree_zeros_like
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class DiLoCoConfig:
+    n_workers: int = 8  # K
+    sync_interval: int = 30  # H
+    inner_name: str = "muon"  # 'muon' -> MuLoCo, 'adamw' -> DiLoCo
+    outer_lr: float = 0.7  # eta_out (paper Fig. 22 optima)
+    outer_momentum: float = 0.9  # mu
+    compression: CompressionConfig = dataclasses.field(default_factory=CompressionConfig)
+    streaming_partitions: int = 1  # J (1 = no streaming)
+    ns_impl: str = "jnp"
+
+    @property
+    def is_muloco(self) -> bool:
+        return self.inner_name == "muon"
+
+
+def make_optimizer(dcfg: DiLoCoConfig, inner_cfg: OptimizerConfig):
+    kw = {"ns_impl": dcfg.ns_impl} if dcfg.inner_name == "muon" else {}
+    return make_inner_optimizer(dcfg.inner_name, inner_cfg, **kw)
+
+
+# ---------------------------------------------------------------------------
+# State
+# ---------------------------------------------------------------------------
+
+
+def diloco_init(model: Model, dcfg: DiLoCoConfig, inner_cfg: OptimizerConfig, rng: jax.Array) -> PyTree:
+    params = model.init(rng)
+    K = dcfg.n_workers
+    worker_params = jax.tree.map(lambda p: jnp.broadcast_to(p[None], (K, *p.shape)), params)
+    opt = make_optimizer(dcfg, inner_cfg)
+    inner_state = jax.vmap(opt.init)(worker_params)
+    state = {
+        "outer_params": params,
+        "outer_opt": nesterov_init(params, state_dtype=jnp.dtype(inner_cfg.state_dtype)),
+        "worker_params": worker_params,
+        "inner_state": inner_state,
+        "round": jnp.zeros((), jnp.int32),
+    }
+    if dcfg.compression.error_feedback:
+        sdt = jnp.dtype(inner_cfg.state_dtype)
+        state["ef"] = jax.tree.map(lambda p: jnp.zeros((K, *p.shape), sdt), params)
+    return state
+
+
+# ---------------------------------------------------------------------------
+# Inner step (runs every step; no cross-worker communication)
+# ---------------------------------------------------------------------------
+
+
+def inner_step(model: Model, opt, state: PyTree, batch: PyTree,
+               spmd_axis: str | None = None) -> tuple[PyTree, dict]:
+    """One local optimizer step on every worker. batch leaves: [K, B/K, ...].
+
+    ``spmd_axis='pod'`` tells GSPMD the vmapped worker axis lives on the pod
+    mesh axis, so activation sharding constraints inside the model compose
+    with the worker dimension on the production mesh."""
+
+    def one(params_k, inner_k, batch_k):
+        (loss, metrics), grads = jax.value_and_grad(model.loss, has_aux=True)(params_k, batch_k)
+        new_p, new_s = opt.step(params_k, grads, inner_k)
+        return new_p, new_s, loss
+
+    new_wp, new_is, losses = jax.vmap(one, spmd_axis_name=spmd_axis)(
+        state["worker_params"], state["inner_state"], batch)
+    new_state = dict(state)
+    new_state["worker_params"] = new_wp
+    new_state["inner_state"] = new_is
+    return new_state, {"loss": jnp.mean(losses), "loss_per_worker": losses}
+
+
+# ---------------------------------------------------------------------------
+# Outer step (the only cross-worker communication)
+# ---------------------------------------------------------------------------
+
+
+def compute_deltas(state: PyTree) -> PyTree:
+    """Δ_k = θ_outer − θ_k, stacked [K, ...] (paper Alg. 1 line 9)."""
+    return jax.tree.map(
+        lambda o, w: o.astype(jnp.float32)[None] - w.astype(jnp.float32),
+        state["outer_params"], state["worker_params"],
+    )
+
+
+def outer_step(dcfg: DiLoCoConfig, state: PyTree, mask: PyTree | None = None) -> tuple[PyTree, PyTree]:
+    """Communicate + outer Nesterov update (+ worker reset). Returns (state, Ψ)."""
+    ccfg = dcfg.compression
+    deltas = compute_deltas(state)
+    if mask is not None:
+        deltas = jax.tree.map(lambda m, d: m[None] * d if m.ndim else m * d, mask, deltas)
+
+    new_state = dict(state)
+    if ccfg.error_feedback and ccfg.kind != "none":
+        comm, new_ef = jax.vmap(lambda d, e: ef_compress_tree(d, e, ccfg))(deltas, state["ef"])
+        if mask is not None:  # untouched partitions keep their residuals
+            new_ef = jax.tree.map(
+                lambda m, ne, oe: jnp.where((m[None] if m.ndim else m) > 0, ne, oe),
+                mask, new_ef, state["ef"],
+            )
+        new_state["ef"] = new_ef
+    else:
+        comm = jax.vmap(lambda d: compress_tree(d, ccfg))(deltas)
+
+    psi = reduce_pseudogradients(comm, ccfg)  # mean over K (+ Q2 for a2a quant)
+
+    cand_params, cand_opt = nesterov_step(
+        state["outer_params"], psi, state["outer_opt"],
+        lr=dcfg.outer_lr, momentum=dcfg.outer_momentum,
+    )
+    if mask is None:
+        new_outer, new_opt = cand_params, cand_opt
+    else:
+        new_outer = masked_update(mask, cand_params, state["outer_params"])
+        new_opt = {"u": masked_update(mask, cand_opt["u"], state["outer_opt"]["u"])}
+
+    # broadcast synced params back to workers (masked portions only)
+    def reset(o, w, m=None):
+        ob = jnp.broadcast_to(o[None].astype(w.dtype), w.shape)
+        if m is None:
+            return ob
+        mm = m[None] if m.ndim else m
+        return (mm * ob.astype(jnp.float32) + (1 - mm) * w.astype(jnp.float32)).astype(w.dtype)
+
+    if mask is None:
+        new_workers = jax.tree.map(reset, new_outer, state["worker_params"])
+    else:
+        new_workers = jax.tree.map(lambda o, w, m: reset(o, w, m), new_outer, state["worker_params"], mask)
+
+    new_state["outer_params"] = new_outer
+    new_state["outer_opt"] = new_opt
+    new_state["worker_params"] = new_workers
+    new_state["round"] = state["round"] + 1
+    return new_state, psi
+
+
+# ---------------------------------------------------------------------------
+# Full round(s): H inner steps + sync (jit-able end to end)
+# ---------------------------------------------------------------------------
+
+
+def diloco_round(model: Model, dcfg: DiLoCoConfig, opt, state: PyTree, batches: PyTree,
+                 masks: list[PyTree] | None = None) -> tuple[PyTree, dict]:
+    """One communication round: H inner steps then outer sync(s).
+
+    ``batches`` leaves: [H, K, B/K, ...]. With streaming (J>1) the round is J
+    segments of H/J steps, each followed by a partition-j sync — peak
+    bandwidth drops by J while the sync period per partition stays H.
+    """
+    H, J = dcfg.sync_interval, dcfg.streaming_partitions
+
+    def scan_inner(state, seg_batches):
+        def body(st, b):
+            st, m = inner_step(model, opt, st, b)
+            return st, m["loss"]
+
+        return jax.lax.scan(body, state, seg_batches)
+
+    if J <= 1:
+        state, losses = scan_inner(state, batches)
+        state, psi = outer_step(dcfg, state)
+        return state, {"loss": losses, "psi": psi}
+
+    assert H % J == 0, "streaming requires J | H"
+    seg = H // J
+    all_losses = []
+    for j in range(J):
+        seg_batches = jax.tree.map(lambda b: b[j * seg : (j + 1) * seg], batches)
+        state, losses = scan_inner(state, seg_batches)
+        state, _ = outer_step(dcfg, state, mask=masks[j])
+        all_losses.append(losses)
+    return state, {"loss": jnp.concatenate(all_losses)}
+
+
+def make_streaming_masks(state: PyTree, dcfg: DiLoCoConfig) -> list[PyTree] | None:
+    if dcfg.streaming_partitions <= 1:
+        return None
+    return streaming_masks(state["outer_params"], dcfg.streaming_partitions)
+
+
+# ---------------------------------------------------------------------------
+# Data-parallel baseline (K=1, H=1, no outer): for DP AdamW / DP Muon runs
+# ---------------------------------------------------------------------------
+
+
+def dp_init(model: Model, inner_name: str, inner_cfg: OptimizerConfig, rng: jax.Array):
+    params = model.init(rng)
+    opt = make_inner_optimizer(inner_name, inner_cfg)
+    return {"params": params, "opt_state": opt.init(params)}, opt
+
+
+def dp_step(model: Model, opt, state: PyTree, batch: PyTree) -> tuple[PyTree, dict]:
+    (loss, metrics), grads = jax.value_and_grad(model.loss, has_aux=True)(state["params"], batch)
+    new_p, new_s = opt.step(state["params"], grads, state["opt_state"])
+    return {"params": new_p, "opt_state": new_s}, {"loss": loss}

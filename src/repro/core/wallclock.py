@@ -1,0 +1,62 @@
+"""Idealized wall-clock / bandwidth model (paper Fig. 9/16/20, Tab. 10).
+
+Training time = compute + optimizer overhead + communication, where DP
+communicates 2*P*bytes every step (ring all-reduce) and DiLoCo/MuLoCo
+communicate the (optionally compressed) pseudogradient every H steps.
+Mirrors the paper's estimates built from measured step times; here the
+compute term comes from the roofline model instead of H100 measurements.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class HardwareModel:
+    peak_flops: float = 197e12  # bf16 / chip (TPU v5e)
+    hbm_bw: float = 819e9
+    link_bw: float = 50e9  # ICI per link
+    chips: int = 256
+    assumed_mfu: float = 0.4
+
+
+@dataclasses.dataclass(frozen=True)
+class RunSpec:
+    n_params: float
+    n_active_params: float  # = n_params for dense
+    batch_tokens: float
+    seq_len: int
+    n_steps: int
+    sync_interval: int = 1  # H (1 => DP: communicate every step)
+    n_workers: int = 1
+    compression_ratio: float = 1.0  # wire bytes vs fp32
+    optimizer_overhead: float = 0.0096  # paper Tab. 9: +0.96% for Muon
+
+
+def step_compute_time(spec: RunSpec, hw: HardwareModel) -> float:
+    flops = 6.0 * spec.n_active_params * spec.batch_tokens
+    return flops / (hw.chips * hw.peak_flops * hw.assumed_mfu)
+
+
+def sync_comm_time(spec: RunSpec, bandwidth_bps: float) -> float:
+    """Cross-pool pseudogradient bytes per sync / available bandwidth.
+
+    Ring all-reduce volume 2*P*4 bytes, scaled by the compression ratio.
+    ``bandwidth_bps`` is bits/s (paper quotes Gbit/s links)."""
+    bytes_wire = 2.0 * spec.n_params * 4.0 * spec.compression_ratio
+    return bytes_wire * 8.0 / bandwidth_bps
+
+
+def training_time_hours(spec: RunSpec, bandwidth_bps: float, hw: HardwareModel = HardwareModel()) -> float:
+    t_step = step_compute_time(spec, hw) * (1.0 + spec.optimizer_overhead)
+    t_sync = sync_comm_time(spec, bandwidth_bps)
+    n_syncs = spec.n_steps / spec.sync_interval
+    total = spec.n_steps * t_step + n_syncs * t_sync
+    return total / 3600.0
+
+
+def compute_utilization(spec: RunSpec, bandwidth_bps: float, hw: HardwareModel = HardwareModel()) -> float:
+    """Fraction of time doing compute (paper Fig. 16), assuming no overlap."""
+    t_step = step_compute_time(spec, hw)
+    t_sync_per_step = sync_comm_time(spec, bandwidth_bps) / spec.sync_interval
+    return t_step / (t_step + t_sync_per_step)

@@ -1,0 +1,1 @@
+from repro.data.synthetic import DataConfig, MarkovStream, batches_for_round  # noqa: F401

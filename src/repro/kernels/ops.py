@@ -1,0 +1,96 @@
+"""Jit'd public wrappers around the Pallas kernels: padding to block
+multiples, batching, and backend selection (interpret=True off-TPU)."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.matmul import matmul_epilogue
+from repro.kernels.outer_update import fused_nesterov_update
+from repro.kernels.quantize import rowwise_quantize
+from repro.optim.muon import NS_COEFFS
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _pad_to(x: jax.Array, mults: tuple[int, ...]) -> jax.Array:
+    pads = []
+    for dim, mult in zip(x.shape, mults):
+        rem = (-dim) % mult
+        pads.append((0, rem))
+    if all(p == (0, 0) for p in pads):
+        return x
+    return jnp.pad(x, pads)
+
+
+@partial(jax.jit, static_argnames=("alpha", "beta", "block"))
+def matmul(a: jax.Array, b: jax.Array, d: jax.Array | None = None, *,
+           alpha: float = 1.0, beta: float = 0.0, block: int = 128) -> jax.Array:
+    """C = alpha * a@b + beta * d with automatic padding."""
+    m, k = a.shape
+    _, n = b.shape
+    ap = _pad_to(a, (block, block))
+    bp = _pad_to(b, (block, block))
+    dp = _pad_to(d, (block, block)) if d is not None else None
+    out = matmul_epilogue(ap, bp, dp, alpha=alpha, beta=beta,
+                          block_m=block, block_n=block, block_k=block,
+                          interpret=_interpret())
+    return out[:m, :n]
+
+
+def _ns_iteration_pallas(x: jax.Array, block: int) -> jax.Array:
+    a, b, c = NS_COEFFS
+    A = matmul(x, x.T, block=block)                       # X X^T
+    B = matmul(A, A, d=A, alpha=c, beta=b, block=block)   # c*A@A + b*A (fused epilogue)
+    return matmul(B, x, d=x, alpha=1.0, beta=a, block=block)  # B@X + a*X (fused epilogue)
+
+
+@partial(jax.jit, static_argnames=("iters", "block"))
+def ns_orthogonalize(g: jax.Array, iters: int = 5, eps: float = 1e-7, block: int = 128) -> jax.Array:
+    """Newton–Schulz orthogonalization of the trailing 2 dims via the Pallas
+    matmul-epilogue kernel. Batched leading dims are vmapped."""
+    orig_dtype = g.dtype
+    *batch, m, n = g.shape
+    x = g.reshape((-1, m, n)).astype(jnp.float32)
+    transpose = m > n
+    if transpose:
+        x = jnp.swapaxes(x, -1, -2)
+    x = x / (jnp.sqrt(jnp.sum(x * x, axis=(-2, -1), keepdims=True)) + eps)
+
+    def one(xi):
+        for _ in range(iters):
+            xi = _ns_iteration_pallas(xi, block)
+        return xi
+
+    x = jax.vmap(one)(x) if x.shape[0] > 1 else one(x[0])[None]
+    if transpose:
+        x = jnp.swapaxes(x, -1, -2)
+    return x.reshape((*batch, m, n)).astype(orig_dtype)
+
+
+@partial(jax.jit, static_argnames=("bits", "block_rows"))
+def quantize_rowwise(x: jax.Array, bits: int = 4, block_rows: int = 8):
+    """Fused row-wise linear quant->dequant. Returns (dequantized, codes, lo, scale)."""
+    m, n = x.shape
+    xp = _pad_to(x, (block_rows, 1))
+    deq, codes, lo, scale = rowwise_quantize(xp, bits, block_rows=block_rows,
+                                             interpret=_interpret())
+    return deq[:m], codes[:m], lo[:m], scale[:m]
+
+
+@partial(jax.jit, static_argnames=("lr", "momentum", "block"))
+def nesterov_update(theta: jax.Array, psi: jax.Array, u: jax.Array, *,
+                    lr: float, momentum: float, block: int = 1024):
+    """Fused outer Nesterov update on arbitrary-shaped tensors."""
+    shape = theta.shape
+    t = _pad_to(theta.reshape(-1), (block,))
+    p = _pad_to(psi.reshape(-1).astype(jnp.float32), (block,))
+    uu = _pad_to(u.reshape(-1).astype(jnp.float32), (block,))
+    n = theta.size
+    t2, u2 = fused_nesterov_update(t, p, uu, lr=lr, momentum=momentum,
+                                   block=block, interpret=_interpret())
+    return t2[:n].reshape(shape), u2[:n].reshape(shape)

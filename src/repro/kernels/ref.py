@@ -1,0 +1,60 @@
+"""Pure-jnp oracles for every Pallas kernel (allclose targets in tests)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.muon import NS_COEFFS
+
+
+def matmul_epilogue_ref(a, b, d=None, *, alpha=1.0, beta=0.0, out_dtype=None):
+    out = alpha * (a.astype(jnp.float32) @ b.astype(jnp.float32))
+    if d is not None and beta != 0.0:
+        out = out + beta * d.astype(jnp.float32)
+    return out.astype(out_dtype or a.dtype)
+
+
+def ns_iteration_ref(x: jax.Array) -> jax.Array:
+    """One quintic Newton-Schulz iteration on a single [m, n] matrix."""
+    a, b, c = NS_COEFFS
+    x32 = x.astype(jnp.float32)
+    A = x32 @ x32.T
+    B = b * A + c * (A @ A)
+    return (a * x32 + B @ x32).astype(x.dtype)
+
+
+def ns_orthogonalize_ref(g: jax.Array, iters: int = 5, eps: float = 1e-7) -> jax.Array:
+    """Full NS orthogonalization oracle (fp32 throughout)."""
+    orig = g.dtype
+    m, n = g.shape[-2:]
+    x = g.astype(jnp.float32)
+    transpose = m > n
+    if transpose:
+        x = jnp.swapaxes(x, -1, -2)
+    x = x / (jnp.sqrt(jnp.sum(x * x, axis=(-2, -1), keepdims=True)) + eps)
+    for _ in range(iters):
+        if x.ndim == 2:
+            x = ns_iteration_ref(x)
+        else:
+            x = jax.vmap(ns_iteration_ref)(x)
+    if transpose:
+        x = jnp.swapaxes(x, -1, -2)
+    return x.astype(orig)
+
+
+def rowwise_quantize_ref(x: jax.Array, bits: int):
+    x32 = x.astype(jnp.float32)
+    lo = jnp.min(x32, axis=1, keepdims=True)
+    hi = jnp.max(x32, axis=1, keepdims=True)
+    nlevels = (1 << bits) - 1
+    scale = (hi - lo) / nlevels
+    scale = jnp.where(scale <= 0.0, 1.0, scale)
+    q = jnp.round((x32 - lo) / scale)
+    return (lo + q * scale).astype(x.dtype), q.astype(jnp.uint8), lo, scale
+
+
+def nesterov_update_ref(theta, psi, u, *, lr, momentum):
+    psi32 = psi.astype(jnp.float32)
+    u_new = momentum * u + lr * psi32
+    theta_new = theta.astype(jnp.float32) - momentum * u_new - lr * psi32
+    return theta_new.astype(theta.dtype), u_new

@@ -1,0 +1,230 @@
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 " + os.environ.get("XLA_FLAGS", "")
+)
+
+# ruff: noqa: E402  (the two lines above MUST precede any jax-touching import)
+"""Multi-pod dry-run: lower + compile every (arch x input-shape x mesh)
+combination on 512 placeholder host devices and record memory / cost /
+collective evidence for the roofline analysis.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch smollm-135m --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all --out results/dryrun
+    PYTHONPATH=src python -m repro.launch.dryrun --arch ... --multi-pod
+
+Outputs one JSON per (arch, shape, mesh) under --out.
+"""
+import argparse
+import json
+import time
+import traceback
+
+import jax
+
+from repro.configs import ASSIGNED_ARCHS, INPUT_SHAPES, get_config, shape_supported
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import build_plans
+from repro.models.api import build_model
+from repro.roofline.analysis import (
+    RooflineTerms,
+    active_params,
+    model_flops,
+    parse_collective_bytes,
+)
+from repro.roofline.flops import (
+    forward_flops,
+    hbm_bytes,
+    optimizer_flops,
+    train_step_flops,
+)
+from repro.roofline.hlo import collective_bytes_corrected
+from repro.utils.tree import tree_bytes, tree_count_params
+
+
+def run_one(arch: str, shape: str, multi_pod: bool, sync_interval: int = 30,
+            verbose: bool = True, plan_filter: str | None = None,
+            inner_name: str = "muon") -> list[dict]:
+    """Lower + compile all step plans for one (arch, shape, mesh) combo."""
+    cfg0 = get_config(arch)
+    if not shape_supported(cfg0, shape):
+        return [{
+            "arch": arch, "shape": shape, "mesh": "2x16x16" if multi_pod else "16x16",
+            "status": "skipped", "reason": f"{shape} not applicable (DESIGN.md §4)",
+        }]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.devices.size
+    records = []
+    kw = {}
+    if INPUT_SHAPES[shape].kind == "train":
+        from repro.core.diloco import DiLoCoConfig
+
+        n_pods = 2 if multi_pod else 1
+        kw["dcfg"] = DiLoCoConfig(n_workers=n_pods, sync_interval=sync_interval,
+                                  inner_name=inner_name)
+    plans = build_plans(cfg0, shape, mesh, **kw)
+    for plan in plans:
+        if plan_filter and plan.name != plan_filter:
+            continue
+        rec = {
+            "arch": arch, "shape": shape, "plan": plan.name,
+            "mesh": "2x16x16" if multi_pod else "16x16", "chips": chips,
+            "inner": inner_name if plan.meta["kind"] in ("train", "sync") else None,
+        }
+        t0 = time.time()
+        try:
+            with mesh:
+                jitted = jax.jit(
+                    plan.fn,
+                    in_shardings=plan.in_shardings,
+                    donate_argnums=plan.donate,
+                )
+                lowered = jitted.lower(*plan.args)
+                compiled = lowered.compile()
+            mem = compiled.memory_analysis()
+            cost = compiled.cost_analysis()
+            hlo_text = compiled.as_text()
+            coll_flat = parse_collective_bytes(hlo_text)
+            coll = collective_bytes_corrected(hlo_text)
+            cfg = plan.meta["cfg"]
+            params_abs = jax.eval_shape(lambda: build_model(cfg).init(jax.random.PRNGKey(0)))
+            n_params = tree_count_params(params_abs)
+            n_active = active_params(cfg, n_params)
+            mf = model_flops(plan.meta["kind"], n_active, plan.meta["tokens_per_step"])
+            flops_chip, bytes_chip = _analytic_terms(plan, cfg, params_abs, chips, shape)
+            terms = RooflineTerms(
+                flops=flops_chip,
+                hlo_bytes=bytes_chip,
+                collective_bytes=float(coll["total"]),
+                chips=chips,
+                model_flops=mf,
+                amortize=float(plan.meta["amortize"]),
+            )
+            rec.update({
+                "status": "ok",
+                "compile_s": round(time.time() - t0, 1),
+                "n_params": n_params,
+                "n_active_params": n_active,
+                "memory": {
+                    "argument_bytes": int(mem.argument_size_in_bytes),
+                    "output_bytes": int(mem.output_size_in_bytes),
+                    "temp_bytes": int(mem.temp_size_in_bytes),
+                    "alias_bytes": int(mem.alias_size_in_bytes),
+                    "peak_per_chip_gib": round(
+                        (mem.argument_size_in_bytes + mem.temp_size_in_bytes
+                         - mem.alias_size_in_bytes) / 2**30, 3),
+                },
+                "collectives": {k: int(v) for k, v in coll.items()},
+                "collectives_uncorrected": {k: int(v) for k, v in coll_flat.items()},
+                "hlo_cost_analysis": {
+                    "flops_per_chip_loop_body_once": float(cost.get("flops", 0.0)),
+                    "bytes_accessed_loop_body_once": float(cost.get("bytes accessed", 0.0)),
+                },
+                "roofline": terms.as_dict(),
+            })
+        except Exception as e:  # noqa: BLE001 — record the failure verbatim
+            rec.update({"status": "error", "error": f"{type(e).__name__}: {e}",
+                        "traceback": traceback.format_exc()[-2000:]})
+        if verbose:
+            _print_record(rec)
+        records.append(rec)
+    return records
+
+
+def _analytic_terms(plan, cfg, params_abs, chips: int, shape: str) -> tuple[float, float]:
+    """Per-chip (flops, hbm_bytes) from the closed-form models (flops.py)."""
+    from repro.configs import INPUT_SHAPES
+
+    spec = INPUT_SHAPES[shape]
+    kind = plan.meta["kind"]
+    pbytes = tree_bytes(params_abs)
+    act_elt = 2.0  # bf16 activations
+    d_ff_active = cfg.d_ff * (cfg.experts_per_token + cfg.n_shared_experts) if cfg.n_experts else cfg.d_ff
+    per_tok_layer = (8.0 * cfg.d_model + 2.0 * d_ff_active) * act_elt
+
+    if kind == "train":
+        dcfg = plan.meta["dcfg"]
+        sf = train_step_flops(cfg, spec.seq_len, spec.global_batch, params_abs, dcfg.inner_name)
+        # optimizer state per chip: m (+v for adamw / embeds)
+        state_abs = plan.args[0]
+        opt_bytes = tree_bytes(state_abs["inner_state"])
+        act_bytes = spec.global_batch * spec.seq_len * cfg.n_layers * per_tok_layer
+        # each worker's params are fully sharded within its pod (chips/K chips)
+        chips_per_worker = chips / max(dcfg.n_workers, 1)
+        total_bytes = hbm_bytes("train", param_bytes_chip=pbytes / chips_per_worker,
+                                opt_state_bytes_chip=opt_bytes / chips,
+                                act_bytes_chip=act_bytes / chips)
+        return sf.total / chips, total_bytes
+    if kind == "sync":
+        state_abs = plan.args[0]
+        n = tree_count_params(params_abs)
+        flops = 10.0 * n * 3.0  # EF/compress + nesterov + reset, elementwise
+        total_bytes = hbm_bytes("sync", param_bytes_chip=pbytes / chips * 4.0,
+                                opt_state_bytes_chip=tree_bytes(state_abs["outer_opt"]) / chips,
+                                act_bytes_chip=0.0)
+        return flops / chips, total_bytes
+    if kind == "prefill":
+        f = forward_flops(cfg, spec.seq_len, spec.global_batch)
+        act_bytes = spec.global_batch * spec.seq_len * cfg.n_layers * per_tok_layer
+        total_bytes = hbm_bytes("prefill", param_bytes_chip=pbytes / chips,
+                                opt_state_bytes_chip=0.0, act_bytes_chip=act_bytes / chips)
+        return f / chips, total_bytes
+    # decode
+    f = forward_flops(cfg, spec.seq_len, spec.global_batch, T=1, kv_len=spec.seq_len)
+    cache_bytes = tree_bytes(plan.args[1])
+    act_bytes = spec.global_batch * cfg.n_layers * per_tok_layer
+    total_bytes = hbm_bytes("decode", param_bytes_chip=pbytes / chips,
+                            opt_state_bytes_chip=0.0, act_bytes_chip=act_bytes / chips,
+                            cache_bytes_chip=cache_bytes / chips)
+    return f / chips, total_bytes
+
+
+def _print_record(rec: dict) -> None:
+    if rec["status"] == "skipped":
+        print(f"[SKIP] {rec['arch']} x {rec['shape']} ({rec['mesh']}): {rec['reason']}")
+        return
+    if rec["status"] == "error":
+        print(f"[FAIL] {rec['arch']} x {rec['shape']} {rec['plan']} ({rec['mesh']}): {rec['error']}")
+        return
+    r = rec["roofline"]
+    print(
+        f"[ OK ] {rec['arch']:22s} {rec['shape']:12s} {rec['plan']:12s} {rec['mesh']:8s} "
+        f"compile={rec['compile_s']:6.1f}s peak/chip={rec['memory']['peak_per_chip_gib']:8.3f}GiB "
+        f"C={r['compute_s']:.3e}s M={r['memory_s']:.3e}s X={r['collective_s']:.3e}s "
+        f"dom={r['dominant']:10s} useful={r['useful_flops_ratio']:.2f}"
+    )
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, choices=list(ASSIGNED_ARCHS) + ["paper-416m", "paper-15.23b"])
+    ap.add_argument("--shape", default=None, choices=list(INPUT_SHAPES))
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true", help="every arch x shape")
+    ap.add_argument("--plan", default=None, help="only this plan (train_step/sync_step/...)")
+    ap.add_argument("--inner", default="muon", choices=["muon", "adamw"])
+    ap.add_argument("--out", default="results/dryrun")
+    args = ap.parse_args()
+
+    archs = list(ASSIGNED_ARCHS) if (args.all or not args.arch) else [args.arch]
+    shapes = list(INPUT_SHAPES) if (args.all or not args.shape) else [args.shape]
+    meshes = [False, True] if (args.both_meshes or args.all) else [args.multi_pod]
+
+    os.makedirs(args.out, exist_ok=True)
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                tag = f"{arch}__{shape}__{'2x16x16' if mp else '16x16'}__{args.inner}"
+                path = os.path.join(args.out, tag + ".json")
+                if os.path.exists(path):
+                    print(f"[CACHED] {tag}")
+                    continue
+                recs = run_one(arch, shape, mp, plan_filter=args.plan, inner_name=args.inner)
+                with open(path, "w") as f:
+                    json.dump(recs, f, indent=2)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,78 @@
+"""Serving driver: batched prefill + decode with continuous token streaming.
+
+On CPU this serves reduced configs (examples/serve_batched.py); the same
+driver lowers to the production mesh for the real deployment. Demonstrates
+the full request lifecycle: prefill a batch of prompts, then step the decode
+loop with greedy/temperature sampling against the shared KV cache.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config, reduce_config
+from repro.models import build_model
+
+
+def generate(model, params, prompts: jax.Array, max_new: int, temperature: float = 0.0,
+             context: jax.Array | None = None, rng: jax.Array | None = None):
+    """prompts: [B, P] int32 -> tokens [B, P + max_new]."""
+    B, P = prompts.shape
+    cache = model.init_cache(params, B, P + max_new)
+    step = jax.jit(model.decode_step)
+
+    # prefill by stepping the decode path (exactly the serving hot loop;
+    # exercises cache writes at every position)
+    tok = prompts[:, 0]
+    out = [tok]
+    for t in range(P + max_new - 1):
+        logits, cache = step(params, cache, tok, jnp.int32(t))
+        if t + 1 < P:
+            tok = prompts[:, t + 1]
+        else:
+            if temperature > 0:
+                rng, k = jax.random.split(rng)
+                tok = jax.random.categorical(k, logits / temperature, axis=-1).astype(jnp.int32)
+            else:
+                tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        out.append(tok)
+    return jnp.stack(out, axis=1)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm-135m")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--max-new", type=int, default=32)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = reduce_config(cfg)
+    model = build_model(cfg)
+    rng = jax.random.PRNGKey(0)
+    params = model.init(rng)
+    prompts = jax.random.randint(rng, (args.batch, args.prompt_len), 0, cfg.vocab)
+    ctx = None
+    if cfg.arch_type == "audio":
+        ctx = jnp.zeros((args.batch, cfg.n_audio_frames, cfg.d_model))
+    if cfg.arch_type == "vlm":
+        ctx = jnp.zeros((args.batch, cfg.n_image_tokens, cfg.d_model))
+
+    t0 = time.time()
+    toks = generate(model, params, prompts, args.max_new,
+                    temperature=args.temperature, context=ctx, rng=rng)
+    dt = time.time() - t0
+    n_new = args.batch * args.max_new
+    print(f"generated {toks.shape} in {dt:.2f}s ({n_new/dt:.1f} tok/s)")
+    print("sample:", toks[0, : args.prompt_len + 8].tolist())
+
+
+if __name__ == "__main__":
+    main()

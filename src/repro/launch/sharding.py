@@ -1,0 +1,164 @@
+"""Sharding rules: map every pytree leaf to a PartitionSpec on the
+production mesh.
+
+Scheme (DESIGN.md §3):
+  * worker-stacked trees (leading K): K -> 'pod';
+  * weight matrices [..., m, n]: m -> 'data' (FSDP / ZeRO-3), n -> 'model'
+    (tensor parallel); MoE expert banks [..., E, m, n]: E -> 'model'
+    (expert parallel), m -> 'data';
+  * outer/DiLoCo state (params, Nesterov u, EF residuals) has no K axis and
+    is sharded over ('pod','data') x 'model' — ZeRO-sharding the *outer*
+    optimizer over pods, which is what lets 100B+ configs hold 4 param
+    copies;
+  * KV caches / SSM states: batch -> 'data', longest remaining
+    divisible axis (cache length / heads) -> 'model';
+  * every rule falls back to replication when a dim is not divisible.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.utils.tree import tree_map_with_path
+
+PyTree = Any
+
+
+def _div(dim: int, n: int) -> bool:
+    return n > 0 and dim % n == 0 and dim >= n
+
+
+def _axis(mesh_sizes: dict[str, int], name: str, dim: int):
+    return name if name in mesh_sizes and _div(dim, mesh_sizes[name]) else None
+
+
+def param_spec(path: str, shape: tuple[int, ...], mesh_sizes: dict[str, int],
+               outer: bool = False, tensor_parallel: bool = True,
+               expert_parallel: bool = False) -> P:
+    """Spec for one (non-K-stacked) parameter/optimizer-state leaf.
+
+    ``outer=True`` additionally folds the 'pod' axis into the fsdp dim
+    (outer-state ZeRO over pods). ``tensor_parallel=False`` drops the model
+    axis from weights (TP-unfriendly archs: heads not divisible by the model
+    axis — they use sequence parallelism instead). ``expert_parallel`` shards
+    MoE banks E->model (serving layout: weights stay resident, tokens move).
+    """
+    nd = len(shape)
+    fsdp: Any = ("pod", "data") if (outer and "pod" in mesh_sizes) else "data"
+    fsdp_size = mesh_sizes.get("data", 1) * (mesh_sizes.get("pod", 1) if (outer and "pod" in mesh_sizes) else 1)
+
+    def fsdp_axis(dim):
+        return fsdp if _div(dim, fsdp_size) else ("data" if _div(dim, mesh_sizes.get("data", 0)) else None)
+
+    if nd <= 1:
+        return P(*([None] * nd))
+    spec = [None] * nd
+    if expert_parallel and nd >= 3 and ("experts" in path):
+        spec[-3] = _axis(mesh_sizes, "model", shape[-3])
+        spec[-2] = fsdp_axis(shape[-2])
+        return P(*spec)
+    # Matrices (incl. MoE expert banks [..., E, m, n]): trailing dims get
+    # (fsdp, model); the expert dim stays unsharded so dispatch buffers with
+    # d-passthrough sharding contract without resharding the weight bank.
+    spec[-2] = fsdp_axis(shape[-2])
+    if tensor_parallel:
+        spec[-1] = _axis(mesh_sizes, "model", shape[-1])
+    return P(*spec)
+
+
+def worker_spec(path: str, shape: tuple[int, ...], mesh_sizes: dict[str, int],
+                tensor_parallel: bool = True) -> P:
+    """Spec for a K-stacked leaf: K -> 'pod', rest per param_spec."""
+    inner = param_spec(path, shape[1:], mesh_sizes, outer=False,
+                       tensor_parallel=tensor_parallel)
+    pod = "pod" if ("pod" in mesh_sizes and _div(shape[0], mesh_sizes["pod"])) else None
+    return P(pod, *inner)
+
+
+def cache_spec(shape: tuple[int, ...], batch: int, mesh_sizes: dict[str, int]) -> P:
+    """KV-cache / SSM-state leaf: batch -> 'data', longest other -> 'model'."""
+    spec = [None] * len(shape)
+    data_n = mesh_sizes.get("data", 0)
+    model_n = mesh_sizes.get("model", 0)
+    b_idx = None
+    for i, d in enumerate(shape):
+        if d == batch and _div(d, data_n):
+            b_idx = i
+            spec[i] = "data"
+            break
+    best, best_dim = None, 0
+    for i, d in enumerate(shape):
+        if i == b_idx or i == 0 and len(shape) > 3:
+            # skip the layer-stack axis (leading, scanned) and the batch axis
+            continue
+        if _div(d, model_n) and d > best_dim:
+            best, best_dim = i, d
+    if best is not None:
+        spec[best] = "model"
+    return P(*spec)
+
+
+# ---------------------------------------------------------------------------
+# Tree-level builders
+# ---------------------------------------------------------------------------
+
+
+def params_shardings(mesh: Mesh, params: PyTree, outer: bool = False,
+                     tensor_parallel: bool = True, expert_parallel: bool = False) -> PyTree:
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    return tree_map_with_path(
+        lambda p, x: NamedSharding(mesh, param_spec(
+            p, x.shape, sizes, outer=outer, tensor_parallel=tensor_parallel,
+            expert_parallel=expert_parallel)), params
+    )
+
+
+def worker_shardings(mesh: Mesh, tree: PyTree, tensor_parallel: bool = True) -> PyTree:
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    return tree_map_with_path(
+        lambda p, x: NamedSharding(mesh, worker_spec(
+            p, x.shape, sizes, tensor_parallel=tensor_parallel)), tree
+    )
+
+
+def diloco_state_shardings(mesh: Mesh, state: PyTree, tensor_parallel: bool = True) -> PyTree:
+    """Shardings for the full DiLoCo state pytree (see diloco_init)."""
+    out = {}
+    for key, sub in state.items():
+        if key in ("worker_params", "inner_state", "ef"):
+            out[key] = worker_shardings(mesh, sub, tensor_parallel=tensor_parallel)
+        elif key in ("outer_params", "outer_opt"):
+            out[key] = params_shardings(mesh, sub, outer=True,
+                                        tensor_parallel=tensor_parallel)
+        else:  # counters
+            out[key] = jax.tree.map(lambda x: NamedSharding(mesh, P()), sub)
+    return out
+
+
+def batch_shardings(mesh: Mesh, batch: PyTree, k_stacked: bool = True) -> PyTree:
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+
+    def spec(path, x):
+        nd = len(x.shape)
+        if k_stacked:
+            pod = "pod" if ("pod" in sizes and _div(x.shape[0], sizes["pod"])) else None
+            data = "data" if (nd > 1 and _div(x.shape[1], sizes.get("data", 0))) else None
+            return NamedSharding(mesh, P(pod, data, *([None] * (nd - 2))))
+        data = "data" if _div(x.shape[0], sizes.get("data", 0)) else None
+        return NamedSharding(mesh, P(data, *([None] * (nd - 1))))
+
+    return tree_map_with_path(spec, batch)
+
+
+def cache_shardings(mesh: Mesh, cache: PyTree, batch: int) -> PyTree:
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    return jax.tree.map(
+        lambda x: NamedSharding(mesh, cache_spec(x.shape, batch, sizes)), cache
+    )
+
+
+def replicated(mesh: Mesh, tree: PyTree) -> PyTree:
+    return jax.tree.map(lambda x: NamedSharding(mesh, P()), tree)

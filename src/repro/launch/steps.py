@@ -1,0 +1,265 @@
+"""Step builders: (jittable fn, abstract inputs, shardings) per input shape.
+
+  train_4k     -> DiLoCo ``train_step`` (inner step, every-step cost) and
+                  ``sync_step`` (outer step, every-H cost — the cross-pod
+                  collective the paper optimizes)
+  prefill_32k  -> ``prefill_step`` (full-seq forward, last-position logits)
+  decode_32k / long_500k -> ``serve_step`` (1 token vs seq_len KV/SSM cache)
+
+Everything is abstract (ShapeDtypeStruct via eval_shape): no parameter is
+ever allocated, which is what lets 1T-param configs lower on the CPU host.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import INPUT_SHAPES, config_for_shape
+from repro.core.diloco import DiLoCoConfig, diloco_init, inner_step, make_optimizer, outer_step
+from repro.launch.sharding import (
+    batch_shardings,
+    cache_shardings,
+    diloco_state_shardings,
+    params_shardings,
+    replicated,
+)
+from repro.models.api import Model, build_model
+from repro.models.common import ModelConfig, activation_sharding
+from repro.optim import OptimizerConfig
+from repro.utils.tree import tree_count_params
+
+PyTree = Any
+
+# Configs above this many params lower with bf16 params + bf16 optimizer
+# state (mixed-precision production policy; DESIGN.md §3).
+BF16_PARAM_THRESHOLD = 3e10
+
+
+@dataclasses.dataclass
+class StepPlan:
+    name: str
+    fn: Callable
+    args: tuple  # abstract ShapeDtypeStruct pytrees
+    in_shardings: tuple
+    donate: tuple[int, ...]
+    meta: dict
+
+
+def _needs_context(cfg: ModelConfig) -> bool:
+    return cfg.arch_type in ("audio", "vlm")
+
+
+def _context_struct(cfg: ModelConfig, lead: tuple[int, ...]) -> jax.ShapeDtypeStruct:
+    n = cfg.n_audio_frames if cfg.arch_type == "audio" else cfg.n_image_tokens
+    return jax.ShapeDtypeStruct((*lead, n, cfg.d_model), cfg.compute_dtype)
+
+
+def production_model_config(cfg: ModelConfig, shape: str) -> ModelConfig:
+    cfg = config_for_shape(cfg, shape)
+    model = build_model(cfg)
+    n = tree_count_params(jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0))))
+    if n > BF16_PARAM_THRESHOLD:
+        cfg = cfg.replace(param_dtype="bfloat16")
+    return cfg
+
+
+def default_inner_cfg(cfg: ModelConfig) -> OptimizerConfig:
+    state_dtype = "bfloat16" if cfg.param_dtype == "bfloat16" else "float32"
+    return OptimizerConfig(lr=1.56e-2, weight_decay=5e-4, schedule="constant",
+                           state_dtype=state_dtype)
+
+
+def tp_friendly(cfg: ModelConfig, mesh: Mesh) -> bool:
+    """Tensor parallelism only pays when heads split across the model axis.
+
+    smollm (9 heads) and whisper (20 heads) can't split over model=16 — every
+    attention op would reshard; they run sequence-parallel instead (§Perf
+    iteration 3)."""
+    model_n = dict(zip(mesh.axis_names, mesh.devices.shape)).get("model", 1)
+    if cfg.arch_type == "ssm":
+        return cfg.ssm_heads % model_n == 0
+    return cfg.n_heads % model_n == 0 and cfg.hd % 2 == 0
+
+
+def activation_rules(mesh: Mesh, batch_per_worker: int, cfg: ModelConfig,
+                     train: bool = True) -> dict[str, P]:
+    """Named activation sharding constraints installed around every step fn.
+
+    The residual-stream carry of the layer scan is the dominant saved
+    activation during training (one [B, S, d] per layer); sharding its d
+    over 'model' cuts it 16x. MoE dispatch buffers keep d-passthrough
+    sharding. 'ns_matrix'/'ns_out' reshard Muon momentum to layer-parallel
+    whole matrices around Newton-Schulz (collective-free orthogonalization,
+    §Perf iteration 2).
+    """
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    dp = "data" if batch_per_worker % sizes.get("data", 1) == 0 else None
+    rules = {
+        "residual": P(dp, None, "model"),
+        "ffn_hidden": P(dp, None, "model"),
+        "moe_tokens": P(dp, None, "model"),
+        "moe_buffer": P(dp, None, "model"),
+        "moe_dispatch": P(dp, None, None, "model"),
+    }
+    if not tp_friendly(cfg, mesh):
+        # heads don't divide over the model axis: pin the per-head attention
+        # activations replicated-over-model so the (unavoidable) gather
+        # happens once per layer instead of inside every blockwise-attention
+        # block step (§Perf iteration 3).
+        rules["attn_kv"] = P(dp, None, None, None)
+    # NOTE §Perf it. 2a/2b: layer-parallel Newton-Schulz resharding hints
+    # ('ns_matrix') were tried and REFUTED — GSPMD lowers the layout change
+    # via involuntary full rematerialization (peak 49 -> 1889 GiB/chip on
+    # mistral-123b). The muon.step shard_hint hooks remain for future Shardy
+    # backends; no rule is installed here.
+    return rules
+
+
+# ---------------------------------------------------------------------------
+# Train plans
+# ---------------------------------------------------------------------------
+
+
+def build_train_plans(arch_cfg: ModelConfig, shape: str, mesh: Mesh,
+                      dcfg: DiLoCoConfig | None = None) -> list[StepPlan]:
+    spec = INPUT_SHAPES[shape]
+    assert spec.kind == "train"
+    n_pods = dict(zip(mesh.axis_names, mesh.devices.shape)).get("pod", 1)
+    cfg = production_model_config(arch_cfg, shape)
+    model = build_model(cfg)
+    dcfg = dcfg or DiLoCoConfig(n_workers=n_pods, sync_interval=30, inner_name="muon")
+    icfg = default_inner_cfg(cfg)
+    opt = make_optimizer(dcfg, icfg)
+
+    state_abs = jax.eval_shape(lambda: diloco_init(model, dcfg, icfg, jax.random.PRNGKey(0)))
+    K = dcfg.n_workers
+    B = spec.global_batch // K
+    S = spec.seq_len
+    batch_abs = {
+        "tokens": jax.ShapeDtypeStruct((K, B, S), jnp.int32),
+        "labels": jax.ShapeDtypeStruct((K, B, S), jnp.int32),
+    }
+    if _needs_context(cfg):
+        batch_abs["context"] = _context_struct(cfg, (K, B))
+
+    tp = tp_friendly(cfg, mesh)
+    state_sh = diloco_state_shardings(mesh, state_abs, tensor_parallel=tp)
+    batch_sh = batch_shardings(mesh, batch_abs, k_stacked=True)
+    rules = activation_rules(mesh, B, cfg, train=True)
+    n_pods_mesh = dict(zip(mesh.axis_names, mesh.devices.shape)).get("pod", 0)
+    spmd_axis = "pod" if n_pods_mesh else None
+
+    def train_step(state, batch):
+        with activation_sharding(rules):
+            return inner_step(model, opt, state, batch, spmd_axis=spmd_axis)
+
+    def sync_step(state):
+        new_state, _psi = outer_step(dcfg, state)
+        return new_state
+
+    plans = [
+        StepPlan(
+            name="train_step",
+            fn=train_step,
+            args=(state_abs, batch_abs),
+            in_shardings=(state_sh, batch_sh),
+            donate=(0,),
+            meta={"kind": "train", "tokens_per_step": spec.global_batch * S,
+                  "amortize": 1, "cfg": cfg, "dcfg": dcfg},
+        ),
+        StepPlan(
+            name="sync_step",
+            fn=sync_step,
+            args=(state_abs,),
+            in_shardings=(state_sh,),
+            donate=(0,),
+            meta={"kind": "sync", "tokens_per_step": 0,
+                  "amortize": dcfg.sync_interval, "cfg": cfg, "dcfg": dcfg},
+        ),
+    ]
+    return plans
+
+
+# ---------------------------------------------------------------------------
+# Serve plans (prefill / decode)
+# ---------------------------------------------------------------------------
+
+
+def build_serve_plan(arch_cfg: ModelConfig, shape: str, mesh: Mesh) -> StepPlan:
+    spec = INPUT_SHAPES[shape]
+    cfg = production_model_config(arch_cfg, shape)
+    model = build_model(cfg)
+    params_abs = jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+    tp = tp_friendly(cfg, mesh)
+    B = spec.global_batch
+    # expert-parallel serving pays when there is a batch to amortize the
+    # token all-to-all; at B=1 (long_500k) the FSDP layout wins (§Perf it.3).
+    ep = bool(cfg.n_experts) and B >= 32
+    params_sh = params_shardings(mesh, params_abs, tensor_parallel=tp,
+                                 expert_parallel=ep)
+
+    if spec.kind == "prefill":
+        tokens = jax.ShapeDtypeStruct((B, spec.seq_len), jnp.int32)
+        args: tuple = (params_abs, tokens)
+        shards: tuple = (params_sh, batch_shardings(mesh, tokens, k_stacked=False))
+        rules = activation_rules(mesh, B, cfg, train=False)
+        if _needs_context(cfg):
+            ctx = _context_struct(cfg, (B,))
+            args = args + (ctx,)
+            shards = shards + (batch_shardings(mesh, ctx, k_stacked=False),)
+
+            def prefill_step(params, tokens, context):
+                with activation_sharding(rules):
+                    return model.prefill(params, tokens, context=context)
+        else:
+
+            def prefill_step(params, tokens):
+                with activation_sharding(rules):
+                    return model.prefill(params, tokens)
+
+        return StepPlan(
+            name="prefill_step", fn=prefill_step, args=args, in_shardings=shards,
+            donate=(),
+            meta={"kind": "prefill", "tokens_per_step": B * spec.seq_len, "amortize": 1,
+                  "cfg": cfg},
+        )
+
+    # decode: one token against a seq_len-deep cache
+    cache_abs = jax.eval_shape(lambda: model.init_cache(params_abs, B, spec.seq_len))
+    cache_sh = cache_shardings(mesh, cache_abs, batch=B)
+    token = jax.ShapeDtypeStruct((B,), jnp.int32)
+    pos = jax.ShapeDtypeStruct((), jnp.int32)
+
+    rules = activation_rules(mesh, B, cfg, train=False)
+    if ep:
+        # serving layout: expert-parallel weight banks; tiny token buffers
+        # move to the experts (all-to-all) rather than the 100s-of-GB banks
+        # gathering to the tokens (§Perf iteration 3, kimi decode -92%).
+        rules["moe_dispatch"] = P(None, "model", None, None)
+        rules["moe_buffer"] = P(None, None, "model")
+
+    def serve_step(params, cache, token, pos):
+        with activation_sharding(rules):
+            return model.decode_step(params, cache, token, pos)
+
+    return StepPlan(
+        name="serve_step", fn=serve_step,
+        args=(params_abs, cache_abs, token, pos),
+        in_shardings=(params_sh, cache_sh,
+                      batch_shardings(mesh, token, k_stacked=False),
+                      replicated(mesh, pos)),
+        donate=(1,),
+        meta={"kind": "decode", "tokens_per_step": B, "amortize": 1, "cfg": cfg},
+    )
+
+
+def build_plans(arch_cfg: ModelConfig, shape: str, mesh: Mesh, **kw) -> list[StepPlan]:
+    if INPUT_SHAPES[shape].kind == "train":
+        return build_train_plans(arch_cfg, shape, mesh, **kw)
+    return [build_serve_plan(arch_cfg, shape, mesh)]

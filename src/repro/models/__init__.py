@@ -1,0 +1,8 @@
+from repro.models.api import Model, build_model  # noqa: F401
+from repro.models.common import (  # noqa: F401
+    ModelConfig,
+    activation_sharding,
+    rms_norm,
+    shard_hint,
+    softmax_cross_entropy,
+)

@@ -1,0 +1,118 @@
+"""Unified model API: every architecture family exposes the same protocol.
+
+    model = build_model(cfg)
+    params = model.init(rng)
+    logits, aux = model.forward(params, tokens, context=...)
+    loss, metrics = model.loss(params, batch)
+    cache = model.init_cache(params, batch_size, cache_len)
+    logits, cache = model.decode_step(params, cache, token, pos)
+    logits_last, cache = model.prefill(params, tokens, cache_len, context=...)
+
+``batch`` is a dict: {"tokens": i32[B,S], "labels": i32[B,S],
+optional "context": f[B,Sctx,d] (audio frames / image patches)}.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import lm, ssm_lm, vlm, whisper
+from repro.models.common import ModelConfig, fused_cross_entropy, softmax_cross_entropy
+
+PyTree = Any
+
+_FAMILIES: dict[str, dict[str, Callable]] = {
+    "dense": {
+        "init": lm.init_lm, "forward": lm.forward_lm,
+        "init_cache": lm.init_cache_lm, "decode_step": lm.decode_step_lm,
+    },
+    "moe": {
+        "init": lm.init_lm, "forward": lm.forward_lm,
+        "init_cache": lm.init_cache_lm, "decode_step": lm.decode_step_lm,
+    },
+    "ssm": {
+        "init": ssm_lm.init_ssm_lm, "forward": ssm_lm.forward_ssm_lm,
+        "init_cache": ssm_lm.init_cache_ssm_lm, "decode_step": ssm_lm.decode_step_ssm_lm,
+    },
+    "hybrid": {
+        "init": ssm_lm.init_hybrid_lm, "forward": ssm_lm.forward_hybrid_lm,
+        "init_cache": ssm_lm.init_cache_hybrid_lm, "decode_step": ssm_lm.decode_step_hybrid_lm,
+    },
+    "audio": {
+        "init": whisper.init_whisper, "forward": whisper.forward_whisper,
+        "init_cache": whisper.init_cache_whisper, "decode_step": whisper.decode_step_whisper,
+    },
+    "vlm": {
+        "init": vlm.init_vlm, "forward": vlm.forward_vlm,
+        "init_cache": vlm.init_cache_vlm, "decode_step": vlm.decode_step_vlm,
+    },
+}
+
+
+@dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+
+    @property
+    def _fam(self):
+        return _FAMILIES[self.cfg.arch_type]
+
+    # --- params ---
+    def init(self, rng: jax.Array) -> PyTree:
+        return self._fam["init"](rng, self.cfg)
+
+    def init_abstract(self) -> PyTree:
+        """Parameter shapes without allocating (for dry-run sharding plans)."""
+        return jax.eval_shape(self.init, jax.random.PRNGKey(0))
+
+    # --- training ---
+    def forward(self, params: PyTree, tokens: jax.Array, context: jax.Array | None = None,
+                last_only: bool = False):
+        return self._fam["forward"](self.cfg, params, tokens, context=context, last_only=last_only)
+
+    def head_weight(self, params: PyTree) -> jax.Array:
+        if self.cfg.tie_embeddings and "head" not in params:
+            return params["embed"].T
+        return params["head"]
+
+    def loss(self, params: PyTree, batch: dict, fused: bool = True) -> tuple[jax.Array, dict]:
+        """Training loss. ``fused`` uses the chunked head+CE (never
+        materializes [B,S,V] logits); disabled automatically for softcap."""
+        if fused and not self.cfg.logit_softcap:
+            hidden, aux = self._fam["forward"](
+                self.cfg, params, batch["tokens"], context=batch.get("context"),
+                hidden_only=True)
+            loss, metrics = fused_cross_entropy(hidden, self.head_weight(params),
+                                                batch["labels"])
+        else:
+            logits, aux = self.forward(params, batch["tokens"], context=batch.get("context"))
+            loss, metrics = softmax_cross_entropy(logits, batch["labels"])
+        if self.cfg.n_experts and self.cfg.router_aux_coef:
+            loss = loss + self.cfg.router_aux_coef * aux
+            metrics["moe_aux"] = aux
+        metrics["loss_total"] = loss
+        return loss, metrics
+
+    # --- serving ---
+    def init_cache(self, params: PyTree, batch: int, cache_len: int) -> PyTree:
+        return self._fam["init_cache"](self.cfg, params, batch, cache_len)
+
+    def decode_step(self, params: PyTree, cache: PyTree, token: jax.Array, pos: jax.Array):
+        return self._fam["decode_step"](self.cfg, params, cache, token, pos)
+
+    def prefill(self, params: PyTree, tokens: jax.Array, context: jax.Array | None = None):
+        """Full-sequence forward returning last-position logits only (the
+        [B, S, V] logit tensor is never materialized; cache fill is
+        family-specific and exercised via decode_step in tests)."""
+        logits, _ = self.forward(params, tokens, context=context, last_only=True)
+        return logits[:, -1]
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    if cfg.arch_type not in _FAMILIES:
+        raise ValueError(f"unknown arch_type {cfg.arch_type!r}")
+    return Model(cfg)

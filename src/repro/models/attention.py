@@ -1,0 +1,265 @@
+"""Grouped-query attention with RoPE, QK-norm, sliding-window and KV caches.
+
+Three entry points:
+  * ``attend``            — full-sequence (training / prefill)
+  * ``attend_decode``     — one new token against a [B, S, KV, hd] cache
+  * ``cross_attend``      — encoder-decoder / VLM cross attention
+
+Caches are plain dicts so they shard like any other pytree:
+  full cache:   {"k": [B, S, KV, hd], "v": ..., "pos": i32[]}
+  ring cache:   same but S == sliding window; slot = pos % window (used for
+                long-context decode so dense archs stay sub-quadratic).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ModelConfig, apply_rope, dense_init, rms_norm, shard_hint
+
+PyTree = Any
+NEG_INF = -2.0e38
+
+
+def init_attention(key, cfg: ModelConfig, n_layers: int | None = None, cross: bool = False) -> PyTree:
+    """Attention params; stacked over n_layers when given (leading L axis)."""
+    d, H, KV, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    L = (n_layers,) if n_layers else ()
+    ks = jax.random.split(key, 4)
+    pd = cfg.pdtype
+    params = {
+        "wq": dense_init(ks[0], (*L, d, H * hd), fan_in=d, dtype=pd),
+        "wk": dense_init(ks[1], (*L, d, KV * hd), fan_in=d, dtype=pd),
+        "wv": dense_init(ks[2], (*L, d, KV * hd), fan_in=d, dtype=pd),
+        "wo": dense_init(ks[3], (*L, H * hd, d), fan_in=H * hd, dtype=pd),
+    }
+    if cfg.qk_norm:
+        params["q_norm_scale"] = jnp.zeros((*L, hd), pd)
+        params["k_norm_scale"] = jnp.zeros((*L, hd), pd)
+    if cross:
+        params["gate"] = jnp.zeros((*L,), pd)  # llama-3.2-vision tanh gate
+    return params
+
+
+def _project_qkv(p: PyTree, cfg: ModelConfig, x: jax.Array, kv_x: jax.Array):
+    """Project to q [B,S,H,hd], k/v [B,Skv,KV,hd] with optional QK-norm."""
+    B, S, _ = x.shape
+    Skv = kv_x.shape[1]
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    dt = cfg.compute_dtype
+    q = (x @ p["wq"].astype(dt)).reshape(B, S, H, hd)
+    k = (kv_x @ p["wk"].astype(dt)).reshape(B, Skv, KV, hd)
+    v = (kv_x @ p["wv"].astype(dt)).reshape(B, Skv, KV, hd)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm_scale"])
+        k = rms_norm(k, p["k_norm_scale"])
+    return q, k, v
+
+
+def _gqa_scores(q: jax.Array, k: jax.Array) -> jax.Array:
+    """q [B,Sq,H,hd] x k [B,Sk,KV,hd] -> scores [B,KV,G,Sq,Sk] with G=H/KV."""
+    B, Sq, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    qg = q.reshape(B, Sq, KV, G, hd)
+    s = jnp.einsum("bqkgh,bskh->bkgqs", qg, k) / jnp.sqrt(jnp.asarray(hd, jnp.float32)).astype(q.dtype)
+    return s
+
+
+def _gqa_out(probs: jax.Array, v: jax.Array) -> jax.Array:
+    """probs [B,KV,G,Sq,Sk] x v [B,Sk,KV,hd] -> [B,Sq,H*hd]."""
+    B, KV, G, Sq, Sk = probs.shape
+    hd = v.shape[-1]
+    o = jnp.einsum("bkgqs,bskh->bqkgh", probs, v)
+    return o.reshape(B, Sq, KV * G * hd)
+
+
+BLOCKWISE_THRESHOLD = 4096  # sequences >= this use online-softmax blockwise attention
+
+
+def attend(p: PyTree, cfg: ModelConfig, x: jax.Array, positions: jax.Array,
+           causal: bool = True) -> jax.Array:
+    """Full-sequence self-attention (training / prefill).
+
+    For long sequences the quadratic score matrix never fits HBM, so we
+    switch to a blockwise online-softmax computation (flash-attention
+    recurrence expressed in XLA via lax.scan) — the TPU-native equivalent of
+    the fused-SRAM GPU kernel. Exact, differentiable, O(S * block) memory.
+    """
+    q, k, v = _project_qkv(p, cfg, x, x)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    q = shard_hint(q, "attn_kv")
+    k = shard_hint(k, "attn_kv")
+    v = shard_hint(v, "attn_kv")
+    S = x.shape[1]
+    if S >= BLOCKWISE_THRESHOLD:
+        o = _blockwise_attention(cfg, q, k, v, causal=causal)
+        B = x.shape[0]
+        o = o.reshape(B, S, -1)
+    else:
+        scores = _gqa_scores(q, k).astype(jnp.float32)  # [B,KV,G,S,S]
+        if causal:
+            i = positions if positions.ndim == 1 else positions[0]
+            mask = i[:, None] >= i[None, :]
+            if cfg.sliding_window:
+                mask &= i[:, None] - i[None, :] < cfg.sliding_window
+            scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+        probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+        probs = shard_hint(probs, "attn_probs")
+        o = _gqa_out(probs, v)
+    return o @ p["wo"].astype(cfg.compute_dtype)
+
+
+def _blockwise_attention(cfg: ModelConfig, q: jax.Array, k: jax.Array, v: jax.Array,
+                         causal: bool, block_q: int = 512, block_kv: int = 1024) -> jax.Array:
+    """Exact attention via the online-softmax recurrence over KV blocks.
+
+    q [B,S,H,hd], k/v [B,S,KV,hd] -> o [B,S,H,hd]. Memory per step is
+    O(block_q * block_kv) instead of O(S^2). Causal + sliding-window masks
+    are applied per block pair (full-block skipping is a §Perf candidate).
+    """
+    B, S, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    bq = min(block_q, S)
+    bkv = min(block_kv, S)
+    nq, nkv = S // bq, S // bkv
+    assert S % bq == 0 and S % bkv == 0
+    scale = 1.0 / jnp.sqrt(jnp.asarray(hd, jnp.float32))
+
+    qb = q.reshape(B, nq, bq, KV, G, hd)
+    kb = k.reshape(B, nkv, bkv, KV, hd)
+    vb = v.reshape(B, nkv, bkv, KV, hd)
+
+    @jax.checkpoint  # backward recomputes the kv scan: O(block) residuals,
+    def q_block(qi, q_i):  # not O(S * block) saved probs per q block
+        # q_i: [B, bq, KV, G, hd]
+        q32 = q_i.astype(jnp.float32)
+
+        def kv_step(carry, kj):
+            m, l, acc = carry
+            k_j = jax.lax.dynamic_index_in_dim(kb, kj, axis=1, keepdims=False)
+            v_j = jax.lax.dynamic_index_in_dim(vb, kj, axis=1, keepdims=False)
+            s = jnp.einsum("bqkgh,bskh->bkgqs", q32, k_j.astype(jnp.float32)) * scale
+            rows = qi * bq + jnp.arange(bq)
+            cols = kj * bkv + jnp.arange(bkv)
+            mask = jnp.ones((bq, bkv), bool)
+            if causal:
+                mask &= rows[:, None] >= cols[None, :]
+            if cfg.sliding_window:
+                mask &= rows[:, None] - cols[None, :] < cfg.sliding_window
+            s = jnp.where(mask[None, None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + jnp.sum(p, axis=-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bkgqs,bskh->bkgqh", p, v_j.astype(jnp.float32))
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, KV, G, bq), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, KV, G, bq), jnp.float32)
+        a0 = jnp.zeros((B, KV, G, bq, hd), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0), jnp.arange(nkv))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]  # [B,KV,G,bq,hd]
+        return jnp.moveaxis(out, 3, 1)  # [B,bq,KV,G,hd]
+
+    outs = jax.lax.map(lambda i: q_block(i, qb[:, i].reshape(B, bq, KV, G, hd)), jnp.arange(nq))
+    # outs: [nq, B, bq, KV, G, hd] -> [B, S, H, hd]
+    o = jnp.moveaxis(outs, 0, 1).reshape(B, S, KV, G, hd).astype(q.dtype)
+    return o.reshape(B, S, H, hd)
+
+
+def init_cache(cfg: ModelConfig, batch: int, cache_len: int, n_layers: int, dtype=None) -> PyTree:
+    dt = dtype or cfg.compute_dtype
+    KV, hd = cfg.n_kv_heads, cfg.hd
+    return {
+        "k": jnp.zeros((n_layers, batch, cache_len, KV, hd), dt),
+        "v": jnp.zeros((n_layers, batch, cache_len, KV, hd), dt),
+    }
+
+
+def fill_cache_from_prefill(k: jax.Array, v: jax.Array, cache_layer: PyTree) -> PyTree:
+    """Write full-seq prefill K/V into the (larger) cache buffers."""
+    S = k.shape[1]
+    ck = jax.lax.dynamic_update_slice(cache_layer["k"], k, (0, 0, 0, 0))
+    cv = jax.lax.dynamic_update_slice(cache_layer["v"], v, (0, 0, 0, 0))
+    return {"k": ck, "v": cv}
+
+
+def attend_decode(p: PyTree, cfg: ModelConfig, x: jax.Array, cache_layer: PyTree,
+                  pos: jax.Array) -> tuple[jax.Array, PyTree]:
+    """Decode one token. x: [B, 1, d]; cache k/v: [B, W, KV, hd]; pos: i32[].
+
+    With ``cfg.sliding_window`` the cache is a ring buffer of size W=window
+    (slot = pos % W) so long-context decode memory is O(window), the
+    sub-quadratic variant used for the 500k-token shape. Without it, the
+    cache holds absolute positions (W >= seq_len).
+    """
+    B = x.shape[0]
+    q, k_new, v_new = _project_qkv(p, cfg, x, x)
+    posb = jnp.full((B, 1), pos, jnp.int32)
+    q = apply_rope(q, posb, cfg.rope_theta)
+    k_new = apply_rope(k_new, posb, cfg.rope_theta)
+
+    W = cache_layer["k"].shape[1]
+    slot = pos % W if cfg.sliding_window else pos
+    ck = jax.lax.dynamic_update_slice(cache_layer["k"], k_new, (0, slot, 0, 0))
+    cv = jax.lax.dynamic_update_slice(cache_layer["v"], v_new, (0, slot, 0, 0))
+
+    scores = _gqa_scores(q, ck).astype(jnp.float32)  # [B,KV,G,1,W]
+    idx = jnp.arange(W)
+    if cfg.sliding_window:
+        # slot s currently holds absolute position p(s): the largest p <= pos
+        # with p % W == s.
+        slot_pos = pos - ((pos - idx) % W)
+        valid = (slot_pos >= 0) & (slot_pos > pos - W)
+    else:
+        valid = idx <= pos
+    scores = jnp.where(valid[None, None, None, None, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    o = _gqa_out(probs, cv)
+    out = o @ p["wo"].astype(cfg.compute_dtype)
+    return out, {"k": ck, "v": cv}
+
+
+def cross_attend(p: PyTree, cfg: ModelConfig, x: jax.Array, kv: jax.Array | tuple,
+                 gated: bool = False) -> jax.Array:
+    """Cross attention to a context. kv: context states [B, Sk, d] or a
+    precomputed (k, v) pair ([B, Sk, KV, hd] each) for cached decoding."""
+    dt = cfg.compute_dtype
+    B, Sq, _ = x.shape
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    q = (x @ p["wq"].astype(dt)).reshape(B, Sq, H, hd)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm_scale"])
+    if isinstance(kv, tuple):
+        k, v = kv
+    else:
+        Sk = kv.shape[1]
+        k = (kv @ p["wk"].astype(dt)).reshape(B, Sk, KV, hd)
+        v = (kv @ p["wv"].astype(dt)).reshape(B, Sk, KV, hd)
+        if cfg.qk_norm:
+            k = rms_norm(k, p["k_norm_scale"])
+    scores = _gqa_scores(q, k).astype(jnp.float32)
+    probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    o = _gqa_out(probs, v)
+    out = o @ p["wo"].astype(dt)
+    if gated:
+        out = jnp.tanh(p["gate"].astype(jnp.float32)).astype(dt) * out
+    return out
+
+
+def cross_kv(p: PyTree, cfg: ModelConfig, context: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Precompute cross-attention K/V once per request (decode path)."""
+    dt = cfg.compute_dtype
+    B, Sk, _ = context.shape
+    KV, hd = cfg.n_kv_heads, cfg.hd
+    k = (context @ p["wk"].astype(dt)).reshape(B, Sk, KV, hd)
+    v = (context @ p["wv"].astype(dt)).reshape(B, Sk, KV, hd)
+    if cfg.qk_norm:
+        k = rms_norm(k, p["k_norm_scale"])
+    return k, v

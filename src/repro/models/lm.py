@@ -1,0 +1,135 @@
+"""Decoder-only language models (dense + MoE) with scan-over-layers.
+
+Covers: mistral-large-123b, nemotron-4-15b (squared-ReLU), smollm-135m,
+kimi-k2, deepseek-moe-16b, moonshot-v1-16b-a3b, and the paper's own
+Gemma3-style scaling-ladder models (SwiGLU + QK-norm + post-norms).
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models.common import ModelConfig, dense_init, embed_init, rms_norm, shard_hint
+from repro.models.mlp import init_mlp, init_moe, mlp, moe
+
+PyTree = Any
+
+
+def init_lm(key, cfg: ModelConfig) -> PyTree:
+    ks = jax.random.split(key, 6)
+    L = cfg.n_layers
+    pd = cfg.pdtype
+    layers = {
+        "attn": attn.init_attention(ks[0], cfg, n_layers=L),
+        "ln1_scale": jnp.zeros((L, cfg.d_model), pd),
+        "ln2_scale": jnp.zeros((L, cfg.d_model), pd),
+    }
+    if cfg.post_norm:
+        layers["ln1_post_scale"] = jnp.zeros((L, cfg.d_model), pd)
+        layers["ln2_post_scale"] = jnp.zeros((L, cfg.d_model), pd)
+    if cfg.n_experts:
+        layers["moe"] = init_moe(ks[1], cfg, n_layers=L)
+    else:
+        layers["mlp"] = init_mlp(ks[1], cfg, n_layers=L)
+    params = {
+        "embed": embed_init(ks[2], (cfg.vocab, cfg.d_model), dtype=pd),
+        "layers": layers,
+        "final_norm_scale": jnp.zeros((cfg.d_model,), pd),
+    }
+    if not cfg.tie_embeddings:
+        params["head"] = dense_init(ks[3], (cfg.d_model, cfg.vocab), fan_in=cfg.d_model, dtype=pd)
+    return params
+
+
+def _block(cfg: ModelConfig, x: jax.Array, lp: PyTree, positions: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """One transformer block. Returns (x, moe_aux)."""
+    h = attn.attend(lp["attn"], cfg, rms_norm(x, lp["ln1_scale"]), positions)
+    if cfg.post_norm:
+        h = rms_norm(h, lp["ln1_post_scale"])
+    x = x + h
+    x = shard_hint(x, "residual")
+    hin = rms_norm(x, lp["ln2_scale"])
+    if cfg.n_experts:
+        h, aux = moe(lp["moe"], cfg, hin)
+    else:
+        h, aux = mlp(lp["mlp"], cfg, hin), jnp.float32(0.0)
+    if cfg.post_norm:
+        h = rms_norm(h, lp["ln2_post_scale"])
+    return x + h, aux
+
+
+def _embed(cfg: ModelConfig, params: PyTree, tokens: jax.Array) -> jax.Array:
+    x = params["embed"].astype(cfg.compute_dtype)[tokens]
+    return x * jnp.asarray(math.sqrt(cfg.d_model), cfg.compute_dtype)
+
+
+def _logits(cfg: ModelConfig, params: PyTree, x: jax.Array) -> jax.Array:
+    x = rms_norm(x, params["final_norm_scale"])
+    head = params.get("head", None)
+    w = head if head is not None else params["embed"].T
+    logits = x @ w.astype(cfg.compute_dtype)
+    if cfg.logit_softcap:
+        c = cfg.logit_softcap
+        logits = jnp.tanh(logits / c) * c
+    return logits
+
+
+def forward_lm(cfg: ModelConfig, params: PyTree, tokens: jax.Array, last_only: bool = False,
+               hidden_only: bool = False, **_) -> tuple[jax.Array, jax.Array]:
+    """Training / prefill forward. tokens [B, S] -> (logits [B,S,V], moe_aux).
+
+    ``last_only`` returns logits for the final position only (prefill path:
+    avoids materializing the [B, S, V] logit tensor)."""
+    x = _embed(cfg, params, tokens)
+    x = shard_hint(x, "residual")
+    positions = jnp.arange(tokens.shape[1])
+
+    def body(carry, lp):
+        x, aux = carry
+        x, a = _block(cfg, x, lp, positions)
+        return (x, aux + a), None
+
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+    (x, aux), _ = jax.lax.scan(body_fn, (x, jnp.float32(0.0)), params["layers"])
+    if last_only:
+        x = x[:, -1:]
+    if hidden_only:
+        return rms_norm(x, params["final_norm_scale"]), aux
+    return _logits(cfg, params, x), aux
+
+
+def init_cache_lm(cfg: ModelConfig, params: PyTree, batch: int, cache_len: int) -> PyTree:
+    if cfg.sliding_window:
+        cache_len = min(cache_len, cfg.sliding_window)
+    return attn.init_cache(cfg, batch, cache_len, cfg.n_layers)
+
+
+def decode_step_lm(cfg: ModelConfig, params: PyTree, cache: PyTree, token: jax.Array,
+                   pos: jax.Array, **_) -> tuple[jax.Array, PyTree]:
+    """One decode step. token [B] int32; cache from init_cache_lm; pos i32[]."""
+    x = _embed(cfg, params, token[:, None])
+    positions = None
+
+    def body(x, inp):
+        lp, cl = inp
+        h_in = rms_norm(x, lp["ln1_scale"])
+        h, new_cl = attn.attend_decode(lp["attn"], cfg, h_in, cl, pos)
+        if cfg.post_norm:
+            h = rms_norm(h, lp["ln1_post_scale"])
+        x = x + h
+        hin = rms_norm(x, lp["ln2_scale"])
+        if cfg.n_experts:
+            h, _ = moe(lp["moe"], cfg, hin)
+        else:
+            h = mlp(lp["mlp"], cfg, hin)
+        if cfg.post_norm:
+            h = rms_norm(h, lp["ln2_post_scale"])
+        return x + h, new_cl
+
+    x, new_cache = jax.lax.scan(body, x, (params["layers"], cache))
+    return _logits(cfg, params, x)[:, 0], new_cache

@@ -1,0 +1,181 @@
+"""Pure-SSM LM (mamba2-370m) and hybrid SSM+shared-attention LM (zamba2-2.7b).
+
+zamba2: a stack of Mamba2 layers with ONE weight-shared transformer block
+(GQA attention + MLP) invoked every ``hybrid_period`` layers (arXiv:2411.15242).
+We scan over superblocks of ``hybrid_period`` mamba layers; the shared block's
+params are closed over (not scanned), so its weights appear once in the pytree
+— matching zamba's parameter sharing — while each invocation keeps its own KV
+cache during decode.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models.common import ModelConfig, dense_init, embed_init, rms_norm, shard_hint
+from repro.models.mlp import init_mlp, mlp
+from repro.models.ssm import init_mamba, init_ssm_state, mamba_decode, mamba_forward
+
+PyTree = Any
+
+
+# ---------------------------------------------------------------------------
+# Pure Mamba2 LM
+# ---------------------------------------------------------------------------
+
+
+def init_ssm_lm(key, cfg: ModelConfig) -> PyTree:
+    ks = jax.random.split(key, 3)
+    L = cfg.n_layers
+    pd = cfg.pdtype
+    return {
+        "embed": embed_init(ks[0], (cfg.vocab, cfg.d_model), dtype=pd),
+        "layers": {
+            "mamba": init_mamba(ks[1], cfg, n_layers=L),
+            "ln_scale": jnp.zeros((L, cfg.d_model), pd),
+        },
+        "final_norm_scale": jnp.zeros((cfg.d_model,), pd),
+        "head": dense_init(ks[2], (cfg.d_model, cfg.vocab), fan_in=cfg.d_model, dtype=pd),
+    }
+
+
+def _embed(cfg, params, tokens):
+    x = params["embed"].astype(cfg.compute_dtype)[tokens]
+    return x * jnp.asarray(math.sqrt(cfg.d_model), cfg.compute_dtype)
+
+
+def _logits(cfg, params, x):
+    x = rms_norm(x, params["final_norm_scale"])
+    return x @ params["head"].astype(cfg.compute_dtype)
+
+
+def forward_ssm_lm(cfg: ModelConfig, params: PyTree, tokens: jax.Array, last_only: bool = False,
+                   hidden_only: bool = False, **_):
+    x = _embed(cfg, params, tokens)
+
+    def body(x, lp):
+        h = mamba_forward(lp["mamba"], cfg, rms_norm(x, lp["ln_scale"]))
+        return shard_hint(x + h, "residual"), None
+
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+    x, _ = jax.lax.scan(body_fn, x, params["layers"])
+    if last_only:
+        x = x[:, -1:]
+    if hidden_only:
+        return rms_norm(x, params["final_norm_scale"]), jnp.float32(0.0)
+    return _logits(cfg, params, x), jnp.float32(0.0)
+
+
+def init_cache_ssm_lm(cfg: ModelConfig, params: PyTree, batch: int, cache_len: int) -> PyTree:
+    del cache_len  # O(1) state — the whole point of the SSM for long_500k
+    return init_ssm_state(cfg, batch, cfg.n_layers)
+
+
+def decode_step_ssm_lm(cfg: ModelConfig, params: PyTree, cache: PyTree, token: jax.Array,
+                       pos: jax.Array, **_):
+    del pos
+    x = _embed(cfg, params, token[:, None])
+
+    def body(x, inp):
+        lp, st = inp
+        h, st = mamba_decode(lp["mamba"], cfg, rms_norm(x, lp["ln_scale"]), st)
+        return x + h, st
+
+    x, new_cache = jax.lax.scan(body, x, (params["layers"], cache))
+    return _logits(cfg, params, x)[:, 0], new_cache
+
+
+# ---------------------------------------------------------------------------
+# Zamba2 hybrid
+# ---------------------------------------------------------------------------
+
+
+def _n_super(cfg: ModelConfig) -> int:
+    assert cfg.n_layers % cfg.hybrid_period == 0, "n_layers must divide into superblocks"
+    return cfg.n_layers // cfg.hybrid_period
+
+
+def init_hybrid_lm(key, cfg: ModelConfig) -> PyTree:
+    ks = jax.random.split(key, 6)
+    pd = cfg.pdtype
+    params = init_ssm_lm(ks[0], cfg)
+    # reshape stacked mamba layers into [n_super, period, ...]
+    ns, per = _n_super(cfg), cfg.hybrid_period
+    params["layers"] = jax.tree.map(lambda x: x.reshape(ns, per, *x.shape[1:]), params["layers"])
+    params["shared_block"] = {
+        "attn": attn.init_attention(ks[1], cfg),
+        "mlp": init_mlp(ks[2], cfg),
+        "ln1_scale": jnp.zeros((cfg.d_model,), pd),
+        "ln2_scale": jnp.zeros((cfg.d_model,), pd),
+    }
+    return params
+
+
+def _shared_block_fwd(cfg, sp, x, positions):
+    h = attn.attend(sp["attn"], cfg, rms_norm(x, sp["ln1_scale"]), positions)
+    x = x + h
+    return x + mlp(sp["mlp"], cfg, rms_norm(x, sp["ln2_scale"]))
+
+
+def forward_hybrid_lm(cfg: ModelConfig, params: PyTree, tokens: jax.Array, last_only: bool = False,
+                      hidden_only: bool = False, **_):
+    x = _embed(cfg, params, tokens)
+    positions = jnp.arange(tokens.shape[1])
+    sp = params["shared_block"]
+
+    def superblock(x, lp_group):
+        x = _shared_block_fwd(cfg, sp, x, positions)
+
+        def inner(x, lp):
+            h = mamba_forward(lp["mamba"], cfg, rms_norm(x, lp["ln_scale"]))
+            return x + h, None
+
+        x, _ = jax.lax.scan(inner, x, lp_group)
+        return shard_hint(x, "residual"), None
+
+    body_fn = jax.checkpoint(superblock) if cfg.remat else superblock
+    x, _ = jax.lax.scan(body_fn, x, params["layers"])
+    if last_only:
+        x = x[:, -1:]
+    if hidden_only:
+        return rms_norm(x, params["final_norm_scale"]), jnp.float32(0.0)
+    return _logits(cfg, params, x), jnp.float32(0.0)
+
+
+def init_cache_hybrid_lm(cfg: ModelConfig, params: PyTree, batch: int, cache_len: int) -> PyTree:
+    ns = _n_super(cfg)
+    if cfg.sliding_window:
+        cache_len = min(cache_len, cfg.sliding_window)
+    ssm = init_ssm_state(cfg, batch, cfg.n_layers)
+    ssm = jax.tree.map(lambda x: x.reshape(ns, cfg.hybrid_period, *x.shape[1:]), ssm)
+    return {"ssm": ssm, "attn": attn.init_cache(cfg, batch, cache_len, ns)}
+
+
+def decode_step_hybrid_lm(cfg: ModelConfig, params: PyTree, cache: PyTree, token: jax.Array,
+                          pos: jax.Array, **_):
+    x = _embed(cfg, params, token[:, None])
+    sp = params["shared_block"]
+
+    def superblock(x, inp):
+        lp_group, ssm_group, attn_cl = inp
+        h_in = rms_norm(x, sp["ln1_scale"])
+        h, new_attn_cl = attn.attend_decode(sp["attn"], cfg, h_in, attn_cl, pos)
+        x = x + h
+        x = x + mlp(sp["mlp"], cfg, rms_norm(x, sp["ln2_scale"]))
+
+        def inner(x, inner_inp):
+            lp, st = inner_inp
+            h, st = mamba_decode(lp["mamba"], cfg, rms_norm(x, lp["ln_scale"]), st)
+            return x + h, st
+
+        x, new_ssm_group = jax.lax.scan(inner, x, (lp_group, ssm_group))
+        return x, (new_ssm_group, new_attn_cl)
+
+    x, (new_ssm, new_attn) = jax.lax.scan(
+        superblock, x, (params["layers"], cache["ssm"], cache["attn"])
+    )
+    return _logits(cfg, params, x)[:, 0], {"ssm": new_ssm, "attn": new_attn}

@@ -1,0 +1,152 @@
+"""Llama-3.2-Vision language backbone (hf:meta-llama/Llama-3.2-11B-Vision).
+
+A causal LM where every ``vlm_period``-th layer is a *gated cross-attention*
+block attending to image patch embeddings. The ViT/projector frontend is the
+permitted stub — ``input_specs`` supplies [B, n_image_tokens, d_model]
+directly. 100 layers at period 5 -> 20 superblocks of (1 cross + 4 self)
+layers, scanned at the superblock level so HLO stays depth-independent.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models.common import ModelConfig, dense_init, embed_init, rms_norm, shard_hint
+from repro.models.mlp import init_mlp, mlp
+
+PyTree = Any
+
+
+def _blocks(cfg: ModelConfig) -> tuple[int, int]:
+    assert cfg.n_layers % cfg.vlm_period == 0
+    n_super = cfg.n_layers // cfg.vlm_period
+    n_self_per = cfg.vlm_period - 1
+    return n_super, n_self_per
+
+
+def init_vlm(key, cfg: ModelConfig) -> PyTree:
+    ns, per = _blocks(cfg)
+    ks = jax.random.split(key, 8)
+    pd = cfg.pdtype
+    n_self = ns * per
+
+    def self_stack(x):  # [n_self, ...] -> [ns, per, ...]
+        return jax.tree.map(lambda a: a.reshape(ns, per, *a.shape[1:]), x)
+
+    self_layers = self_stack({
+        "attn": attn.init_attention(ks[0], cfg, n_layers=n_self),
+        "mlp": init_mlp(ks[1], cfg, n_layers=n_self),
+        "ln1_scale": jnp.zeros((n_self, cfg.d_model), pd),
+        "ln2_scale": jnp.zeros((n_self, cfg.d_model), pd),
+    })
+    cross_layers = {
+        "attn": attn.init_attention(ks[2], cfg, n_layers=ns, cross=True),
+        "mlp": init_mlp(ks[3], cfg, n_layers=ns),
+        "ln1_scale": jnp.zeros((ns, cfg.d_model), pd),
+        "ln2_scale": jnp.zeros((ns, cfg.d_model), pd),
+        "mlp_gate": jnp.zeros((ns,), pd),
+    }
+    return {
+        "embed": embed_init(ks[4], (cfg.vocab, cfg.d_model), dtype=pd),
+        "image_proj": dense_init(ks[5], (cfg.d_model, cfg.d_model), dtype=pd),  # projector stub
+        "self_layers": self_layers,
+        "cross_layers": cross_layers,
+        "final_norm_scale": jnp.zeros((cfg.d_model,), pd),
+        "head": dense_init(ks[6], (cfg.d_model, cfg.vocab), fan_in=cfg.d_model, dtype=pd),
+    }
+
+
+def _embed(cfg, params, tokens):
+    x = params["embed"].astype(cfg.compute_dtype)[tokens]
+    return x * jnp.asarray(math.sqrt(cfg.d_model), cfg.compute_dtype)
+
+
+def _cross_block(cfg, cp, x, img):
+    h = attn.cross_attend(cp["attn"], cfg, rms_norm(x, cp["ln1_scale"]), img, gated=True)
+    x = x + h
+    g = jnp.tanh(cp["mlp_gate"].astype(jnp.float32)).astype(x.dtype)
+    return x + g * mlp(cp["mlp"], cfg, rms_norm(x, cp["ln2_scale"]))
+
+
+def _self_block(cfg, lp, x, positions):
+    h = attn.attend(lp["attn"], cfg, rms_norm(x, lp["ln1_scale"]), positions)
+    x = x + h
+    return x + mlp(lp["mlp"], cfg, rms_norm(x, lp["ln2_scale"]))
+
+
+def forward_vlm(cfg: ModelConfig, params: PyTree, tokens: jax.Array,
+                context: jax.Array | None = None, last_only: bool = False,
+                hidden_only: bool = False, **_):
+    """context = image patch embeddings [B, n_image_tokens, d_model] (stub)."""
+    assert context is not None, "vlm forward requires image context"
+    dt = cfg.compute_dtype
+    img = context.astype(dt) @ params["image_proj"].astype(dt)
+    x = _embed(cfg, params, tokens)
+    positions = jnp.arange(tokens.shape[1])
+
+    def superblock(x, inp):
+        cp, sp_group = inp
+        x = _cross_block(cfg, cp, x, img)
+
+        def inner(x, lp):
+            return _self_block(cfg, lp, x, positions), None
+
+        x, _ = jax.lax.scan(inner, x, sp_group)
+        return shard_hint(x, "residual"), None
+
+    body_fn = jax.checkpoint(superblock) if cfg.remat else superblock
+    x, _ = jax.lax.scan(body_fn, x, (params["cross_layers"], params["self_layers"]))
+    if last_only:
+        x = x[:, -1:]
+    x = rms_norm(x, params["final_norm_scale"])
+    if hidden_only:
+        return x, jnp.float32(0.0)
+    return x @ params["head"].astype(dt), jnp.float32(0.0)
+
+
+def init_cache_vlm(cfg: ModelConfig, params: PyTree, batch: int, cache_len: int) -> PyTree:
+    ns, per = _blocks(cfg)
+    if cfg.sliding_window:
+        cache_len = min(cache_len, cfg.sliding_window)
+    self_cache = attn.init_cache(cfg, batch, cache_len, ns * per)
+    self_cache = jax.tree.map(lambda a: a.reshape(ns, per, *a.shape[1:]), self_cache)
+    KV, hd = cfg.n_kv_heads, cfg.hd
+    return {
+        "self": self_cache,
+        "cross_k": jnp.zeros((ns, batch, cfg.n_image_tokens, KV, hd), cfg.compute_dtype),
+        "cross_v": jnp.zeros((ns, batch, cfg.n_image_tokens, KV, hd), cfg.compute_dtype),
+    }
+
+
+def decode_step_vlm(cfg: ModelConfig, params: PyTree, cache: PyTree, token: jax.Array,
+                    pos: jax.Array, **_):
+    x = _embed(cfg, params, token[:, None])
+
+    def superblock(x, inp):
+        cp, sp_group, self_cl, ck, cv = inp
+        h = attn.cross_attend(cp["attn"], cfg, rms_norm(x, cp["ln1_scale"]), (ck, cv), gated=True)
+        x = x + h
+        g = jnp.tanh(cp["mlp_gate"].astype(jnp.float32)).astype(x.dtype)
+        x = x + g * mlp(cp["mlp"], cfg, rms_norm(x, cp["ln2_scale"]))
+
+        def inner(x, inner_inp):
+            lp, cl = inner_inp
+            h_in = rms_norm(x, lp["ln1_scale"])
+            h, new_cl = attn.attend_decode(lp["attn"], cfg, h_in, cl, pos)
+            x = x + h
+            return x + mlp(lp["mlp"], cfg, rms_norm(x, lp["ln2_scale"])), new_cl
+
+        x, new_group = jax.lax.scan(inner, x, (sp_group, self_cl))
+        return x, new_group
+
+    x, new_self = jax.lax.scan(
+        superblock, x,
+        (params["cross_layers"], params["self_layers"], cache["self"], cache["cross_k"], cache["cross_v"]),
+    )
+    x = rms_norm(x, params["final_norm_scale"])
+    logits = (x @ params["head"].astype(cfg.compute_dtype))[:, 0]
+    return logits, {"self": new_self, "cross_k": cache["cross_k"], "cross_v": cache["cross_v"]}

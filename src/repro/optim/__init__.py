@@ -1,0 +1,19 @@
+from repro.optim.adamw import adamw  # noqa: F401
+from repro.optim.base import (  # noqa: F401
+    Optimizer,
+    OptimizerConfig,
+    constant_schedule,
+    cosine_schedule,
+    make_schedule,
+)
+from repro.optim.muon import muon, muon_label, newton_schulz, param_labels  # noqa: F401
+from repro.optim.nesterov import nesterov_init, nesterov_step  # noqa: F401
+
+
+def make_inner_optimizer(name: str, cfg: OptimizerConfig, **kw) -> Optimizer:
+    """Registry used by DiLoCo: 'adamw' -> DiLoCo, 'muon' -> MuLoCo."""
+    if name == "adamw":
+        return adamw(cfg)
+    if name == "muon":
+        return muon(cfg, **kw)
+    raise ValueError(f"unknown inner optimizer {name!r}")

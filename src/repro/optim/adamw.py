@@ -1,0 +1,56 @@
+"""AdamW — the paper's DiLoCo inner optimizer and DP baseline.
+
+Fused update semantics match torch.optim.AdamW (decoupled weight decay,
+bias-corrected moments). Paper setting: b1=0.9, b2=0.99.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.base import Optimizer, OptimizerConfig, make_schedule
+
+PyTree = Any
+
+
+def adamw(cfg: OptimizerConfig) -> Optimizer:
+    sched = make_schedule(cfg)
+
+    def init(params: PyTree) -> PyTree:
+        sdt = jnp.dtype(cfg.state_dtype)
+        return {
+            "m": jax.tree.map(lambda p: jnp.zeros(p.shape, sdt), params),
+            "v": jax.tree.map(lambda p: jnp.zeros(p.shape, sdt), params),
+            "count": jnp.zeros((), jnp.int32),
+        }
+
+    def step(params: PyTree, grads: PyTree, state: PyTree):
+        count = state["count"] + 1
+        lr = sched(count)
+        b1, b2, eps, wd = cfg.b1, cfg.b2, cfg.eps, cfg.weight_decay
+        bc1 = 1.0 - b1 ** count.astype(jnp.float32)
+        bc2 = 1.0 - b2 ** count.astype(jnp.float32)
+
+        sdt = jnp.dtype(cfg.state_dtype)
+
+        def upd(p, g, m, v):
+            g = g.astype(jnp.float32)
+            m = b1 * m.astype(jnp.float32) + (1.0 - b1) * g
+            v = b2 * v.astype(jnp.float32) + (1.0 - b2) * g * g
+            mhat = m / bc1
+            vhat = v / bc2
+            u = mhat / (jnp.sqrt(vhat) + eps)
+            p32 = p.astype(jnp.float32)
+            new_p = p32 - lr * u - lr * wd * p32
+            return new_p.astype(p.dtype), m.astype(sdt), v.astype(sdt)
+
+        out = jax.tree.map(upd, params, grads, state["m"], state["v"])
+        # out is a tree of 3-tuples; transpose it back into three trees
+        new_params = jax.tree.map(lambda t: t[0], out, is_leaf=lambda t: isinstance(t, tuple))
+        new_m = jax.tree.map(lambda t: t[1], out, is_leaf=lambda t: isinstance(t, tuple))
+        new_v = jax.tree.map(lambda t: t[2], out, is_leaf=lambda t: isinstance(t, tuple))
+        return new_params, {"m": new_m, "v": new_v, "count": count}
+
+    return Optimizer(init=init, step=step)

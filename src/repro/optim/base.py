@@ -1,0 +1,86 @@
+"""Minimal functional optimizer interface (no optax dependency).
+
+An ``Optimizer`` is a pair of pure functions:
+
+    state  = opt.init(params)
+    params, state = opt.step(params, grads, state)
+
+``state`` always contains an integer ``count`` leaf so learning-rate
+schedules are resolved inside ``step`` (keeps the DiLoCo inner loop a single
+jittable function). All optimizer math is done in fp32 regardless of the
+parameter dtype, and results are cast back.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+Schedule = Callable[[jax.Array], jax.Array]  # step -> lr multiplier (absolute lr)
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[PyTree], PyTree]
+    step: Callable[[PyTree, PyTree, PyTree], tuple[PyTree, PyTree]]
+
+
+@dataclasses.dataclass(frozen=True)
+class OptimizerConfig:
+    """Shared hyperparameters for inner optimizers."""
+
+    lr: float = 1e-3
+    weight_decay: float = 0.0
+    b1: float = 0.9
+    b2: float = 0.99
+    eps: float = 1e-8
+    # Muon-specific
+    ns_iters: int = 5
+    muon_lr_scale_mode: str = "paper"  # paper: sqrt(n/m) | jordan: sqrt(max(1,m/n)) | none
+    # schedule
+    schedule: str = "constant"  # constant | cosine
+    warmup_steps: int = 0
+    total_steps: int = 1
+    min_lr_ratio: float = 0.1
+    # dtype of persistent optimizer state (momenta); math is always fp32
+    state_dtype: str = "float32"
+
+
+def constant_schedule(lr: float) -> Schedule:
+    def sched(step):
+        return jnp.asarray(lr, jnp.float32)
+
+    return sched
+
+
+def cosine_schedule(lr: float, total_steps: int, warmup_steps: int = 0, min_ratio: float = 0.1) -> Schedule:
+    """Linear warmup followed by cosine decay to ``min_ratio * lr`` (paper: 0.1x)."""
+
+    def sched(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = jnp.asarray(max(warmup_steps, 1), jnp.float32)
+        total = jnp.asarray(max(total_steps, 1), jnp.float32)
+        warm_lr = lr * jnp.minimum(step / warm, 1.0)
+        frac = jnp.clip((step - warm) / jnp.maximum(total - warm, 1.0), 0.0, 1.0)
+        cos = min_ratio + (1.0 - min_ratio) * 0.5 * (1.0 + jnp.cos(jnp.pi * frac))
+        decay_lr = lr * cos
+        return jnp.where(step < warmup_steps, warm_lr, decay_lr).astype(jnp.float32)
+
+    return sched
+
+
+def make_schedule(cfg: OptimizerConfig) -> Schedule:
+    if cfg.schedule == "constant":
+        return constant_schedule(cfg.lr)
+    if cfg.schedule == "cosine":
+        return cosine_schedule(cfg.lr, cfg.total_steps, cfg.warmup_steps, cfg.min_lr_ratio)
+    raise ValueError(f"unknown schedule {cfg.schedule!r}")
+
+
+def apply_update(param: jax.Array, update: jax.Array, lr, weight_decay) -> jax.Array:
+    """Decoupled weight decay update: p <- p - lr*update - lr*wd*p (fp32 math)."""
+    p32 = param.astype(jnp.float32)
+    new = p32 - lr * update.astype(jnp.float32) - lr * weight_decay * p32
+    return new.astype(param.dtype)

@@ -1,0 +1,44 @@
+"""Outer optimizer: SGD with Nesterov momentum over pseudogradients.
+
+Exactly the paper's Eq. (3) / Algorithm 1 lines 12-13:
+
+    u^(t)     = mu * u^(t-H) + eta_out * Psi^(t)
+    theta^(t) = theta^(t-1) - mu * u^(t) - eta_out * Psi^(t)
+
+where Psi is the averaged weight-space delta (pseudogradient). Note the
+paper folds eta_out into the momentum accumulator (SlowMo-style), so the
+effective step is mu*u + eta_out*Psi.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+def nesterov_init(params: PyTree, state_dtype=jnp.float32) -> PyTree:
+    return {"u": jax.tree.map(lambda p: jnp.zeros(p.shape, state_dtype), params)}
+
+
+def nesterov_step(
+    outer_params: PyTree,
+    pseudograd: PyTree,
+    state: PyTree,
+    *,
+    lr: float,
+    momentum: float,
+) -> tuple[PyTree, PyTree]:
+    def upd(p, psi, u):
+        psi = psi.astype(jnp.float32)
+        u_new = momentum * u.astype(jnp.float32) + lr * psi
+        p_new = p.astype(jnp.float32) - momentum * u_new - lr * psi
+        return p_new.astype(p.dtype), u_new.astype(u.dtype)
+
+    out = jax.tree.map(upd, outer_params, pseudograd, state["u"])
+    is_tup = lambda t: isinstance(t, tuple)
+    new_params = jax.tree.map(lambda t: t[0], out, is_leaf=is_tup)
+    new_u = jax.tree.map(lambda t: t[1], out, is_leaf=is_tup)
+    return new_params, {"u": new_u}

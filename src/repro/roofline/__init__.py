@@ -1,0 +1,9 @@
+from repro.roofline.analysis import (  # noqa: F401
+    HBM_BW,
+    LINK_BW,
+    PEAK_FLOPS,
+    RooflineTerms,
+    active_params,
+    model_flops,
+    parse_collective_bytes,
+)

@@ -1,0 +1,136 @@
+"""Roofline analysis from compiled dry-run artifacts (no real hardware).
+
+Three terms per (arch x shape x mesh), in seconds:
+
+    compute    = HLO_FLOPs / (chips * peak_FLOPs)       [cost_analysis]
+    memory     = HLO_bytes / (chips * HBM_bw)           [cost_analysis]
+    collective = sum(collective op bytes) / (chips * link_bw)   [HLO text]
+
+cost_analysis() on an SPMD-partitioned executable reports *per-device*
+flops/bytes, so terms divide by per-chip peaks directly. Collective bytes are
+parsed from the optimized HLO: the result-shape bytes of every all-reduce /
+all-gather / reduce-scatter / all-to-all / collective-permute (per device).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+
+# TPU v5e per-chip constants (brief)
+PEAK_FLOPS = 197e12  # bf16
+HBM_BW = 819e9
+LINK_BW = 50e9
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# e.g.  "f32[8,128]{1,0}"  or  "(bf16[2,4]{1,0}, f32[8]{0})"
+_SHAPE_RE = re.compile(r"(\w+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def parse_collective_bytes(hlo_text: str) -> dict[str, int]:
+    """Sum result-shape bytes of every collective op in optimized HLO."""
+    out: dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        line = line.strip()
+        if "=" not in line:
+            continue
+        lhs, rhs = line.split("=", 1)
+        rhs = rhs.strip()
+        # result type is the prefix of rhs before the op name
+        for coll in _COLLECTIVES:
+            # match op name at word boundary followed by '(' or '-start('
+            m = re.search(rf"\b{coll}(-start|-done)?\(", rhs)
+            if m:
+                if m.group(1) == "-done":
+                    break  # counted at -start
+                type_prefix = rhs[: m.start()]
+                out[coll] += _shape_bytes(type_prefix)
+                break
+    out["total"] = sum(out[k] for k in _COLLECTIVES)
+    return out
+
+
+@dataclasses.dataclass
+class RooflineTerms:
+    flops: float
+    hlo_bytes: float
+    collective_bytes: float
+    chips: int
+    model_flops: float = 0.0
+    amortize: float = 1.0  # divide by H for the sync step
+
+    @property
+    def compute_s(self) -> float:
+        return self.flops / PEAK_FLOPS / self.amortize
+
+    @property
+    def memory_s(self) -> float:
+        return self.hlo_bytes / HBM_BW / self.amortize
+
+    @property
+    def collective_s(self) -> float:
+        return self.collective_bytes / LINK_BW / self.amortize
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        """MODEL_FLOPS / HLO_FLOPs (per-chip HLO flops x chips)."""
+        total_hlo = self.flops * self.chips
+        return self.model_flops / total_hlo if total_hlo else 0.0
+
+    def as_dict(self) -> dict:
+        return {
+            "flops_per_chip": self.flops,
+            "hlo_bytes_per_chip": self.hlo_bytes,
+            "collective_bytes_per_chip": self.collective_bytes,
+            "compute_s": self.compute_s,
+            "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "dominant": self.dominant,
+            "model_flops": self.model_flops,
+            "useful_flops_ratio": self.useful_flops_ratio,
+        }
+
+
+def model_flops(kind: str, n_active_params: float, tokens: float) -> float:
+    """6*N*D for train, 2*N*D for inference forward (per step, all chips)."""
+    if kind == "train":
+        return 6.0 * n_active_params * tokens
+    if kind in ("prefill", "decode"):
+        return 2.0 * n_active_params * tokens
+    return 0.0
+
+
+def active_params(cfg, total_params: float) -> float:
+    """MoE active params: replace routed-expert mass with top-k fraction."""
+    if not cfg.n_experts:
+        return total_params
+    # routed expert params per layer: 3 * d_model * d_ff per expert
+    routed = cfg.n_layers * cfg.n_experts * 3 * cfg.d_model * cfg.d_ff
+    active_routed = routed * (cfg.experts_per_token / cfg.n_experts)
+    return total_params - routed + active_routed

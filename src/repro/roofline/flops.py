@@ -1,0 +1,203 @@
+"""Analytic FLOP and HBM-traffic models, exact to the model code.
+
+XLA's ``cost_analysis()`` does not multiply while-loop (lax.scan) bodies by
+their trip count, so HLO FLOPs under-count scan-over-layers models by ~L.
+(Verified empirically; see tests/test_roofline.py which validates these
+formulas against *unrolled* HLO to within a few percent.) The roofline
+compute/memory terms therefore come from these closed-form models; the raw
+HLO numbers are recorded alongside for reference, and collective bytes are
+parsed from HLO with explicit loop-multiplicity correction.
+
+Conventions: a matmul [m,k]x[k,n] costs 2mkn; backward = 2x forward matmul
+cost; remat adds one extra forward through scanned blocks.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.models.common import ModelConfig
+
+
+def _attn_flops(cfg: ModelConfig, S: int, T: int, kv_len: int | None = None) -> float:
+    """Forward attention flops for T query tokens (seq len S context).
+
+    kv_len overrides context length (decode: cache length; sliding window)."""
+    hd = cfg.hd
+    H, KV = cfg.n_heads, cfg.n_kv_heads
+    d = cfg.d_model
+    ctx = kv_len if kv_len is not None else S
+    if cfg.sliding_window:
+        ctx = min(ctx, cfg.sliding_window)
+    proj = 2.0 * T * d * (H * hd) + 2.0 * 2.0 * T * d * (KV * hd) + 2.0 * T * (H * hd) * d
+    # scores + weighted sum; causal averaging ~ctx/2 for full-seq fwd
+    eff_ctx = ctx / 2.0 if (T == S and not cfg.sliding_window and kv_len is None) else ctx
+    scores = 2.0 * T * H * hd * eff_ctx * 2.0
+    return proj + scores
+
+
+def _mlp_flops(cfg: ModelConfig, T: int, d_ff: int | None = None) -> float:
+    ff = cfg.d_ff if d_ff is None else d_ff
+    mats = 3.0 if cfg.activation == "swiglu" else 2.0
+    return mats * 2.0 * T * cfg.d_model * ff
+
+
+def _moe_flops(cfg: ModelConfig, T: int) -> float:
+    router = 2.0 * T * cfg.d_model * cfg.n_experts
+    routed = cfg.experts_per_token * 3.0 * 2.0 * T * cfg.d_model * cfg.d_ff
+    shared = 0.0
+    if cfg.n_shared_experts:
+        shared = 3.0 * 2.0 * T * cfg.d_model * (cfg.d_ff * cfg.n_shared_experts)
+    return router + routed + shared
+
+
+def _ssm_flops(cfg: ModelConfig, T: int, decode: bool = False) -> float:
+    d, di, N, H, P, Q = (cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_heads,
+                         cfg.ssm_head_dim, cfg.ssm_chunk)
+    proj = 2.0 * T * d * (2 * di + 2 * N + H) + 2.0 * T * di * d
+    if decode:
+        core = T * H * P * N * 6.0  # state update + readout
+    else:
+        # chunked SSD: intra-chunk (CB^T QxQ, M*x) + states + off-diag
+        intra = 2.0 * T * Q * N + 2.0 * T * Q * H * P
+        states = 2.0 * T * N * H * P * 2.0
+        core = intra + states
+    return proj + core
+
+
+def _block_flops(cfg: ModelConfig, S: int, T: int, kv_len: int | None = None) -> float:
+    """One generic layer for each family (forward)."""
+    if cfg.arch_type in ("dense",):
+        return _attn_flops(cfg, S, T, kv_len) + _mlp_flops(cfg, T)
+    if cfg.arch_type == "moe":
+        return _attn_flops(cfg, S, T, kv_len) + _moe_flops(cfg, T)
+    if cfg.arch_type == "ssm":
+        return _ssm_flops(cfg, T, decode=(T < S))
+    raise ValueError(cfg.arch_type)
+
+
+def forward_flops(cfg: ModelConfig, S: int, B: int, T: int | None = None,
+                  kv_len: int | None = None) -> float:
+    """Forward flops for B sequences; T = query tokens per sequence
+    (T=S for train/prefill, T=1 for decode)."""
+    T = S if T is None else T
+    tokens = float(B * T)
+    head = 2.0 * tokens * cfg.d_model * cfg.vocab if T == S or T == 1 else 0.0
+    if T == 1:
+        head = 2.0 * B * cfg.d_model * cfg.vocab
+
+    if cfg.arch_type in ("dense", "moe"):
+        per_layer = _block_flops(cfg, S, tokens, kv_len)
+        return cfg.n_layers * per_layer + head
+    if cfg.arch_type == "ssm":
+        return cfg.n_layers * _ssm_flops(cfg, tokens, decode=(T == 1)) + head
+    if cfg.arch_type == "hybrid":
+        n_super = cfg.n_layers // cfg.hybrid_period
+        mamba = cfg.n_layers * _ssm_flops(cfg, tokens, decode=(T == 1))
+        attn_ctx = kv_len if T == 1 else None
+        shared = n_super * (_attn_flops(cfg, S, tokens, attn_ctx) + _mlp_flops(cfg, tokens))
+        return mamba + shared + head
+    if cfg.arch_type == "audio":
+        Le = cfg.n_encoder_layers or cfg.n_layers
+        F = cfg.n_audio_frames
+        ftoks = float(B * F)
+        enc = Le * (_attn_flops(cfg.replace(sliding_window=0), F, ftoks) + _mlp_flops(cfg, ftoks))
+        if T == 1:
+            enc = 0.0  # encoder runs once per request, not per decode step
+        dec_self = cfg.n_layers * _attn_flops(cfg, S, tokens, kv_len)
+        cross_kv = 0.0 if T == 1 else cfg.n_layers * 2.0 * 2.0 * ftoks * cfg.d_model * (cfg.n_kv_heads * cfg.hd)
+        dec_cross = cfg.n_layers * (2.0 * tokens * cfg.d_model * (cfg.n_heads * cfg.hd)
+                                    + 2.0 * tokens * cfg.n_heads * cfg.hd * F * 2.0
+                                    + 2.0 * tokens * (cfg.n_heads * cfg.hd) * cfg.d_model)
+        dec_mlp = cfg.n_layers * _mlp_flops(cfg, tokens)
+        return enc + dec_self + cross_kv + dec_cross + dec_mlp + head
+    if cfg.arch_type == "vlm":
+        ns = cfg.n_layers // cfg.vlm_period
+        n_self = cfg.n_layers - ns
+        I = cfg.n_image_tokens
+        itoks = float(B * I)
+        self_l = n_self * (_attn_flops(cfg, S, tokens, kv_len) + _mlp_flops(cfg, tokens))
+        cross_kv = 0.0 if T == 1 else ns * 2.0 * 2.0 * itoks * cfg.d_model * (cfg.n_kv_heads * cfg.hd)
+        cross = ns * (2.0 * tokens * cfg.d_model * (cfg.n_heads * cfg.hd)
+                      + 2.0 * tokens * cfg.n_heads * cfg.hd * I * 2.0
+                      + 2.0 * tokens * (cfg.n_heads * cfg.hd) * cfg.d_model
+                      + _mlp_flops(cfg, tokens))
+        proj = 2.0 * itoks * cfg.d_model * cfg.d_model if T != 1 else 0.0
+        return self_l + cross_kv + cross + proj + head
+    raise ValueError(cfg.arch_type)
+
+
+def newton_schulz_flops(m: int, n: int, iters: int = 5) -> float:
+    """Per NS orthogonalization of an [m, n] matrix (m <= n after transpose)."""
+    a = min(m, n)
+    b = max(m, n)
+    per_iter = 2.0 * a * a * b + 2.0 * a * a * a + 2.0 * a * a * b  # XX^T, A@A, B@X
+    return iters * per_iter
+
+
+def optimizer_flops(params_tree, inner_name: str) -> float:
+    """Per-step optimizer flops across the whole parameter tree."""
+    import jax
+
+    from repro.optim.muon import muon_label
+    from repro.utils.tree import tree_leaves_with_paths
+
+    total = 0.0
+    for path, leaf in tree_leaves_with_paths(params_tree):
+        size = 1
+        for d in leaf.shape:
+            size *= int(d)
+        if inner_name == "muon" and muon_label(path, leaf) == "muon":
+            *batch, m, n = leaf.shape
+            nb = 1
+            for d in batch:
+                nb *= int(d)
+            total += nb * newton_schulz_flops(int(m), int(n)) + 6.0 * size
+        else:
+            total += 12.0 * size  # adamw elementwise
+    return total
+
+
+@dataclasses.dataclass
+class StepFlops:
+    forward: float
+    backward: float
+    optimizer: float
+    remat_extra: float
+
+    @property
+    def total(self) -> float:
+        return self.forward + self.backward + self.optimizer + self.remat_extra
+
+
+def train_step_flops(cfg: ModelConfig, S: int, B: int, params_tree, inner_name: str) -> StepFlops:
+    fwd = forward_flops(cfg, S, B)
+    bwd = 2.0 * fwd
+    remat = fwd if cfg.remat else 0.0
+    opt = optimizer_flops(params_tree, inner_name)
+    return StepFlops(fwd, bwd, opt, remat)
+
+
+# ---------------------------------------------------------------------------
+# HBM traffic (per chip, per step)
+# ---------------------------------------------------------------------------
+
+
+def hbm_bytes(kind: str, *, param_bytes_chip: float, opt_state_bytes_chip: float,
+              act_bytes_chip: float, cache_bytes_chip: float = 0.0) -> float:
+    """Coarse per-chip HBM traffic model.
+
+    train:   read params (fwd + bwd + remat fwd ~ 3x), read+write opt state,
+             write grads + activations ~ 2x act
+    prefill: read params once + activation traffic
+    decode:  read params + read full cache + small writes  (bandwidth-bound)
+    """
+    if kind == "train":
+        return 3.0 * param_bytes_chip + 2.0 * opt_state_bytes_chip + 2.0 * act_bytes_chip
+    if kind == "prefill":
+        return param_bytes_chip + 2.0 * act_bytes_chip
+    if kind == "decode":
+        return param_bytes_chip + cache_bytes_chip + act_bytes_chip
+    if kind == "sync":
+        # outer step touches outer params + u + worker deltas (+EF)
+        return 4.0 * param_bytes_chip + opt_state_bytes_chip
+    raise ValueError(kind)

@@ -1,0 +1,157 @@
+"""Loop-multiplicity-aware HLO collective accounting.
+
+XLA prints each while-loop body once, but the collectives inside execute
+trip-count times per step. This parser:
+
+  1. splits optimized HLO text into named computations,
+  2. finds `while` ops and extracts trip counts from their condition
+     computations (the `constant(N)` bound of the induction-variable compare),
+  3. walks the call graph from ENTRY, multiplying collective bytes by the
+     product of enclosing trip counts.
+
+Used for the roofline collective term; the flat (uncorrected) sums are kept
+for comparison. Heuristic trip-count extraction (max int constant in the
+cond computation) is exact for lax.scan-lowered loops, which is all we emit.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([0-9,]*)\]")
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s4": 1, "u4": 1, "s16": 2, "u16": 2,
+    "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16,
+}
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclass
+class Computation:
+    name: str
+    lines: list[str] = field(default_factory=list)
+    collective_bytes: dict[str, int] = field(default_factory=dict)
+    whiles: list[tuple[str, str]] = field(default_factory=list)  # (body, cond)
+    calls: list[str] = field(default_factory=list)
+
+
+def _split_computations(hlo: str) -> dict[str, Computation]:
+    comps: dict[str, Computation] = {}
+    cur: Computation | None = None
+    entry_name = None
+    for raw in hlo.splitlines():
+        line = raw.rstrip()
+        m = re.match(r"^(ENTRY\s+)?%?([\w.\-]+)\s*(?:\([^)]*\))?.*\{\s*$", line)
+        if m and not line.startswith(" "):
+            cur = Computation(name=m.group(2))
+            comps[cur.name] = cur
+            if m.group(1):
+                entry_name = cur.name
+            continue
+        if line.startswith("}"):
+            cur = None
+            continue
+        if cur is not None:
+            cur.lines.append(line)
+    if entry_name:
+        comps["__entry__"] = comps[entry_name]
+    return comps
+
+
+def _analyze(comp: Computation) -> None:
+    for line in comp.lines:
+        s = line.strip()
+        if "=" not in s:
+            continue
+        lhs, rhs = s.split("=", 1)
+        rhs = rhs.strip()
+        wm = re.search(r"\bwhile\(.*?\)", rhs)
+        if wm and "condition=" in rhs and "body=" in rhs:
+            body = re.search(r"body=%?([\w.\-]+)", rhs)
+            cond = re.search(r"condition=%?([\w.\-]+)", rhs)
+            if body and cond:
+                comp.whiles.append((body.group(1), cond.group(1)))
+            continue
+        cm = re.search(r"\bcall\(.*?\)", rhs)
+        if cm:
+            to = re.search(r"to_apply=%?([\w.\-]+)", rhs)
+            if to:
+                comp.calls.append(to.group(1))
+        for coll in _COLLECTIVES:
+            m = re.search(rf"\b{coll}(-start|-done)?\(", rhs)
+            if m:
+                if m.group(1) == "-done":
+                    break
+                comp.collective_bytes[coll] = (
+                    comp.collective_bytes.get(coll, 0) + _shape_bytes(rhs[: m.start()])
+                )
+                break
+
+
+def _trip_count(cond: Computation) -> int:
+    """Max int constant in the condition computation (exact for lax.scan)."""
+    best = 1
+    for line in cond.lines:
+        for m in re.finditer(r"constant\((\d+)\)", line):
+            best = max(best, int(m.group(1)))
+    return best
+
+
+def collective_bytes_corrected(hlo: str) -> dict[str, int]:
+    comps = _split_computations(hlo)
+    for c in {id(c): c for c in comps.values()}.values():  # dedupe __entry__ alias
+        _analyze(c)
+    entry = comps.get("__entry__")
+    totals: dict[str, float] = {k: 0.0 for k in _COLLECTIVES}
+    flat: dict[str, float] = {k: 0.0 for k in _COLLECTIVES}
+
+    for key, c in comps.items():
+        if key == "__entry__":  # alias of the entry computation
+            continue
+        for k, v in c.collective_bytes.items():
+            flat[k] += v
+
+    seen: set[tuple[str, int]] = set()
+
+    def walk(comp: Computation, mult: int, depth: int = 0):
+        if depth > 16:
+            return
+        key = (comp.name, mult)
+        if key in seen:
+            return
+        seen.add(key)
+        for k, v in comp.collective_bytes.items():
+            totals[k] += v * mult
+        for body, cond in comp.whiles:
+            trip = _trip_count(comps[cond]) if cond in comps else 1
+            if body in comps:
+                walk(comps[body], mult * max(trip, 1), depth + 1)
+        for callee in comp.calls:
+            if callee in comps:
+                walk(comps[callee], mult, depth + 1)
+
+    if entry is not None:
+        walk(entry, 1)
+    else:  # fallback: flat counting
+        totals = dict(flat)
+
+    out = {k: int(v) for k, v in totals.items()}
+    out["total"] = int(sum(totals.values()))
+    out["flat_total"] = int(sum(flat.values()))
+    return out

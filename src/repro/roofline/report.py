@@ -1,0 +1,107 @@
+"""Generate the EXPERIMENTS.md §Dry-run / §Roofline tables from the dry-run
+JSON records.
+
+    PYTHONPATH=src python -m repro.roofline.report --dryrun results/dryrun
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+
+
+def load_records(dryrun_dir: str) -> list[dict]:
+    recs = []
+    for path in sorted(glob.glob(f"{dryrun_dir}/*.json")):
+        recs.extend(json.load(open(path)))
+    return recs
+
+
+def _fmt_bytes(b: float) -> str:
+    return f"{b / 2**30:.2f}"
+
+
+def roofline_table(recs: list[dict], mesh: str = "16x16") -> str:
+    """Single-pod baseline roofline table, one row per (arch, shape, plan)."""
+    lines = [
+        "| arch | shape | plan | compute s | memory s | collective s | dominant | useful | peak GiB/chip |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in sorted(recs, key=lambda r: (r["arch"], r["shape"], r.get("plan", ""))):
+        if r["mesh"] != mesh:
+            continue
+        if r["status"] == "skipped":
+            lines.append(f"| {r['arch']} | {r['shape']} | — | — | — | — | SKIP | — | — |")
+            continue
+        if r["status"] != "ok":
+            lines.append(f"| {r['arch']} | {r['shape']} | {r.get('plan')} | FAIL | | | | | |")
+            continue
+        t = r["roofline"]
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['plan']} | {t['compute_s']:.2e} | "
+            f"{t['memory_s']:.2e} | {t['collective_s']:.2e} | **{t['dominant']}** | "
+            f"{t['useful_flops_ratio']:.2f} | {r['memory']['peak_per_chip_gib']} |"
+        )
+    return "\n".join(lines)
+
+
+def dryrun_table(recs: list[dict]) -> str:
+    lines = [
+        "| arch | shape | plan | mesh | compile s | args GiB | temp GiB | collective GiB (loop-corrected / flat) |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for r in sorted(recs, key=lambda r: (r["arch"], r["shape"], r["mesh"], r.get("plan", ""))):
+        if r["status"] == "skipped":
+            lines.append(f"| {r['arch']} | {r['shape']} | — | {r['mesh']} | SKIP | | | {r['reason']} |")
+            continue
+        if r["status"] != "ok":
+            lines.append(f"| {r['arch']} | {r['shape']} | {r.get('plan')} | {r['mesh']} | FAIL | | | {r['error'][:80]} |")
+            continue
+        m = r["memory"]
+        c = r["collectives"]
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['plan']} | {r['mesh']} | {r['compile_s']} | "
+            f"{_fmt_bytes(m['argument_bytes'])} | {_fmt_bytes(m['temp_bytes'])} | "
+            f"{_fmt_bytes(c['total'])} / {_fmt_bytes(c.get('flat_total', 0))} |"
+        )
+    return "\n".join(lines)
+
+
+def summarize_bottlenecks(recs: list[dict]) -> str:
+    ok = [r for r in recs if r["status"] == "ok" and r["mesh"] == "16x16"]
+    by_dom: dict[str, int] = {}
+    worst = []
+    for r in ok:
+        t = r["roofline"]
+        by_dom[t["dominant"]] = by_dom.get(t["dominant"], 0) + 1
+        dom_s = max(t["compute_s"], t["memory_s"], t["collective_s"])
+        frac = t["compute_s"] / dom_s if dom_s else 0.0
+        worst.append((frac, f"{r['arch']}/{r['shape']}/{r['plan']}", t["dominant"]))
+    worst.sort()
+    lines = [f"Dominant-term census (single pod): {by_dom}", "",
+             "Worst roofline fraction (compute_s / dominant_s — lower = further from compute-bound):"]
+    for frac, name, dom in worst[:8]:
+        lines.append(f"  {frac:8.4f}  {name}  (bound by {dom})")
+    return "\n".join(lines)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dryrun", default="results/dryrun")
+    ap.add_argument("--what", default="all", choices=["all", "roofline", "dryrun", "summary"])
+    args = ap.parse_args()
+    recs = load_records(args.dryrun)
+    if args.what in ("all", "summary"):
+        print(summarize_bottlenecks(recs))
+        print()
+    if args.what in ("all", "roofline"):
+        print("### Roofline (single-pod 16x16 baseline)\n")
+        print(roofline_table(recs))
+        print()
+    if args.what in ("all", "dryrun"):
+        print("### Dry-run records (both meshes)\n")
+        print(dryrun_table(recs))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,124 @@
+"""Pytree utilities used across the framework.
+
+Everything here is jit-safe and works on arbitrary pytrees of arrays.
+Paths follow ``jax.tree_util.keystr`` ("/a/b/0/c" style) so optimizer
+partition rules and streaming-partition masks can match on names.
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax import tree_util as jtu
+
+PyTree = Any
+
+
+def path_str(path) -> str:
+    """Render a jax key path as 'a/b/0/c'."""
+    parts = []
+    for p in path:
+        if isinstance(p, jtu.DictKey):
+            parts.append(str(p.key))
+        elif isinstance(p, jtu.SequenceKey):
+            parts.append(str(p.idx))
+        elif isinstance(p, jtu.GetAttrKey):
+            parts.append(str(p.name))
+        else:  # pragma: no cover - future key types
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def tree_map_with_path(fn: Callable[[str, jax.Array], Any], tree: PyTree) -> PyTree:
+    """Map ``fn(path_string, leaf)`` over a pytree."""
+    return jtu.tree_map_with_path(lambda p, x: fn(path_str(p), x), tree)
+
+
+def tree_paths(tree: PyTree) -> list[str]:
+    flat, _ = jtu.tree_flatten_with_path(tree)
+    return [path_str(p) for p, _ in flat]
+
+
+def tree_leaves_with_paths(tree: PyTree) -> list[tuple[str, jax.Array]]:
+    flat, _ = jtu.tree_flatten_with_path(tree)
+    return [(path_str(p), x) for p, x in flat]
+
+
+def tree_zeros_like(tree: PyTree, dtype=None) -> PyTree:
+    return jax.tree.map(lambda x: jnp.zeros(x.shape, dtype or x.dtype), tree)
+
+
+def tree_add(a: PyTree, b: PyTree) -> PyTree:
+    return jax.tree.map(jnp.add, a, b)
+
+
+def tree_sub(a: PyTree, b: PyTree) -> PyTree:
+    return jax.tree.map(jnp.subtract, a, b)
+
+
+def tree_scale(a: PyTree, s) -> PyTree:
+    return jax.tree.map(lambda x: x * s, a)
+
+
+def tree_axpy(alpha, x: PyTree, y: PyTree) -> PyTree:
+    """alpha * x + y, leafwise."""
+    return jax.tree.map(lambda xi, yi: alpha * xi + yi, x, y)
+
+
+def tree_dot(a: PyTree, b: PyTree) -> jax.Array:
+    parts = jax.tree.map(lambda x, y: jnp.vdot(x.astype(jnp.float32), y.astype(jnp.float32)), a, b)
+    return jax.tree.reduce(jnp.add, parts, jnp.float32(0.0))
+
+
+def tree_norm(a: PyTree) -> jax.Array:
+    return jnp.sqrt(tree_dot(a, a))
+
+
+def tree_cosine(a: PyTree, b: PyTree, eps: float = 1e-12) -> jax.Array:
+    return tree_dot(a, b) / (tree_norm(a) * tree_norm(b) + eps)
+
+
+def tree_count_params(tree: PyTree) -> int:
+    """Total number of elements (python int; works on ShapeDtypeStructs too)."""
+    total = 0
+    for leaf in jax.tree.leaves(tree):
+        n = 1
+        for d in leaf.shape:
+            n *= int(d)
+        total += n
+    return total
+
+
+def tree_bytes(tree: PyTree) -> int:
+    total = 0
+    for leaf in jax.tree.leaves(tree):
+        n = 1
+        for d in leaf.shape:
+            n *= int(d)
+        total += n * jnp.dtype(leaf.dtype).itemsize
+    return total
+
+
+def tree_select(mask_tree: PyTree, a: PyTree, b: PyTree) -> PyTree:
+    """Leafwise where(mask, a, b); mask leaves are scalars or broadcastable bools."""
+    return jax.tree.map(lambda m, x, y: jnp.where(m, x, y), mask_tree, a, b)
+
+
+def tree_filter_paths(tree: PyTree, pattern: str) -> PyTree:
+    """Boolean (python) mask tree: True where path matches the regex."""
+    rx = re.compile(pattern)
+    return tree_map_with_path(lambda p, x: bool(rx.search(p)), tree)
+
+
+def tree_cast(tree: PyTree, dtype) -> PyTree:
+    return jax.tree.map(lambda x: x.astype(dtype) if jnp.issubdtype(x.dtype, jnp.floating) else x, tree)
+
+
+def tree_all_finite(tree: PyTree) -> jax.Array:
+    parts = [jnp.all(jnp.isfinite(x)) for x in jax.tree.leaves(tree)
+             if jnp.issubdtype(jnp.asarray(x).dtype, jnp.floating)]
+    if not parts:
+        return jnp.bool_(True)
+    return jnp.stack(parts).all()

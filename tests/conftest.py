@@ -1,0 +1,12 @@
+import jax
+import pytest
+
+# Tests run on the single CPU device (the dry-run's 512-device world is
+# exercised via tests/test_dryrun_small.py with a small forced device count
+# in a subprocess, never here — see the brief).
+jax.config.update("jax_enable_x64", False)
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return jax.random.PRNGKey(0)

@@ -1,0 +1,82 @@
+"""Per-kernel shape/dtype sweeps against the ref.py pure-jnp oracles."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+
+@pytest.mark.parametrize("m,k,n", [(128, 128, 128), (200, 300, 130), (64, 512, 96), (1, 128, 1)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_matmul_epilogue(m, k, n, dtype):
+    key = jax.random.PRNGKey(m * 1000 + k + n)
+    a = jax.random.normal(key, (m, k), dtype)
+    b = jax.random.normal(jax.random.fold_in(key, 1), (k, n), dtype)
+    d = jax.random.normal(jax.random.fold_in(key, 2), (m, n), dtype)
+    out = ops.matmul(a, b, d, alpha=1.5, beta=-0.25)
+    exp = ref.matmul_epilogue_ref(a, b, d, alpha=1.5, beta=-0.25)
+    tol = 1e-4 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32), np.asarray(exp, np.float32),
+                               rtol=tol, atol=tol * 10)
+
+
+@pytest.mark.parametrize("shape", [(64, 64), (96, 160), (160, 96), (3, 48, 32)])
+def test_ns_orthogonalize_vs_ref(shape):
+    g = jax.random.normal(jax.random.PRNGKey(0), shape, jnp.float32)
+    out = ops.ns_orthogonalize(g)
+    exp = ref.ns_orthogonalize_ref(g)
+    np.testing.assert_allclose(np.asarray(out, np.float32), np.asarray(exp, np.float32),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_ns_singular_value_band():
+    """NS output singular values land in the quintic's convergence band."""
+    g = jax.random.normal(jax.random.PRNGKey(1), (64, 256), jnp.float32)
+    o = ops.ns_orthogonalize(g).astype(jnp.float32)
+    s = jnp.linalg.svd(o, compute_uv=False)
+    assert float(s.min()) > 0.3 and float(s.max()) < 1.6
+
+
+@pytest.mark.parametrize("m,n", [(8, 128), (37, 257), (16, 16), (1, 64)])
+@pytest.mark.parametrize("bits", [2, 4, 8])
+def test_rowwise_quantize(m, n, bits):
+    x = jax.random.normal(jax.random.PRNGKey(m + n + bits), (m, n), jnp.float32) * 3
+    deq, codes, lo, scale = ops.quantize_rowwise(x, bits=bits)
+    deq2, codes2, lo2, scale2 = ref.rowwise_quantize_ref(x, bits)
+    # fp round-ties may flip isolated entries by one level between the kernel
+    # and the oracle; require <0.2% such entries and everything else exact.
+    diff = np.abs(np.asarray(deq) - np.asarray(deq2))
+    level = np.asarray((jnp.max(x, 1, keepdims=True) - jnp.min(x, 1, keepdims=True))) / ((1 << bits) - 1)
+    assert (diff > 1e-5).mean() < 0.002
+    assert bool((diff <= level * 1.01 + 1e-6).all())
+    assert float(jnp.mean((codes != codes2).astype(jnp.float32))) < 0.002
+    # reconstruction error bounded by half a level per entry
+    nlevels = (1 << bits) - 1
+    err = jnp.abs(deq - x)
+    bound = (jnp.max(x, axis=1, keepdims=True) - jnp.min(x, axis=1, keepdims=True)) / nlevels
+    assert bool(jnp.all(err <= bound * 0.5 + 1e-6))
+
+
+@pytest.mark.parametrize("shape", [(13, 77), (1024,), (3, 5, 7)])
+def test_fused_nesterov(shape):
+    key = jax.random.PRNGKey(7)
+    th = jax.random.normal(key, shape)
+    ps = jax.random.normal(jax.random.fold_in(key, 1), shape)
+    u = jax.random.normal(jax.random.fold_in(key, 2), shape)
+    t1, u1 = ops.nesterov_update(th, ps, u, lr=0.7, momentum=0.9)
+    t2, u2 = ref.nesterov_update_ref(th, ps, u, lr=0.7, momentum=0.9)
+    np.testing.assert_allclose(np.asarray(t1), np.asarray(t2), rtol=1e-6, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(u1), np.asarray(u2), rtol=1e-6, atol=1e-6)
+
+
+def test_pallas_ns_inside_muon_step():
+    """ns_impl='pallas' is usable as the Muon backend end to end."""
+    from repro.optim import OptimizerConfig, muon
+
+    params = {"w": jnp.ones((24, 40)), "embed": jnp.ones((8, 4))}
+    opt = muon(OptimizerConfig(lr=1e-2), ns_impl="pallas")
+    st = opt.init(params)
+    g = jax.tree.map(lambda p: p * 0.1, params)
+    p2, _ = jax.jit(opt.step)(params, g, st)
+    assert np.isfinite(np.asarray(p2["w"])).all()

@@ -1,0 +1,146 @@
+"""Hypothesis property tests over the system's invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.analysis import (
+    interference_gap,
+    nuclear_norm,
+    orthonormal_factor,
+    prop42_nuclear_identity,
+)
+from repro.core.compression import (
+    CompressionConfig,
+    ef_compress_tree,
+    quantize_linear,
+    quantize_statistical,
+    topk_sparsify,
+)
+from repro.optim.muon import newton_schulz
+
+SETTINGS = dict(max_examples=20, deadline=None)
+
+
+def _arr(key, shape, scale=1.0):
+    return jax.random.normal(jax.random.PRNGKey(key), shape) * scale
+
+
+@settings(**SETTINGS)
+@given(st.integers(0, 10_000), st.integers(2, 6), st.integers(1, 4),
+       st.sampled_from([(8, 12), (16, 16), (12, 8)]))
+def test_prop42_nuclear_norm_identity(seed, H, K, mn):
+    """Proposition 4.2 is an exact identity for ANY step matrices."""
+    m, n = mn
+    steps = _arr(seed, (K, H, m, n))
+    alphas = jnp.abs(_arr(seed + 1, (H,))) + 0.01
+    lhs, rhs = prop42_nuclear_identity(steps, alphas)
+    np.testing.assert_allclose(float(lhs), float(rhs), rtol=1e-4)
+
+
+@settings(**SETTINGS)
+@given(st.integers(0, 10_000), st.sampled_from([(16, 16), (8, 24), (24, 8)]))
+def test_corollary43_muon_nuclear_norm(seed, mn):
+    """For orthonormal steps, ||Psi||_* = (r/K) sum rho*alpha (Cor. 4.3)."""
+    m, n = mn
+    r = min(m, n)
+    K, H = 2, 3
+    raw = _arr(seed, (K, H, m, n))
+    steps = jnp.stack([jnp.stack([orthonormal_factor(raw[k, h]) for h in range(H)])
+                       for k in range(K)])
+    alphas = jnp.ones((H,))
+    psi = jnp.einsum("h,khmn->mn", alphas, steps) / K
+    psi_star = orthonormal_factor(psi)
+    rho = jnp.stack([jnp.stack([
+        jnp.sum(steps[k, h] * psi_star) / (jnp.sqrt(jnp.float32(r)) * jnp.sqrt(jnp.float32(r)))
+        for h in range(H)]) for k in range(K)])
+    rhs = r / K * jnp.sum(rho * alphas[None])
+    np.testing.assert_allclose(float(nuclear_norm(psi)), float(rhs), rtol=1e-4)
+
+
+@settings(**SETTINGS)
+@given(st.integers(0, 10_000), st.floats(0.05, 0.9))
+def test_topk_keeps_exactly_k_largest(seed, frac):
+    x = _arr(seed, (23, 31))
+    out = topk_sparsify(x, frac)
+    k = max(int(round(frac * x.size)), 1)
+    nz = int(jnp.sum(out != 0))
+    assert nz <= k  # ties / exact zeros can only reduce the count
+    # every kept entry is >= every dropped entry in magnitude
+    kept = jnp.abs(out[out != 0])
+    dropped_mask = (out == 0) & (x != 0)
+    if int(jnp.sum(dropped_mask)) and nz:
+        assert float(kept.min()) >= float(jnp.abs(jnp.where(dropped_mask, x, 0)).max()) - 1e-6
+
+
+@settings(**SETTINGS)
+@given(st.integers(0, 10_000), st.sampled_from([2, 4, 8]), st.booleans())
+def test_linear_quant_error_bound(seed, bits, rowwise):
+    x = _arr(seed, (9, 17), scale=3.0)
+    out = quantize_linear(x, bits, rowwise)
+    nlevels = (1 << bits) - 1
+    if rowwise:
+        rng = (jnp.max(x, 1, keepdims=True) - jnp.min(x, 1, keepdims=True))
+    else:
+        rng = jnp.max(x) - jnp.min(x)
+    assert bool(jnp.all(jnp.abs(out - x) <= rng / nlevels * 0.5 + 1e-5))
+
+
+@settings(**SETTINGS)
+@given(st.integers(0, 10_000), st.sampled_from([2, 4]))
+def test_statistical_quant_uses_codebook_levels(seed, bits):
+    x = _arr(seed, (6, 40))
+    out = quantize_statistical(x, bits)
+    levels = jnp.unique(out)
+    assert levels.size <= (1 << bits)
+
+
+@settings(**SETTINGS)
+@given(st.integers(0, 10_000))
+def test_error_feedback_conservation(seed):
+    """With ef_decay=1: communicated + residual == accumulated deltas."""
+    cfg = CompressionConfig(kind="topk", topk_frac=0.3, error_feedback=True, ef_decay=1.0)
+    delta = {"a": _arr(seed, (8, 8)), "b": _arr(seed + 1, (5, 7))}
+    residual = {"a": _arr(seed + 2, (8, 8), 0.1), "b": jnp.zeros((5, 7))}
+    comm, new_res = ef_compress_tree(delta, residual, cfg)
+    for k in delta:
+        acc = residual[k] + delta[k]
+        np.testing.assert_allclose(np.asarray(comm[k] + new_res[k]), np.asarray(acc),
+                                   rtol=1e-5, atol=1e-6)
+
+
+@settings(**SETTINGS)
+@given(st.integers(0, 10_000), st.sampled_from([(16, 48), (32, 32), (48, 16)]))
+def test_newton_schulz_singular_band_and_direction(seed, mn):
+    """NS output: singular values in the quintic band; top singular direction
+    preserved."""
+    m, n = mn
+    g = _arr(seed, (m, n))
+    o = newton_schulz(g).astype(jnp.float32)
+    s = jnp.linalg.svd(o, compute_uv=False)
+    # 5 quintic iterations pull singular values into ~[0.1, 1.7] (small
+    # trailing values converge slowest for near-singular inputs)
+    assert 0.05 < float(s.min()) and float(s.max()) < 1.7
+    # alignment with the true orthonormal factor is high
+    star = orthonormal_factor(g)
+    cos = float(jnp.sum(o * star) / (jnp.linalg.norm(o) * jnp.linalg.norm(star)))
+    assert cos > 0.95
+
+
+@settings(**SETTINGS)
+@given(st.integers(0, 10_000), st.integers(2, 6))
+def test_interference_gap_nonnegative(seed, K):
+    """G_S >= 0 (Def. 4.1: averaging cannot create spectral mass)."""
+    mats = _arr(seed, (K, 12, 12))
+    g = interference_gap(mats, s_frac=0.3)
+    assert float(g) >= -1e-4
+
+
+@settings(**SETTINGS)
+@given(st.integers(0, 10_000))
+def test_identical_workers_zero_interference(seed):
+    one = _arr(seed, (1, 10, 10))
+    mats = jnp.broadcast_to(one, (4, 10, 10))
+    g = interference_gap(mats, s_frac=0.5)
+    np.testing.assert_allclose(float(g), 0.0, atol=1e-4)

@@ -1,0 +1,168 @@
+"""Data pipeline, checkpointing, scaling laws, wallclock model, roofline
+parsers, streaming masks — the supporting substrate."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import load_checkpoint, save_checkpoint
+from repro.core.scaling_laws import (
+    fit_power_law,
+    iso_loss_time_ratio,
+    optimal_and_critical_batch,
+)
+from repro.core.wallclock import HardwareModel, RunSpec, compute_utilization, training_time_hours
+from repro.data import DataConfig, MarkovStream, batches_for_round
+from repro.roofline.analysis import RooflineTerms, parse_collective_bytes
+from repro.roofline.hlo import collective_bytes_corrected
+
+
+def test_data_deterministic_and_sharded():
+    cfg = DataConfig(vocab=64, seq_len=16, batch_per_worker=2, n_workers=3, seed=7)
+    s1, s2 = MarkovStream(cfg), MarkovStream(cfg)
+    b1, b2 = s1.batch(5), s2.batch(5)
+    np.testing.assert_array_equal(np.asarray(b1["tokens"]), np.asarray(b2["tokens"]))
+    assert b1["tokens"].shape == (3, 2, 16)
+    # labels are next tokens
+    np.testing.assert_array_equal(np.asarray(b1["labels"][..., :-1]),
+                                  np.asarray(b1["tokens"][..., 1:]))
+    # different workers get different data
+    assert not np.array_equal(np.asarray(b1["tokens"][0]), np.asarray(b1["tokens"][1]))
+    # different steps differ
+    assert not np.array_equal(np.asarray(s1.batch(6)["tokens"]), np.asarray(b1["tokens"]))
+
+
+def test_data_has_learnable_structure():
+    """Chain entropy floor is far below uniform -> the data is learnable."""
+    cfg = DataConfig(vocab=256, branching=8)
+    s = MarkovStream(cfg)
+    assert s.entropy_floor_nats() < 0.5 * np.log(cfg.vocab)
+
+
+def test_round_batches_shape():
+    cfg = DataConfig(vocab=64, seq_len=16, batch_per_worker=2, n_workers=2)
+    s = MarkovStream(cfg)
+    b = batches_for_round(s, 0, 4)
+    assert b["tokens"].shape == (4, 2, 2, 16)
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {"a": jnp.arange(6).reshape(2, 3).astype(jnp.float32),
+            "b": {"c": jnp.ones((4,), jnp.bfloat16), "d": jnp.int32(7)}}
+    path = os.path.join(tmp_path, "ckpt.npz")
+    save_checkpoint(path, tree, step=42)
+    restored, step = load_checkpoint(path, tree)
+    assert step == 42
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        assert a.dtype == b.dtype
+
+
+def test_checkpoint_structure_mismatch_raises(tmp_path):
+    path = os.path.join(tmp_path, "c.npz")
+    save_checkpoint(path, {"a": jnp.ones(3)})
+    with pytest.raises(ValueError):
+        load_checkpoint(path, {"zz": jnp.ones(3)})
+
+
+def test_power_law_fit_recovers_parameters():
+    C = np.logspace(18, 22, 8)
+    L = 5e3 * C ** -0.2 + 1.7
+    fit = fit_power_law(C, L, irr=1.7, restarts=32)
+    assert abs(fit.alpha + 0.2) < 0.01
+    assert abs(fit.a / 5e3 - 1) < 0.05
+
+
+def test_optimal_and_critical_batch():
+    batches = [32, 64, 128, 256, 512, 1024]
+    # loss min at 128, rises past it
+    losses = [3.2, 3.05, 3.0, 3.01, 3.02, 3.2]
+    b_opt, b_crit = optimal_and_critical_batch(batches, losses, tol=0.01)
+    assert b_opt == 128
+    assert 512 <= b_crit <= 1024
+
+
+def test_iso_loss_ratio_decomposition():
+    from repro.core.scaling_laws import PowerLawFit
+
+    ref_loss = PowerLawFit(a=6e3, alpha=-0.19, irr=1.7, objective=0)
+    m_loss = PowerLawFit(a=6e3, alpha=-0.20, irr=1.7, objective=0)
+    ref_cbs = PowerLawFit(a=1e3, alpha=0.3, irr=0, objective=0)
+    m_cbs = PowerLawFit(a=2e3, alpha=0.35, irr=0, objective=0)
+    out = iso_loss_time_ratio(ref_loss, ref_cbs, m_loss, m_cbs, target_loss=2.2)
+    np.testing.assert_allclose(out["time_ratio"],
+                               out["compute_savings"] * out["parallelism_advantage"],
+                               rtol=1e-6)
+    assert out["time_ratio"] > 1.0  # better exponent + bigger CBS -> faster
+
+
+def test_wallclock_diloco_beats_dp_at_low_bandwidth():
+    """Paper Fig. 16/Tab. 10: communication-efficient training dominates at
+    10 Gbit/s; the gap shrinks at datacenter bandwidth."""
+    base = dict(n_params=15e9, n_active_params=15e9, batch_tokens=4e6,
+                seq_len=2048, n_steps=10_000)
+    dp = RunSpec(**base, sync_interval=1)
+    diloco = RunSpec(**base, sync_interval=30, n_workers=16)
+    lo, hi = 10e9, 12_800e9
+    assert training_time_hours(diloco, lo) < 0.2 * training_time_hours(dp, lo)
+    ratio_hi = training_time_hours(diloco, hi) / training_time_hours(dp, hi)
+    assert 0.9 < ratio_hi <= 1.0
+    assert compute_utilization(diloco, lo) > compute_utilization(dp, lo)
+
+
+def test_quantization_cuts_wire_time():
+    from repro.core.compression import CompressionConfig
+
+    spec = RunSpec(n_params=3e9, n_active_params=3e9, batch_tokens=2e6, seq_len=2048,
+                   n_steps=1000, sync_interval=30,
+                   compression_ratio=CompressionConfig(kind="quant", bits=4).compression_ratio())
+    dense = RunSpec(n_params=3e9, n_active_params=3e9, batch_tokens=2e6, seq_len=2048,
+                    n_steps=1000, sync_interval=30)
+    assert training_time_hours(spec, 10e9) < training_time_hours(dense, 10e9)
+
+
+HLO_SAMPLE = """
+HloModule test
+
+%body.1 (p: (s32[], f32[128,256])) -> (s32[], f32[128,256]) {
+  %ag = f32[128,256]{1,0} all-gather(f32[8,256]{1,0} %x), dimensions={0}
+  %ar = f32[128,256]{1,0} all-reduce(f32[128,256]{1,0} %ag), to_apply=%sum
+}
+
+%cond.1 (p: (s32[], f32[128,256])) -> pred[] {
+  %c = s32[] constant(12)
+  %cmp = pred[] compare(s32[] %i, s32[] %c), direction=LT
+}
+
+ENTRY %main () -> f32[128,256] {
+  %w = (s32[], f32[128,256]) while((s32[], f32[128,256]) %init), condition=%cond.1, body=%body.1
+  %ag2 = f32[64,64]{1,0} all-gather(f32[4,64]{1,0} %y), dimensions={0}
+}
+"""
+
+
+def test_collective_parser_flat():
+    out = parse_collective_bytes(HLO_SAMPLE)
+    expected = 128 * 256 * 4 * 2 + 64 * 64 * 4
+    assert out["total"] == expected
+
+
+def test_collective_parser_loop_corrected():
+    out = collective_bytes_corrected(HLO_SAMPLE)
+    in_loop = 128 * 256 * 4 * 2
+    assert out["total"] == in_loop * 12 + 64 * 64 * 4
+    assert out["flat_total"] == in_loop + 64 * 64 * 4
+
+
+def test_roofline_terms_dominant():
+    t = RooflineTerms(flops=197e12, hlo_bytes=0, collective_bytes=0, chips=256,
+                      model_flops=197e12 * 256)
+    assert t.dominant == "compute"
+    assert abs(t.compute_s - 1.0) < 1e-9
+    assert abs(t.useful_flops_ratio - 1.0) < 1e-9
+    t2 = RooflineTerms(flops=0, hlo_bytes=0, collective_bytes=50e9, chips=256,
+                       model_flops=0, amortize=30)
+    assert t2.dominant == "collective"
+    assert abs(t2.collective_s - 1 / 30) < 1e-9
