@@ -13,9 +13,10 @@ import time
 import jax
 import jax.numpy as jnp
 
-from repro.core import DiLoCoConfig, diloco_init, diloco_round, make_optimizer, make_streaming_masks
+from repro.core import DiLoCoConfig, diloco_init, dp_config, make_optimizer
 from repro.core.diloco import compute_deltas, inner_step
 from repro.data import DataConfig, MarkovStream, batches_for_round
+from repro.engine import TrainEngine
 from repro.models import ModelConfig, build_model
 from repro.optim import OptimizerConfig
 
@@ -44,28 +45,27 @@ def eval_loss(model, params, seed: int = 991) -> float:
 
 def train_diloco(dcfg: DiLoCoConfig, rounds: int = ROUNDS, seed: int = 0,
                  bpw: int = BPW, lr: float | None = None) -> tuple[float, dict]:
+    """Train through the unified engine: one donated, jitted round fn."""
     model = build_model(TOY)
     icfg = OptimizerConfig(lr=lr or LR[dcfg.inner_name], weight_decay=1e-4,
                            schedule="cosine", total_steps=rounds * dcfg.sync_interval)
-    opt = make_optimizer(dcfg, icfg)
-    state = diloco_init(model, dcfg, icfg, jax.random.PRNGKey(seed))
-    masks = make_streaming_masks(state, dcfg)
+    engine = TrainEngine(model, dcfg, icfg)
+    state = engine.init(jax.random.PRNGKey(seed))
     stream = make_stream(dcfg.n_workers, bpw=bpw)
-    fn = jax.jit(functools.partial(diloco_round, model, dcfg, opt, masks=masks))
     t0 = time.time()
     for r in range(rounds):
-        state, info = fn(state, batches_for_round(stream, r, dcfg.sync_interval))
+        state, info = engine.step(state, batches_for_round(stream, r, dcfg.sync_interval))
+    jax.block_until_ready(state["outer_params"])
     wall = time.time() - t0
     final = eval_loss(model, state["outer_params"])
-    return final, {"wall_s": wall, "state": state, "model": model}
+    return final, {"wall_s": wall, "state": state, "model": model, "engine": engine}
 
 
 def dp_baseline(inner: str, rounds: int = ROUNDS, H: int = 4, total_batch: int = BPW * 4,
                 seed: int = 0) -> float:
-    """FLOP-matched data-parallel baseline: K=1 'worker', every-step sync off."""
-    dcfg = DiLoCoConfig(n_workers=1, sync_interval=1, inner_name=inner,
-                        outer_lr=1.0, outer_momentum=0.0)
-    final, _ = train_diloco(dcfg, rounds=rounds * H, bpw=total_batch, seed=seed)
+    """FLOP-matched DP baseline: the degenerate (K=1, H=1, no-outer) engine."""
+    final, _ = train_diloco(dp_config(inner), rounds=rounds * H, bpw=total_batch,
+                            seed=seed)
     return final
 
 

@@ -28,6 +28,7 @@ def all_benchmarks():
         "fig3": pf.bench_fig3_interference,
         "fig5": pf.bench_fig5_frobenius,
         "prop42": pf.bench_prop42_identity,
+        "train_throughput": sy.bench_train_throughput,
         "tab10": sy.bench_tab10_wallclock,
         "fig16": sy.bench_fig16_utilization,
         "tab2": sy.bench_tab2_scaling_forms,

@@ -1,7 +1,9 @@
-"""System-level benchmarks: wallclock/bandwidth model (Tab. 9/10, Fig. 16),
+"""System-level benchmarks: measured train-path throughput (engine vs
+per-step dispatch), wallclock/bandwidth model (Tab. 9/10, Fig. 16),
 scaling-law fitting (Tab. 2), kernel microbenchmarks, roofline table."""
 from __future__ import annotations
 
+import functools
 import glob
 import json
 import time
@@ -13,6 +15,102 @@ import numpy as np
 from repro.core.compression import CompressionConfig
 from repro.core.scaling_laws import fit_power_law
 from repro.core.wallclock import RunSpec, compute_utilization, training_time_hours
+
+
+def bench_train_throughput(rounds: int = 4, warmup: int = 1,
+                           reps: int = 2) -> list[dict]:
+    """Measured steps/s on the reduced smollm-135m config, three executors:
+
+      * ``per_step``  — jit(inner_step) x H + jit(outer_step), host loop with
+        a blocking loss read per step (fully unfused dispatch — how the
+        pre-engine analysis/dry-run paths drove training);
+      * ``seed_path`` — undonated jit(diloco_round) with a blocking metrics
+        read every round (what launch/train.py did pre-engine);
+      * ``engine``    — the unified TrainEngine: donated fused round + async
+        metrics drain via the driver.
+
+    The shape is dispatch-sensitive (small per-step compute, long H) so the
+    executor — not the matmuls — determines steps/s. Variants are measured
+    ``reps`` times interleaved and the best rep is reported, which rejects
+    the load spikes of a shared box.
+    """
+    from repro.configs import get_config, reduce_config
+    from repro.core import DiLoCoConfig, diloco_round, inner_step, make_optimizer, outer_step
+    from repro.data import DataConfig, MarkovStream, batches_for_round
+    from repro.engine import TrainEngine, run_rounds
+    from repro.models import build_model
+    from repro.optim import OptimizerConfig
+
+    cfg = reduce_config(get_config("smollm-135m"))
+    model = build_model(cfg)
+    K, H, SEQ, BPW_ = 4, 16, 16, 1
+    dcfg = DiLoCoConfig(n_workers=K, sync_interval=H, inner_name="muon")
+    icfg = OptimizerConfig(lr=2e-2, weight_decay=1e-4, schedule="constant")
+    stream = MarkovStream(DataConfig(vocab=cfg.vocab, seq_len=SEQ,
+                                     batch_per_worker=BPW_, n_workers=K, seed=1))
+    total = rounds + warmup
+    round_batches = [batches_for_round(stream, r, H) for r in range(total)]
+    step_batches = [stream.batch(t) for t in range(total * H)]
+    opt = make_optimizer(dcfg, icfg)
+
+    def bench_per_step() -> float:
+        state = TrainEngine(model, dcfg, icfg).init(jax.random.PRNGKey(0))
+        step_fn = jax.jit(functools.partial(inner_step, model, opt))
+        sync_fn = jax.jit(functools.partial(outer_step, dcfg))
+
+        def run(state, lo, hi):
+            for r in range(lo, hi):
+                for h in range(H):
+                    state, m = step_fn(state, step_batches[r * H + h])
+                    float(m["loss"])  # blocking per-step metric read
+                state, _ = sync_fn(state)
+            return state
+
+        state = run(state, 0, warmup)
+        t0 = time.perf_counter()
+        run(state, warmup, total)
+        return rounds * H / (time.perf_counter() - t0)
+
+    def bench_seed_path() -> float:
+        state = TrainEngine(model, dcfg, icfg).init(jax.random.PRNGKey(0))
+        fn = jax.jit(functools.partial(diloco_round, model, dcfg, opt, masks=None))
+        for r in range(warmup):
+            state, info = fn(state, round_batches[r])
+            float(info["loss"].mean())
+        t0 = time.perf_counter()
+        for r in range(warmup, total):
+            state, info = fn(state, round_batches[r])
+            float(info["loss"].mean())
+        return rounds * H / (time.perf_counter() - t0)
+
+    def bench_engine() -> float:
+        engine = TrainEngine(model, dcfg, icfg)
+        state = engine.init(jax.random.PRNGKey(0))
+        state, _ = run_rounds(engine, state, lambda r: round_batches[r], warmup)
+        t0 = time.perf_counter()
+        state, _ = run_rounds(engine, state, lambda r: round_batches[r], total,
+                              start=warmup)
+        jax.block_until_ready(state["outer_params"])
+        return rounds * H / (time.perf_counter() - t0)
+
+    variants = {"per_step": bench_per_step, "seed_path": bench_seed_path,
+                "engine": bench_engine}
+    best = {name: 0.0 for name in variants}
+    for _ in range(reps):
+        for name, fn in variants.items():
+            best[name] = max(best[name], fn())
+
+    rows = [
+        {"name": "train_throughput/per_step", "value": round(best["per_step"], 3),
+         "derived": "steps_per_s"},
+        {"name": "train_throughput/seed_path", "value": round(best["seed_path"], 3),
+         "derived": "steps_per_s"},
+        {"name": "train_throughput/engine", "value": round(best["engine"], 3),
+         "derived": f"steps_per_s;"
+                    f"speedup_vs_seed={best['engine'] / best['seed_path']:.2f}x;"
+                    f"speedup_vs_per_step={best['engine'] / best['per_step']:.2f}x"},
+    ]
+    return rows
 
 
 def bench_tab10_wallclock() -> list[dict]:

@@ -3,13 +3,12 @@ error feedback, plus the wire-byte accounting used for the bandwidth model.
 
     PYTHONPATH=src python examples/compression_sweep.py
 """
-import functools
-
 import jax
 
-from repro.core import CompressionConfig, DiLoCoConfig, diloco_init, diloco_round, make_optimizer
+from repro.core import CompressionConfig, DiLoCoConfig
 from repro.core.collectives import collective_bytes_tree
 from repro.data import DataConfig, MarkovStream, batches_for_round
+from repro.engine import TrainEngine
 from repro.models import ModelConfig, build_model
 from repro.optim import OptimizerConfig
 
@@ -20,14 +19,12 @@ K, H, ROUNDS = 2, 4, 6
 
 def run(comp: CompressionConfig) -> float:
     dcfg = DiLoCoConfig(n_workers=K, sync_interval=H, inner_name="muon", compression=comp)
-    icfg = OptimizerConfig(lr=2e-2)
-    opt = make_optimizer(dcfg, icfg)
-    state = diloco_init(model, dcfg, icfg, jax.random.PRNGKey(0))
+    engine = TrainEngine(model, dcfg, OptimizerConfig(lr=2e-2))
+    state = engine.init(jax.random.PRNGKey(0))
     data = MarkovStream(DataConfig(vocab=cfg.vocab, seq_len=32, batch_per_worker=8,
                                    n_workers=K, seed=1))
-    step = jax.jit(functools.partial(diloco_round, model, dcfg, opt, masks=None))
     for r in range(ROUNDS):
-        state, info = step(state, batches_for_round(data, r, H))
+        state, info = engine.step(state, batches_for_round(data, r, H))
     return float(info["loss"][-1])
 
 

@@ -1,13 +1,15 @@
-"""Quickstart: MuLoCo vs DiLoCo in ~40 lines using the public API.
+"""Quickstart: MuLoCo vs DiLoCo in ~40 lines using the unified TrainEngine.
+
+The engine compiles the whole communication round (H inner steps + outer
+sync) into one donated, jitted function; the loop below just feeds batches.
 
     PYTHONPATH=src python examples/quickstart.py
 """
-import functools
-
 import jax
 
-from repro.core import DiLoCoConfig, diloco_init, diloco_round, make_optimizer
+from repro.core import DiLoCoConfig
 from repro.data import DataConfig, MarkovStream, batches_for_round
+from repro.engine import TrainEngine
 from repro.models import ModelConfig, build_model
 from repro.optim import OptimizerConfig
 
@@ -23,13 +25,12 @@ for inner, lr in (("muon", 2e-2), ("adamw", 4e-3)):
     dcfg = DiLoCoConfig(n_workers=K, sync_interval=H, inner_name=inner,
                         outer_lr=0.7, outer_momentum=0.9)
     icfg = OptimizerConfig(lr=lr, weight_decay=1e-4)
-    opt = make_optimizer(dcfg, icfg)
-    state = diloco_init(model, dcfg, icfg, jax.random.PRNGKey(0))
+    engine = TrainEngine(model, dcfg, icfg)
+    state = engine.init(jax.random.PRNGKey(0))
     data = MarkovStream(DataConfig(vocab=cfg.vocab, seq_len=64, batch_per_worker=8,
                                    n_workers=K, seed=1))
-    step = jax.jit(functools.partial(diloco_round, model, dcfg, opt, masks=None))
     for r in range(ROUNDS):
-        state, info = step(state, batches_for_round(data, r, H))
+        state, info = engine.step(state, batches_for_round(data, r, H))
     name = "MuLoCo" if inner == "muon" else "DiLoCo"
     print(f"{name}: final train loss after {ROUNDS} rounds "
           f"({ROUNDS * H} inner steps, {ROUNDS} communications): "

@@ -1,6 +1,7 @@
 """End-to-end driver: train a ~small LM with MuLoCo for a few hundred steps,
 with cosine schedule, eval logging, checkpointing and resume — the full
-production path via repro.launch.train.
+production path via repro.launch.train, which executes every round through
+the unified TrainEngine (one donated, jitted round fn + async metrics drain).
 
     PYTHONPATH=src python examples/train_muloco_e2e.py
 """

@@ -65,11 +65,20 @@ def load_checkpoint(path: str, template: PyTree, shardings: PyTree | None = None
     flat_t = tree_leaves_with_paths(template)
     t_paths = [p for p, _ in flat_t]
     if t_paths != meta["paths"]:
-        raise ValueError(
-            f"checkpoint tree mismatch: {len(meta['paths'])} stored leaves vs "
-            f"{len(t_paths)} template leaves (first diff: "
-            f"{next((a, b) for a, b in zip(meta['paths'], t_paths) if a != b) if meta['paths'] != t_paths else 'count'})"
-        )
+        # tolerate pure reorderings: dict states flattened in sorted-key
+        # order, the TrainState dataclass flattens in field order — the same
+        # leaves, permuted. Only a genuine set difference is an error.
+        if sorted(t_paths) == sorted(meta["paths"]):
+            by_path = {p: a for p, a in zip(meta["paths"], arrays)}
+            arrays = [by_path[p] for p in t_paths]
+        else:
+            missing = [p for p in t_paths if p not in set(meta["paths"])]
+            extra = [p for p in meta["paths"] if p not in set(t_paths)]
+            raise ValueError(
+                f"checkpoint tree mismatch: {len(meta['paths'])} stored leaves vs "
+                f"{len(t_paths)} template leaves "
+                f"(missing from checkpoint: {missing[:3]}; not in template: {extra[:3]})"
+            )
     treedef = jax.tree.structure(template)
     if shardings is not None:
         shard_leaves = jax.tree.leaves(shardings)

@@ -6,6 +6,7 @@ from repro.core.diloco import (  # noqa: F401
     compute_deltas,
     diloco_init,
     diloco_round,
+    dp_config,
     dp_init,
     dp_step,
     inner_step,

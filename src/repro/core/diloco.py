@@ -15,12 +15,16 @@ and the Ψ-average is the only cross-pod all-reduce — DiLoCo's communication
 pattern expressed purely through shardings. On CPU the same code simulates
 any K via vmap. Streaming (partitioned) sync and compressed collectives plug
 in through :mod:`repro.core.streaming` / :mod:`repro.core.collectives`.
+
+State lives in :class:`repro.engine.TrainState` (a registered pytree), and
+execution goes through :class:`repro.engine.TrainEngine`, which compiles
+:func:`diloco_round` once as a donated, jitted program. The DP baseline is
+the degenerate ``dp_config`` (K=1, H=1, no outer) of the same round.
 """
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
-from typing import Any, Callable
+from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -30,7 +34,6 @@ from repro.core.compression import CompressionConfig, compress_tree, ef_compress
 from repro.core.streaming import masked_update, streaming_masks
 from repro.models.api import Model
 from repro.optim import OptimizerConfig, make_inner_optimizer, nesterov_init, nesterov_step
-from repro.utils.tree import tree_zeros_like
 
 PyTree = Any
 
@@ -45,10 +48,22 @@ class DiLoCoConfig:
     compression: CompressionConfig = dataclasses.field(default_factory=CompressionConfig)
     streaming_partitions: int = 1  # J (1 = no streaming)
     ns_impl: str = "jnp"
+    # False -> the degenerate data-parallel config: no outer Nesterov, the
+    # synced params are simply the (K-mean of the) worker params. With
+    # K=1, H=1 this IS the plain inner optimizer — DP AdamW / DP Muon run
+    # through the exact same round function as DiLoCo/MuLoCo.
+    outer_enabled: bool = True
 
     @property
     def is_muloco(self) -> bool:
         return self.inner_name == "muon"
+
+
+def dp_config(inner_name: str, ns_impl: str = "jnp") -> DiLoCoConfig:
+    """The DP baseline as a degenerate DiLoCo config (K=1, H=1, no outer)."""
+    return DiLoCoConfig(n_workers=1, sync_interval=1, inner_name=inner_name,
+                        outer_lr=1.0, outer_momentum=0.0, outer_enabled=False,
+                        ns_impl=ns_impl)
 
 
 def make_optimizer(dcfg: DiLoCoConfig, inner_cfg: OptimizerConfig):
@@ -62,22 +77,35 @@ def make_optimizer(dcfg: DiLoCoConfig, inner_cfg: OptimizerConfig):
 
 
 def diloco_init(model: Model, dcfg: DiLoCoConfig, inner_cfg: OptimizerConfig, rng: jax.Array) -> PyTree:
+    # imported lazily: repro.engine builds on repro.core, not the reverse
+    from repro.engine.state import TrainState
+
     params = model.init(rng)
     K = dcfg.n_workers
     worker_params = jax.tree.map(lambda p: jnp.broadcast_to(p[None], (K, *p.shape)), params)
     opt = make_optimizer(dcfg, inner_cfg)
     inner_state = jax.vmap(opt.init)(worker_params)
-    state = {
-        "outer_params": params,
-        "outer_opt": nesterov_init(params, state_dtype=jnp.dtype(inner_cfg.state_dtype)),
-        "worker_params": worker_params,
-        "inner_state": inner_state,
-        "round": jnp.zeros((), jnp.int32),
-    }
+    ef = None
     if dcfg.compression.error_feedback:
         sdt = jnp.dtype(inner_cfg.state_dtype)
-        state["ef"] = jax.tree.map(lambda p: jnp.zeros((K, *p.shape), sdt), params)
-    return state
+        ef = jax.tree.map(lambda p: jnp.zeros((K, *p.shape), sdt), params)
+    return TrainState(
+        outer_params=params,
+        outer_opt=nesterov_init(params, state_dtype=jnp.dtype(inner_cfg.state_dtype)),
+        worker_params=worker_params,
+        inner_state=inner_state,
+        round=jnp.zeros((), jnp.int32),
+        ef=ef,
+    )
+
+
+def _updated(state: PyTree, **kw) -> PyTree:
+    """Functional update working on both TrainState and legacy dict states."""
+    if hasattr(state, "replace"):
+        return state.replace(**kw)
+    new = dict(state)
+    new.update(kw)
+    return new
 
 
 # ---------------------------------------------------------------------------
@@ -100,9 +128,7 @@ def inner_step(model: Model, opt, state: PyTree, batch: PyTree,
 
     new_wp, new_is, losses = jax.vmap(one, spmd_axis_name=spmd_axis)(
         state["worker_params"], state["inner_state"], batch)
-    new_state = dict(state)
-    new_state["worker_params"] = new_wp
-    new_state["inner_state"] = new_is
+    new_state = _updated(state, worker_params=new_wp, inner_state=new_is)
     return new_state, {"loss": jnp.mean(losses), "loss_per_worker": losses}
 
 
@@ -120,13 +146,39 @@ def compute_deltas(state: PyTree) -> PyTree:
 
 
 def outer_step(dcfg: DiLoCoConfig, state: PyTree, mask: PyTree | None = None) -> tuple[PyTree, PyTree]:
-    """Communicate + outer Nesterov update (+ worker reset). Returns (state, Ψ)."""
+    """Communicate + outer Nesterov update (+ worker reset). Returns (state, Ψ).
+
+    With ``dcfg.outer_enabled=False`` (the DP degenerate config) the synced
+    params are simply the K-mean of the worker params: no Nesterov, no
+    compression, no worker reset — at K=1 this is exactly the plain inner
+    optimizer, through the same code path as DiLoCo/MuLoCo.
+    """
     ccfg = dcfg.compression
     deltas = compute_deltas(state)
+    if not dcfg.outer_enabled:
+        if mask is not None:
+            raise ValueError(
+                "streaming (partitioned) sync requires the outer optimizer; "
+                "outer_enabled=False cannot be combined with streaming_partitions > 1")
+        psi = jax.tree.map(lambda d: jnp.mean(d, axis=0), deltas)
+        new_outer = jax.tree.map(
+            lambda o, w: jnp.mean(w.astype(jnp.float32), axis=0).astype(o.dtype)
+            if w.shape[0] > 1 else w[0],
+            state["outer_params"], state["worker_params"],
+        )
+        # broadcast the averaged params back so workers stay synced (at K=1
+        # this is the identity; at K>1 it is every-H parameter averaging —
+        # without it the replicas would silently drift apart forever)
+        new_workers = jax.tree.map(
+            lambda o, w: jnp.broadcast_to(o[None].astype(w.dtype), w.shape),
+            new_outer, state["worker_params"],
+        )
+        return _updated(state, outer_params=new_outer, worker_params=new_workers,
+                        round=state["round"] + 1), psi
     if mask is not None:
         deltas = jax.tree.map(lambda m, d: m[None] * d if m.ndim else m * d, mask, deltas)
 
-    new_state = dict(state)
+    updates: dict = {}
     if ccfg.error_feedback and ccfg.kind != "none":
         comm, new_ef = jax.vmap(lambda d, e: ef_compress_tree(d, e, ccfg))(deltas, state["ef"])
         if mask is not None:  # untouched partitions keep their residuals
@@ -134,7 +186,7 @@ def outer_step(dcfg: DiLoCoConfig, state: PyTree, mask: PyTree | None = None) ->
                 lambda m, ne, oe: jnp.where((m[None] if m.ndim else m) > 0, ne, oe),
                 mask, new_ef, state["ef"],
             )
-        new_state["ef"] = new_ef
+        updates["ef"] = new_ef
     else:
         comm = jax.vmap(lambda d: compress_tree(d, ccfg))(deltas)
 
@@ -163,11 +215,10 @@ def outer_step(dcfg: DiLoCoConfig, state: PyTree, mask: PyTree | None = None) ->
     else:
         new_workers = jax.tree.map(lambda o, w, m: reset(o, w, m), new_outer, state["worker_params"], mask)
 
-    new_state["outer_params"] = new_outer
-    new_state["outer_opt"] = new_opt
-    new_state["worker_params"] = new_workers
-    new_state["round"] = state["round"] + 1
-    return new_state, psi
+    updates.update(outer_params=new_outer, outer_opt=new_opt,
+                   worker_params=new_workers)
+    updates["round"] = state["round"] + 1
+    return _updated(state, **updates), psi
 
 
 # ---------------------------------------------------------------------------
@@ -176,36 +227,66 @@ def outer_step(dcfg: DiLoCoConfig, state: PyTree, mask: PyTree | None = None) ->
 
 
 def diloco_round(model: Model, dcfg: DiLoCoConfig, opt, state: PyTree, batches: PyTree,
-                 masks: list[PyTree] | None = None) -> tuple[PyTree, dict]:
+                 masks: list[PyTree] | None = None,
+                 spmd_axis: str | None = None) -> tuple[PyTree, dict]:
     """One communication round: H inner steps then outer sync(s).
+
+    This is THE round function: ``lax.scan`` over the H inner steps with the
+    outer sync (and, for streaming, the J per-segment partition syncs —
+    statically unrolled, since each segment carries a different mask) folded
+    into the same traced program. :class:`repro.engine.TrainEngine` compiles
+    it once, donated, and every training path (train / dryrun / bench /
+    examples) executes it.
 
     ``batches`` leaves: [H, K, B/K, ...]. With streaming (J>1) the round is J
     segments of H/J steps, each followed by a partition-j sync — peak
     bandwidth drops by J while the sync period per partition stays H.
+
+    Returns ``(state, {"loss": f32[H], "psi": pseudogradient_tree})`` for
+    every J; with J>1 the ``psi`` leaves are the mask-combined per-segment
+    pseudogradients (each parameter's entry comes from the segment that
+    synced it), so the signature is identical to the J==1 path.
     """
     H, J = dcfg.sync_interval, dcfg.streaming_partitions
 
     def scan_inner(state, seg_batches):
-        def body(st, b):
-            st, m = inner_step(model, opt, st, b)
-            return st, m["loss"]
+        # carry only what the inner steps mutate: outer params/opt, EF
+        # residuals and the round counter are loop-invariant and stay out of
+        # the while-loop state.
+        def body(carry, b):
+            sub = {"worker_params": carry[0], "inner_state": carry[1]}
+            sub, m = inner_step(model, opt, sub, b, spmd_axis=spmd_axis)
+            return (sub["worker_params"], sub["inner_state"]), m["loss"]
 
-        return jax.lax.scan(body, state, seg_batches)
+        (wp, ins), losses = jax.lax.scan(
+            body, (state["worker_params"], state["inner_state"]), seg_batches)
+        return _updated(state, worker_params=wp, inner_state=ins), losses
 
     if J <= 1:
         state, losses = scan_inner(state, batches)
         state, psi = outer_step(dcfg, state)
         return state, {"loss": losses, "psi": psi}
 
-    assert H % J == 0, "streaming requires J | H"
+    if H % J:
+        raise ValueError(
+            f"streaming requires the partition count to divide the sync "
+            f"interval: J={J} does not divide H={H}")
+    if masks is None:
+        raise ValueError(
+            "streaming (J>1) requires partition masks; build them with "
+            "make_streaming_masks(state, dcfg)")
     seg = H // J
     all_losses = []
+    psi_acc = None
     for j in range(J):
         seg_batches = jax.tree.map(lambda b: b[j * seg : (j + 1) * seg], batches)
         state, losses = scan_inner(state, seg_batches)
-        state, _ = outer_step(dcfg, state, mask=masks[j])
+        state, psi_j = outer_step(dcfg, state, mask=masks[j])
+        # psi leaves are un-stacked (no K axis): the masks broadcast directly
+        masked_j = jax.tree.map(lambda m, p: m * p, masks[j], psi_j)
+        psi_acc = masked_j if psi_acc is None else jax.tree.map(jnp.add, psi_acc, masked_j)
         all_losses.append(losses)
-    return state, {"loss": jnp.concatenate(all_losses)}
+    return state, {"loss": jnp.concatenate(all_losses), "psi": psi_acc}
 
 
 def make_streaming_masks(state: PyTree, dcfg: DiLoCoConfig) -> list[PyTree] | None:
@@ -215,7 +296,9 @@ def make_streaming_masks(state: PyTree, dcfg: DiLoCoConfig) -> list[PyTree] | No
 
 
 # ---------------------------------------------------------------------------
-# Data-parallel baseline (K=1, H=1, no outer): for DP AdamW / DP Muon runs
+# Data-parallel baseline: the degenerate (K=1, H=1, no-outer) engine config.
+# dp_init/dp_step are thin adapters over the same inner_step used by DiLoCo —
+# one code path for DP AdamW / DP Muon and MuLoCo/DiLoCo alike.
 # ---------------------------------------------------------------------------
 
 
@@ -226,6 +309,13 @@ def dp_init(model: Model, inner_name: str, inner_cfg: OptimizerConfig, rng: jax.
 
 
 def dp_step(model: Model, opt, state: PyTree, batch: PyTree) -> tuple[PyTree, dict]:
-    (loss, metrics), grads = jax.value_and_grad(model.loss, has_aux=True)(state["params"], batch)
-    new_p, new_s = opt.step(state["params"], grads, state["opt_state"])
-    return {"params": new_p, "opt_state": new_s}, {"loss": loss}
+    """One DP step == one DiLoCo inner step at K=1 (shared implementation)."""
+    stacked = {
+        "worker_params": jax.tree.map(lambda p: p[None], state["params"]),
+        "inner_state": jax.tree.map(lambda s: s[None], state["opt_state"]),
+    }
+    new, metrics = inner_step(model, opt, stacked, jax.tree.map(lambda x: x[None], batch))
+    return {
+        "params": jax.tree.map(lambda p: p[0], new["worker_params"]),
+        "opt_state": jax.tree.map(lambda s: s[0], new["inner_state"]),
+    }, {"loss": metrics["loss"]}

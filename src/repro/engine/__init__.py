@@ -1,0 +1,14 @@
+"""The training engine: one donated, fully-jitted round executor.
+
+``TrainState`` (registered pytree) + ``TrainEngine`` (compiles THE round
+function) + ``run_rounds`` (async multi-round driver). All four training
+paths — launch/train, launch/dryrun, benchmarks, examples — consume this
+subsystem instead of hand-wiring diloco_init/diloco_round.
+"""
+from repro.engine.state import TrainState  # noqa: F401
+from repro.engine.engine import (  # noqa: F401
+    TrainEngine,
+    build_round_fn,
+    dp_engine,
+)
+from repro.engine.driver import run_rounds  # noqa: F401

@@ -1,0 +1,72 @@
+"""Async multi-round driver: overlap dispatch with host-side metrics drain.
+
+JAX dispatch is asynchronous: ``engine.step`` returns device values
+immediately while the round executes. The driver exploits that by keeping up
+to ``max_in_flight`` rounds' metrics un-materialized — the host converts
+round r's losses to floats (a blocking device read) only after round r+1 has
+already been dispatched, so data generation + CSV writing + logging ride for
+free under the accelerator's compute. The seed-era loops blocked on
+``float(info["loss"].mean())`` every round, serializing host and device.
+"""
+from __future__ import annotations
+
+import collections
+from typing import Any, Callable
+
+import jax
+
+PyTree = Any
+
+
+def run_rounds(engine, state, batches_for: Callable[[int], PyTree],
+               rounds: int, *, start: int = 0,
+               eval_fn: Callable[[Any, int], jax.Array] | None = None,
+               on_round: Callable[[dict], None] | None = None,
+               on_state: Callable[[int, Any], None] | None = None,
+               on_state_every: int = 1,
+               max_in_flight: int = 2) -> tuple[Any, list[dict]]:
+    """Run rounds ``start..rounds-1`` through the engine.
+
+    ``batches_for(r)`` supplies the [H, K, B, ...] batches for round r.
+    ``eval_fn(state, r)`` (optional) returns a device scalar evaluated after
+    the round's sync (dispatched, not read). ``on_round(metrics)`` fires when
+    a round's metrics are drained to host floats. ``on_state(r, state)``
+    fires every ``on_state_every``-th round (r+1 divisible) with the new
+    state, for checkpointing; all pending metrics are drained first so
+    whatever on_round persisted (e.g. the CSV) never lags a saved
+    checkpoint. Returns the final state and the per-round metrics.
+    """
+    pending: collections.deque = collections.deque()
+    history: list[dict] = []
+
+    def drain_one() -> None:
+        r, loss, ev = pending.popleft()
+        losses = jax.device_get(loss)
+        rec = {
+            "round": r,
+            "step": (r + 1) * engine.dcfg.sync_interval,
+            "train_loss": float(losses.mean()),
+            "train_loss_last": float(losses[-1]),
+        }
+        if ev is not None:
+            rec["eval_loss"] = float(jax.device_get(ev))
+        history.append(rec)
+        if on_round is not None:
+            on_round(rec)
+
+    for r in range(start, rounds):
+        state, info = engine.step(state, batches_for(r))
+        ev = eval_fn(state, r) if eval_fn is not None else None
+        # keep only the loss vector alive; the rest of info (notably the
+        # parameter-sized psi tree) must be freeable as soon as the round's
+        # consumers drop it
+        pending.append((r, info["loss"], ev))
+        if on_state is not None and on_state_every and (r + 1) % on_state_every == 0:
+            while pending:  # CSV/metrics must never lag a saved checkpoint
+                drain_one()
+            on_state(r, state)
+        while len(pending) > max_in_flight:
+            drain_one()
+    while pending:
+        drain_one()
+    return state, history

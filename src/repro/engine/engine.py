@@ -1,0 +1,175 @@
+"""TrainEngine: one donated, fully-jitted round executor for every path.
+
+The paper's hot loop — H inner steps + the outer sync — used to be re-wired
+by hand in four places (launch/train.py, launch/dryrun.py, benchmarks,
+examples), each with its own jit boundary, no buffer donation, and host
+round-trips for metrics. The engine collapses them to a single builder:
+
+  * ``TrainEngine(model, dcfg, icfg)`` compiles **one** jitted round function
+    (``lax.scan`` over the H inner steps with the outer sync — and the J
+    streaming segment syncs — folded inside) with the TrainState argument
+    **donated**, so the round updates in place instead of double-buffering
+    the 4 parameter-sized state copies;
+  * on the production mesh the same builder threads the StepPlan shardings
+    (worker axis -> 'pod', FSDP/TP within a pod) and activation rules through
+    ``jax.jit``, so the CPU path and the 512-chip path lower from the same
+    code;
+  * the DP baseline is the degenerate config ``dp_config(inner)`` (K=1, H=1,
+    no outer): DP AdamW / DP Muon and DiLoCo/MuLoCo share one executor;
+  * ``engine.step`` dispatches asynchronously — metrics come back as device
+    values, and :mod:`repro.engine.driver` drains them on the host while the
+    next round is already running.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+
+from repro.core.diloco import (
+    DiLoCoConfig,
+    diloco_init,
+    diloco_round,
+    dp_config,
+    make_optimizer,
+)
+from repro.engine.state import TrainState
+from repro.models.api import Model
+from repro.optim import OptimizerConfig
+
+PyTree = Any
+
+
+def build_round_fn(model: Model, dcfg: DiLoCoConfig, opt,
+                   masks: list[PyTree] | None = None,
+                   rules: dict | None = None,
+                   spmd_axis: str | None = None) -> Callable:
+    """The un-jitted round callable shared by the engine and the dry-run
+    StepPlans: H inner steps + sync(s) in one traceable program, with the
+    activation-sharding rules (if any) installed around the whole round."""
+
+    def round_fn(state: PyTree, batches: PyTree) -> tuple[PyTree, dict]:
+        if rules is not None:
+            from repro.models.common import activation_sharding
+
+            with activation_sharding(rules):
+                return diloco_round(model, dcfg, opt, state, batches,
+                                    masks=masks, spmd_axis=spmd_axis)
+        return diloco_round(model, dcfg, opt, state, batches,
+                            masks=masks, spmd_axis=spmd_axis)
+
+    return round_fn
+
+
+class TrainEngine:
+    """Compiles and executes DiLoCo/MuLoCo (or DP) rounds.
+
+    Usage::
+
+        engine = TrainEngine(model, dcfg, icfg)
+        state = engine.init(jax.random.PRNGKey(0))
+        for r in range(rounds):
+            state, info = engine.step(state, batches_for_round(stream, r, H))
+
+    ``step`` donates the incoming state; never reuse a state you passed in.
+    For overlapping dispatch with host-side metrics draining use
+    :func:`repro.engine.driver.run_rounds`.
+    """
+
+    def __init__(self, model: Model, dcfg: DiLoCoConfig, icfg: OptimizerConfig,
+                 *, mesh=None, donate: bool = True,
+                 rules: dict | None = None, spmd_axis: str | None = None):
+        self.model = model
+        self.dcfg = dcfg
+        self.icfg = icfg
+        self.opt = make_optimizer(dcfg, icfg)
+        self.mesh = mesh
+        self.donate = donate
+        self._rules = rules
+        self._spmd_axis = spmd_axis
+        self._masks = self._build_masks()
+        self.round_fn = build_round_fn(model, dcfg, self.opt, masks=self._masks,
+                                       rules=rules, spmd_axis=spmd_axis)
+        self._jitted: Callable | None = None
+        self._eval_loss = jax.jit(lambda params, batch: model.loss(params, batch)[0])
+
+    # -- construction helpers ----------------------------------------------
+
+    def _build_masks(self) -> list[PyTree] | None:
+        if self.dcfg.streaming_partitions <= 1:
+            return None
+        params_abs = jax.eval_shape(
+            lambda: self.model.init(jax.random.PRNGKey(0)))
+        from repro.core.streaming import streaming_masks
+
+        return streaming_masks(params_abs, self.dcfg.streaming_partitions)
+
+    def abstract_state(self) -> TrainState:
+        """ShapeDtypeStruct TrainState (nothing allocated)."""
+        return jax.eval_shape(
+            lambda: diloco_init(self.model, self.dcfg, self.icfg,
+                                jax.random.PRNGKey(0)))
+
+    def state_shardings(self, tensor_parallel: bool = True) -> TrainState:
+        """StepPlan-compatible shardings for the TrainState on ``mesh``."""
+        if self.mesh is None:
+            raise ValueError("engine was built without a mesh")
+        from repro.launch.sharding import diloco_state_shardings
+
+        return diloco_state_shardings(self.mesh, self.abstract_state(),
+                                      tensor_parallel=tensor_parallel)
+
+    def place_state(self, state: TrainState, tensor_parallel: bool = True) -> TrainState:
+        """Commit a TrainState to the mesh under the StepPlan shardings."""
+        return jax.device_put(state, self.state_shardings(tensor_parallel))
+
+    def place_batches(self, batches: PyTree) -> PyTree:
+        """Commit [H, K, B, ...] round batches (K->'pod', B->'data')."""
+        if self.mesh is None:
+            return batches
+        from repro.launch.sharding import batch_shardings
+
+        return jax.device_put(
+            batches, batch_shardings(self.mesh, batches, k_stacked=True,
+                                     leading_scan=True))
+
+    @property
+    def jitted_round(self) -> Callable:
+        """The one donated, jitted round executor (compiled lazily)."""
+        if self._jitted is None:
+            kw: dict = {}
+            if self.donate:
+                kw["donate_argnums"] = (0,)
+            self._jitted = jax.jit(self.round_fn, **kw)
+        return self._jitted
+
+    # -- execution ----------------------------------------------------------
+
+    def init(self, rng: jax.Array) -> TrainState:
+        return diloco_init(self.model, self.dcfg, self.icfg, rng)
+
+    def step(self, state: TrainState, batches: PyTree) -> tuple[TrainState, dict]:
+        """One communication round; async dispatch, donated state.
+
+        On a mesh, the committed shardings of ``state`` (see
+        :meth:`place_state`) and the batches propagate through jit, so the
+        round lowers with the production layout."""
+        if self.mesh is not None:
+            with self.mesh:
+                return self.jitted_round(state, self.place_batches(batches))
+        return self.jitted_round(state, batches)
+
+    def eval_loss(self, params: PyTree, batch: PyTree) -> jax.Array:
+        """Loss of the synced (outer) params on one un-stacked batch."""
+        return self._eval_loss(params, batch)
+
+    # -- introspection (used by the no-retrace / donation tests) ------------
+
+    def lower(self, state: TrainState, batches: PyTree):
+        return self.jitted_round.lower(state, batches)
+
+
+def dp_engine(model: Model, inner_name: str, icfg: OptimizerConfig,
+              **kw) -> TrainEngine:
+    """The data-parallel baseline as the degenerate engine config."""
+    return TrainEngine(model, dp_config(inner_name), icfg, **kw)

@@ -1,0 +1,84 @@
+"""TrainState: the one state pytree every training path carries.
+
+A registered-dataclass pytree replacing the raw ``dict`` state that
+``core/diloco.py`` used to hand around. Fields mirror the paper's Algorithm 1:
+
+  * ``outer_params`` / ``outer_opt`` — the synced parameters and the outer
+    Nesterov momentum (no K axis; ZeRO-sharded over ('pod','data') on the
+    production mesh);
+  * ``worker_params`` / ``inner_state`` — K-stacked local replicas and their
+    inner-optimizer state (K sharded over 'pod');
+  * ``ef`` — optional K-stacked error-feedback residuals (``None`` when the
+    compression config doesn't use EF);
+  * ``round`` — the on-device round counter.
+
+Being a real pytree node, TrainState flows through ``jax.jit`` (with buffer
+donation), ``jax.eval_shape``, checkpointing, and sharding-tree construction
+unchanged. For backward compatibility with the dict era it also supports
+mapping-style access (``state["outer_params"]``, ``state["round"]``), which
+the analysis helpers and older tests use.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Iterator
+
+import jax
+
+PyTree = Any
+
+_FIELDS = ("outer_params", "outer_opt", "worker_params", "inner_state", "round", "ef")
+
+
+@dataclasses.dataclass
+class TrainState:
+    outer_params: PyTree
+    outer_opt: PyTree
+    worker_params: PyTree
+    inner_state: PyTree
+    round: jax.Array | Any
+    ef: PyTree | None = None
+
+    # -- mapping-style compatibility with the pre-engine dict state ---------
+
+    def __getitem__(self, key: str) -> PyTree:
+        if key not in _FIELDS:
+            raise KeyError(key)
+        return getattr(self, key)
+
+    def __setitem__(self, key: str, value: PyTree) -> None:
+        if key not in _FIELDS:
+            raise KeyError(key)
+        setattr(self, key, value)
+
+    def __contains__(self, key: str) -> bool:
+        return key in _FIELDS and getattr(self, key) is not None
+
+    def keys(self) -> Iterator[str]:
+        return iter(k for k in _FIELDS if getattr(self, k) is not None)
+
+    def items(self) -> Iterator[tuple[str, PyTree]]:
+        return iter((k, getattr(self, k)) for k in _FIELDS if getattr(self, k) is not None)
+
+    def get(self, key: str, default: PyTree = None) -> PyTree:
+        v = getattr(self, key, None) if key in _FIELDS else None
+        return default if v is None else v
+
+    def replace(self, **kw) -> "TrainState":
+        return dataclasses.replace(self, **kw)
+
+    def map_groups(self, fn) -> "TrainState":
+        """Build a parallel TrainState by applying ``fn(field_name, subtree)``
+        to each non-None field (used for sharding-tree construction)."""
+        return TrainState(**{
+            f.name: (None if getattr(self, f.name) is None
+                     else fn(f.name, getattr(self, f.name)))
+            for f in dataclasses.fields(self)
+        })
+
+
+jax.tree_util.register_dataclass(
+    TrainState,
+    data_fields=list(_FIELDS),
+    meta_fields=[],
+)

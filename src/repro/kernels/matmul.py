@@ -22,6 +22,9 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+# jax 0.4.x ships TPUCompilerParams; newer releases renamed it CompilerParams
+_COMPILER_PARAMS = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
+
 
 def _matmul_epilogue_kernel(a_ref, b_ref, d_ref, o_ref, acc_ref, *, alpha, beta, k_steps):
     @pl.when(pl.program_id(2) == 0)
@@ -84,7 +87,7 @@ def matmul_epilogue(
         out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
         scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.float32)],
         interpret=interpret,
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_COMPILER_PARAMS(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
     )(a, b, d)

@@ -70,7 +70,7 @@ def run_one(arch: str, shape: str, multi_pod: bool, sync_interval: int = 30,
         rec = {
             "arch": arch, "shape": shape, "plan": plan.name,
             "mesh": "2x16x16" if multi_pod else "16x16", "chips": chips,
-            "inner": inner_name if plan.meta["kind"] in ("train", "sync") else None,
+            "inner": inner_name if plan.meta["kind"] in ("train", "sync", "round") else None,
         }
         t0 = time.time()
         try:
@@ -143,7 +143,7 @@ def _analytic_terms(plan, cfg, params_abs, chips: int, shape: str) -> tuple[floa
     d_ff_active = cfg.d_ff * (cfg.experts_per_token + cfg.n_shared_experts) if cfg.n_experts else cfg.d_ff
     per_tok_layer = (8.0 * cfg.d_model + 2.0 * d_ff_active) * act_elt
 
-    if kind == "train":
+    if kind in ("train", "round"):
         dcfg = plan.meta["dcfg"]
         sf = train_step_flops(cfg, spec.seq_len, spec.global_batch, params_abs, dcfg.inner_name)
         # optimizer state per chip: m (+v for adamw / embeds)
@@ -155,6 +155,15 @@ def _analytic_terms(plan, cfg, params_abs, chips: int, shape: str) -> tuple[floa
         total_bytes = hbm_bytes("train", param_bytes_chip=pbytes / chips_per_worker,
                                 opt_state_bytes_chip=opt_bytes / chips,
                                 act_bytes_chip=act_bytes / chips)
+        if kind == "round":
+            # the fused round = H inner steps + one sync (elementwise terms)
+            H = dcfg.sync_interval
+            n = tree_count_params(params_abs)
+            sync_flops = 10.0 * n * 3.0
+            sync_bytes = hbm_bytes("sync", param_bytes_chip=pbytes / chips * 4.0,
+                                   opt_state_bytes_chip=tree_bytes(state_abs["outer_opt"]) / chips,
+                                   act_bytes_chip=0.0)
+            return (sf.total * H + sync_flops) / chips, total_bytes * H + sync_bytes
         return sf.total / chips, total_bytes
     if kind == "sync":
         state_abs = plan.args[0]

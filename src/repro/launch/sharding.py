@@ -125,30 +125,45 @@ def worker_shardings(mesh: Mesh, tree: PyTree, tensor_parallel: bool = True) -> 
 
 
 def diloco_state_shardings(mesh: Mesh, state: PyTree, tensor_parallel: bool = True) -> PyTree:
-    """Shardings for the full DiLoCo state pytree (see diloco_init)."""
-    out = {}
-    for key, sub in state.items():
+    """Shardings for the full TrainState pytree (see diloco_init).
+
+    Returns a pytree of NamedShardings with the same structure as ``state``
+    (TrainState in, TrainState out), usable directly as jit in_shardings.
+    """
+
+    def for_group(key, sub):
         if key in ("worker_params", "inner_state", "ef"):
-            out[key] = worker_shardings(mesh, sub, tensor_parallel=tensor_parallel)
-        elif key in ("outer_params", "outer_opt"):
-            out[key] = params_shardings(mesh, sub, outer=True,
-                                        tensor_parallel=tensor_parallel)
-        else:  # counters
-            out[key] = jax.tree.map(lambda x: NamedSharding(mesh, P()), sub)
-    return out
+            return worker_shardings(mesh, sub, tensor_parallel=tensor_parallel)
+        if key in ("outer_params", "outer_opt"):
+            return params_shardings(mesh, sub, outer=True,
+                                    tensor_parallel=tensor_parallel)
+        # counters
+        return jax.tree.map(lambda x: NamedSharding(mesh, P()), sub)
+
+    if hasattr(state, "map_groups"):  # TrainState
+        return state.map_groups(for_group)
+    return {key: for_group(key, sub) for key, sub in state.items()}
 
 
-def batch_shardings(mesh: Mesh, batch: PyTree, k_stacked: bool = True) -> PyTree:
+def batch_shardings(mesh: Mesh, batch: PyTree, k_stacked: bool = True,
+                    leading_scan: bool = False) -> PyTree:
+    """``leading_scan=True`` shards [H, K, B, ...] round-stacked batches (the
+    engine's fused round input): the scanned H axis stays unsharded, K and B
+    follow the per-step rule."""
     sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
 
     def spec(path, x):
         nd = len(x.shape)
+        shape = x.shape
+        lead: tuple = ()
+        if leading_scan:
+            lead, shape, nd = (None,), x.shape[1:], nd - 1
         if k_stacked:
-            pod = "pod" if ("pod" in sizes and _div(x.shape[0], sizes["pod"])) else None
-            data = "data" if (nd > 1 and _div(x.shape[1], sizes.get("data", 0))) else None
-            return NamedSharding(mesh, P(pod, data, *([None] * (nd - 2))))
-        data = "data" if _div(x.shape[0], sizes.get("data", 0)) else None
-        return NamedSharding(mesh, P(data, *([None] * (nd - 1))))
+            pod = "pod" if ("pod" in sizes and _div(shape[0], sizes["pod"])) else None
+            data = "data" if (nd > 1 and _div(shape[1], sizes.get("data", 0))) else None
+            return NamedSharding(mesh, P(*lead, pod, data, *([None] * (nd - 2))))
+        data = "data" if _div(shape[0], sizes.get("data", 0)) else None
+        return NamedSharding(mesh, P(*lead, data, *([None] * (nd - 1))))
 
     return tree_map_with_path(spec, batch)
 

@@ -1,10 +1,16 @@
 """Step builders: (jittable fn, abstract inputs, shardings) per input shape.
 
-  train_4k     -> DiLoCo ``train_step`` (inner step, every-step cost) and
+  train_4k     -> DiLoCo ``train_step`` (inner step, every-step cost),
                   ``sync_step`` (outer step, every-H cost — the cross-pod
-                  collective the paper optimizes)
+                  collective the paper optimizes), and ``round_step`` (the
+                  engine's fused H-steps+sync round executor, donated — the
+                  program production training actually runs)
   prefill_32k  -> ``prefill_step`` (full-seq forward, last-position logits)
   decode_32k / long_500k -> ``serve_step`` (1 token vs seq_len KV/SSM cache)
+
+The train plans and :class:`repro.engine.TrainEngine` lower from the same
+round builder (``repro.engine.build_round_fn``), so the production-mesh and
+CPU paths compile the same program modulo shardings.
 
 Everything is abstract (ShapeDtypeStruct via eval_shape): no parameter is
 ever allocated, which is what lets 1T-param configs lower on the CPU host.
@@ -163,6 +169,17 @@ def build_train_plans(arch_cfg: ModelConfig, shape: str, mesh: Mesh,
         new_state, _psi = outer_step(dcfg, state)
         return new_state
 
+    # the fused round executor — same builder the TrainEngine compiles
+    from repro.engine import build_round_fn
+
+    round_fn = build_round_fn(model, dcfg, opt, masks=None, rules=rules,
+                              spmd_axis=spmd_axis)
+    H = dcfg.sync_interval
+    round_batch_abs = jax.tree.map(
+        lambda b: jax.ShapeDtypeStruct((H, *b.shape), b.dtype), batch_abs)
+    round_batch_sh = batch_shardings(mesh, round_batch_abs, k_stacked=True,
+                                     leading_scan=True)
+
     plans = [
         StepPlan(
             name="train_step",
@@ -181,6 +198,15 @@ def build_train_plans(arch_cfg: ModelConfig, shape: str, mesh: Mesh,
             donate=(0,),
             meta={"kind": "sync", "tokens_per_step": 0,
                   "amortize": dcfg.sync_interval, "cfg": cfg, "dcfg": dcfg},
+        ),
+        StepPlan(
+            name="round_step",
+            fn=round_fn,
+            args=(state_abs, round_batch_abs),
+            in_shardings=(state_sh, round_batch_sh),
+            donate=(0,),
+            meta={"kind": "round", "tokens_per_step": spec.global_batch * S * H,
+                  "amortize": 1, "cfg": cfg, "dcfg": dcfg},
         ),
     ]
     return plans

@@ -1,9 +1,17 @@
-"""End-to-end training driver.
+"""End-to-end training driver on the unified TrainEngine.
 
-Runs DiLoCo/MuLoCo (or a DP baseline) on the synthetic LM data stream with
-checkpointing, eval-loss logging (the paper's smoothed-EMA estimate), and CSV
-metrics. On CPU this trains reduced configs (examples/); on a TPU cluster
-the same driver runs the production mesh (--mesh production).
+The driver is a thin scheduler around :class:`repro.engine.TrainEngine`: the
+entire communication round (H inner steps + outer sync, streaming segments
+included) is ONE donated, jitted function that stays on device; the Python
+layer only generates batches, drains metrics asynchronously (the paper's
+smoothed-EMA eval estimate + CSV logging ride under the accelerator's
+compute via :func:`repro.engine.run_rounds`), and checkpoints. The DP
+baseline is the same engine with the degenerate (K=1, H=1, no-outer) config.
+
+Runs DiLoCo/MuLoCo on the synthetic LM data stream. On CPU this trains
+reduced configs (examples/); on a TPU cluster the same driver runs the
+production mesh — the engine threads the StepPlan shardings so both lower
+from the same round builder.
 
     PYTHONPATH=src python -m repro.launch.train --arch smollm-135m --reduced \
         --inner muon --workers 4 --sync-interval 6 --rounds 20
@@ -12,7 +20,6 @@ from __future__ import annotations
 
 import argparse
 import csv
-import functools
 import os
 import time
 
@@ -22,14 +29,9 @@ import jax.numpy as jnp
 from repro.checkpoint import load_checkpoint, save_checkpoint
 from repro.configs import get_config, reduce_config
 from repro.core.compression import CompressionConfig
-from repro.core.diloco import (
-    DiLoCoConfig,
-    diloco_init,
-    diloco_round,
-    make_optimizer,
-    make_streaming_masks,
-)
+from repro.core.diloco import DiLoCoConfig
 from repro.data import DataConfig, MarkovStream, batches_for_round
+from repro.engine import TrainEngine, run_rounds
 from repro.models import build_model
 from repro.optim import OptimizerConfig
 
@@ -75,8 +77,13 @@ def train(args) -> dict:
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = reduce_config(cfg)
-    if args.seq_len:
-        cfg = cfg.replace(name=cfg.name)
+    # plumb --seq-len into the model config (single source of truth for the
+    # data pipeline; clamps the sliding window so W never exceeds S)
+    seq_len = args.seq_len or cfg.max_seq_len or 128
+    cfg = cfg.replace(
+        max_seq_len=seq_len,
+        sliding_window=min(cfg.sliding_window, seq_len) if cfg.sliding_window else 0,
+    )
     model = build_model(cfg)
 
     dcfg = make_diloco_cfg(args)
@@ -85,11 +92,10 @@ def train(args) -> dict:
         lr=args.lr, weight_decay=args.weight_decay, schedule=args.schedule,
         warmup_steps=max(total_steps // 100, 5), total_steps=total_steps,
     )
-    opt = make_optimizer(dcfg, icfg)
 
+    engine = TrainEngine(model, dcfg, icfg)
     rng = jax.random.PRNGKey(args.seed)
-    state = diloco_init(model, dcfg, icfg, rng)
-    masks = make_streaming_masks(state, dcfg)
+    state = engine.init(rng)
 
     start_round = 0
     if args.resume and os.path.exists(args.resume):
@@ -97,21 +103,18 @@ def train(args) -> dict:
         print(f"resumed from {args.resume} at round {start_round}")
 
     data = MarkovStream(DataConfig(
-        vocab=cfg.vocab, seq_len=args.seq_len or 128,
+        vocab=cfg.vocab, seq_len=cfg.max_seq_len,
         batch_per_worker=args.batch_per_worker, n_workers=dcfg.n_workers,
         seed=args.seed,
     ))
     eval_data = MarkovStream(DataConfig(
-        vocab=cfg.vocab, seq_len=args.seq_len or 128,
+        vocab=cfg.vocab, seq_len=cfg.max_seq_len,
         batch_per_worker=args.batch_per_worker, n_workers=1, seed=args.seed + 10_000,
     ))
 
-    round_fn = jax.jit(functools.partial(diloco_round, model, dcfg, opt, masks=masks))
-
-    @jax.jit
-    def eval_loss(outer_params, batch):
-        b = jax.tree.map(lambda x: x[0], batch)  # single eval shard
-        return model.loss(outer_params, b)[0]
+    def eval_fn(st, r):
+        b = jax.tree.map(lambda x: x[0], eval_data.batch(r))  # single eval shard
+        return engine.eval_loss(st["outer_params"], b)
 
     os.makedirs(args.out, exist_ok=True)
     csv_path = os.path.join(args.out, "metrics.csv")
@@ -121,25 +124,32 @@ def train(args) -> dict:
         writer = csv.writer(f)
         if start_round == 0:
             writer.writerow(["round", "step", "train_loss", "eval_loss", "wall_s"])
-        for r in range(start_round, args.rounds):
-            batches = batches_for_round(data, r, dcfg.sync_interval)
-            state, info = round_fn(state, batches)
-            step = (r + 1) * dcfg.sync_interval
-            ev = float(eval_loss(state["outer_params"], eval_data.batch(r)))
-            tr = float(info["loss"].mean())
-            losses.append(ev)
-            steps.append(step)
-            writer.writerow([r, step, f"{tr:.5f}", f"{ev:.5f}", f"{time.time()-t_start:.1f}"])
+
+        def on_round(rec):
+            losses.append(rec["eval_loss"])
+            steps.append(rec["step"])
+            writer.writerow([rec["round"], rec["step"], f"{rec['train_loss']:.5f}",
+                             f"{rec['eval_loss']:.5f}", f"{time.time()-t_start:.1f}"])
             f.flush()
             if args.verbose:
-                print(f"round {r:4d} step {step:6d} train {tr:.4f} eval {ev:.4f}")
-            if args.checkpoint_every and (r + 1) % args.checkpoint_every == 0:
-                save_checkpoint(os.path.join(args.out, "ckpt.npz"), state, step=r + 1)
+                print(f"round {rec['round']:4d} step {rec['step']:6d} "
+                      f"train {rec['train_loss']:.4f} eval {rec['eval_loss']:.4f}")
+
+        def on_state(r, st):
+            save_checkpoint(os.path.join(args.out, "ckpt.npz"), st, step=r + 1)
+
+        state, _history = run_rounds(
+            engine, state, lambda r: batches_for_round(data, r, dcfg.sync_interval),
+            args.rounds, start=start_round, eval_fn=eval_fn,
+            on_round=on_round,
+            on_state=on_state if args.checkpoint_every else None,
+            on_state_every=args.checkpoint_every,
+        )
 
     final = smoothed_eval_loss(losses, steps, dcfg.sync_interval)
     print(f"final smoothed eval loss: {final:.4f} "
           f"(floor={data.entropy_floor_nats():.4f} nats)")
-    return {"final_loss": final, "losses": losses, "steps": steps}
+    return {"final_loss": final, "losses": losses, "steps": steps, "state": state}
 
 
 def build_parser() -> argparse.ArgumentParser:
@@ -156,7 +166,8 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--outer-lr", type=float, default=0.7)
     ap.add_argument("--outer-momentum", type=float, default=0.9)
     ap.add_argument("--batch-per-worker", type=int, default=8)
-    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--seq-len", type=int, default=0,
+                    help="0 -> the arch config's max_seq_len (128 if unset)")
     ap.add_argument("--compression", default="none", choices=["none", "topk", "quant"])
     ap.add_argument("--bits", type=int, default=4)
     ap.add_argument("--quant-mode", default="linear", choices=["linear", "statistical"])

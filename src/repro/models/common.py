@@ -65,6 +65,10 @@ class ModelConfig:
     n_encoder_layers: int = 0
     # attention variant
     sliding_window: int = 0  # 0 = full causal attention
+    # training sequence length (0 = unspecified). The launchers plumb
+    # --seq-len here so the model config is the single source of truth for
+    # the data pipeline, and the sliding window is clamped to it.
+    max_seq_len: int = 0
     # numerics
     dtype: str = "bfloat16"
     param_dtype: str = "float32"

@@ -118,8 +118,11 @@ class RooflineTerms:
 
 
 def model_flops(kind: str, n_active_params: float, tokens: float) -> float:
-    """6*N*D for train, 2*N*D for inference forward (per step, all chips)."""
-    if kind == "train":
+    """6*N*D for train, 2*N*D for inference forward (per step, all chips).
+
+    ``round`` (the engine's fused H-step+sync executor) passes the round's
+    total token count, so it is 6*N*D like train."""
+    if kind in ("train", "round"):
         return 6.0 * n_active_params * tokens
     if kind in ("prefill", "decode"):
         return 2.0 * n_active_params * tokens

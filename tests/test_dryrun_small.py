@@ -54,8 +54,10 @@ def test_dryrun_on_8_device_world():
                          text=True, env=env, cwd=os.path.dirname(os.path.dirname(__file__)))
     assert res.returncode == 0, res.stderr[-3000:]
     out = json.loads(res.stdout.strip().splitlines()[-1])
-    assert len(out) == 4  # train has train+sync plans
+    assert len(out) == 5  # train has train+sync+round plans
     # the DiLoCo sync step must exist and every plan lowered
     assert all(v["ok"] for v in out.values())
     # the train step moves bytes over the wire (FSDP gathers)
     assert out["smollm-135m/train_4k/train_step"]["collective_total"] > 0
+    # the engine's fused round plan lowers on the same mesh and communicates
+    assert out["smollm-135m/train_4k/round_step"]["collective_total"] > 0

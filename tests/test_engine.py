@@ -1,0 +1,205 @@
+"""TrainEngine invariants: DP degeneracy, streaming parity, donation,
+no-retrace, TrainState pytree/mapping behaviour, checkpoint roundtrip."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import load_checkpoint, save_checkpoint
+from repro.core import DiLoCoConfig, diloco_round, dp_config, dp_init, dp_step, make_optimizer
+from repro.data import DataConfig, MarkovStream, batches_for_round
+from repro.engine import TrainEngine, TrainState, dp_engine, run_rounds
+from repro.models import ModelConfig, build_model
+from repro.optim import OptimizerConfig
+
+CFG = ModelConfig(arch_type="dense", n_layers=2, d_model=32, n_heads=2, n_kv_heads=2,
+                  d_ff=64, vocab=64, remat=False, dtype="float32", qk_norm=True)
+ICFG = OptimizerConfig(lr=1e-2, weight_decay=0.0)
+
+
+def _stream(n_workers, bs=2, s=16, seed=3):
+    return MarkovStream(DataConfig(vocab=CFG.vocab, seq_len=s, batch_per_worker=bs,
+                                   n_workers=n_workers, seed=seed))
+
+
+# ---------------------------------------------------------------------------
+# DP degeneracy: the (K=1, H=1, no-outer) engine IS the plain inner optimizer
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("inner", ["adamw", "muon"])
+def test_dp_engine_equals_dp_step(inner):
+    model = build_model(CFG)
+    engine = dp_engine(model, inner, ICFG)
+    state = engine.init(jax.random.PRNGKey(0))
+    dp_state, opt = dp_init(model, inner, ICFG, jax.random.PRNGKey(0))
+    stream = _stream(1)
+    for r in range(3):
+        batches = batches_for_round(stream, r, 1)
+        state, _ = engine.step(state, batches)
+        dp_state, _ = dp_step(model, opt, dp_state,
+                              jax.tree.map(lambda x: x[0, 0], batches))
+    a = state["outer_params"]["layers"]["mlp"]["w_in"]
+    b = dp_state["params"]["layers"]["mlp"]["w_in"]
+    # both sides share inner_step; only compilation layout differs. Muon's
+    # bf16 Newton-Schulz amplifies ~1e-7 rounding, so its tolerance is looser.
+    kw = dict(rtol=2e-2, atol=1e-3) if inner == "muon" else dict(rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), **kw)
+
+
+def test_dp_config_shape():
+    dcfg = dp_config("muon")
+    assert dcfg.n_workers == 1 and dcfg.sync_interval == 1
+    assert not dcfg.outer_enabled and dcfg.is_muloco
+
+
+# ---------------------------------------------------------------------------
+# Streaming: J>1 matches J==1 signature and loss trajectory
+# ---------------------------------------------------------------------------
+
+
+def test_streaming_round_signature_matches_dense():
+    model = build_model(CFG)
+    infos = {}
+    for J in (1, 2):
+        dcfg = DiLoCoConfig(n_workers=2, sync_interval=4, inner_name="muon",
+                            streaming_partitions=J)
+        engine = TrainEngine(model, dcfg, ICFG)
+        state = engine.init(jax.random.PRNGKey(0))
+        _, info = engine.step(state, batches_for_round(_stream(2), 0, 4))
+        infos[J] = info
+    assert sorted(infos[1]) == sorted(infos[2]) == ["loss", "psi"]
+    assert infos[1]["loss"].shape == infos[2]["loss"].shape == (4,)
+    assert (jax.tree.structure(infos[1]["psi"])
+            == jax.tree.structure(infos[2]["psi"]))
+
+
+def test_streaming_j2_tracks_j1_loss_trajectory():
+    model = build_model(CFG)
+    traj = {}
+    for J in (1, 2):
+        dcfg = DiLoCoConfig(n_workers=2, sync_interval=4, inner_name="muon",
+                            streaming_partitions=J)
+        engine = TrainEngine(model, dcfg, ICFG)
+        state = engine.init(jax.random.PRNGKey(0))
+        losses = []
+        for r in range(3):
+            state, info = engine.step(state, batches_for_round(_stream(2), r, 4))
+            losses.append(float(info["loss"].mean()))
+        traj[J] = losses
+    # same data, same inner opt: per-round means must track closely
+    for a, b in zip(traj[1], traj[2]):
+        assert abs(a - b) < 0.15 * a
+
+
+def test_streaming_requires_divisible_partitions():
+    model = build_model(CFG)
+    dcfg = DiLoCoConfig(n_workers=2, sync_interval=4, inner_name="muon",
+                        streaming_partitions=3)  # 3 does not divide 4
+    opt = make_optimizer(dcfg, ICFG)
+    engine = TrainEngine(model, dcfg, ICFG)
+    state = engine.init(jax.random.PRNGKey(0))
+    batches = batches_for_round(_stream(2), 0, 4)
+    with pytest.raises(ValueError, match="divide"):
+        diloco_round(model, dcfg, opt, state, batches, masks=engine._masks)
+
+
+def test_streaming_requires_masks():
+    model = build_model(CFG)
+    dcfg = DiLoCoConfig(n_workers=2, sync_interval=4, inner_name="muon",
+                        streaming_partitions=2)
+    opt = make_optimizer(dcfg, ICFG)
+    state = TrainEngine(model, dcfg, ICFG).init(jax.random.PRNGKey(0))
+    with pytest.raises(ValueError, match="masks"):
+        diloco_round(model, dcfg, opt, state, batches_for_round(_stream(2), 0, 4),
+                     masks=None)
+
+
+# ---------------------------------------------------------------------------
+# Donation + no-retrace
+# ---------------------------------------------------------------------------
+
+
+def test_round_fn_donates_state_and_never_retraces():
+    model = build_model(CFG)
+    dcfg = DiLoCoConfig(n_workers=2, sync_interval=2, inner_name="adamw")
+    engine = TrainEngine(model, dcfg, ICFG)
+    state = engine.init(jax.random.PRNGKey(0))
+    stream = _stream(2)
+
+    lowered = engine.lower(state, batches_for_round(stream, 0, 2))
+    # the TrainState argument is donated: input buffers alias outputs
+    assert "tf.aliasing_output" in lowered.as_text()
+    assert lowered.compile().memory_analysis().alias_size_in_bytes > 0
+
+    for r in range(3):
+        state, _ = engine.step(state, batches_for_round(stream, r, 2))
+    # three executions (differing data, same shapes) -> exactly one trace
+    assert engine.jitted_round._cache_size() == 1
+
+
+def test_run_rounds_driver_collects_all_metrics():
+    model = build_model(CFG)
+    dcfg = DiLoCoConfig(n_workers=2, sync_interval=2, inner_name="adamw")
+    engine = TrainEngine(model, dcfg, ICFG)
+    state = engine.init(jax.random.PRNGKey(0))
+    stream = _stream(2)
+    seen = []
+    state, history = run_rounds(
+        engine, state, lambda r: batches_for_round(stream, r, 2), 5,
+        eval_fn=lambda st, r: engine.eval_loss(
+            st["outer_params"], jax.tree.map(lambda x: x[0], stream.batch(r))),
+        on_round=lambda rec: seen.append(rec["round"]),
+    )
+    assert seen == [0, 1, 2, 3, 4]
+    assert [h["round"] for h in history] == seen
+    assert all(np.isfinite(h["train_loss"]) and np.isfinite(h["eval_loss"])
+               for h in history)
+    assert history[-1]["step"] == 10
+    assert int(state["round"]) == 5
+
+
+# ---------------------------------------------------------------------------
+# TrainState: pytree behaviour + dict-era compatibility + checkpointing
+# ---------------------------------------------------------------------------
+
+
+def test_trainstate_is_pytree_with_mapping_access():
+    model = build_model(CFG)
+    dcfg = DiLoCoConfig(n_workers=2, sync_interval=2, inner_name="adamw")
+    state = TrainEngine(model, dcfg, ICFG).init(jax.random.PRNGKey(0))
+    assert isinstance(state, TrainState)
+    # mapping-style access (legacy call sites)
+    assert state["round"].dtype == jnp.int32
+    assert "ef" not in state and state.ef is None
+    assert set(state.keys()) == {"outer_params", "outer_opt", "worker_params",
+                                 "inner_state", "round"}
+    # flatten/unflatten roundtrip preserves structure and values
+    leaves, treedef = jax.tree.flatten(state)
+    rebuilt = jax.tree.unflatten(treedef, leaves)
+    assert isinstance(rebuilt, TrainState)
+    np.testing.assert_array_equal(
+        np.asarray(rebuilt["worker_params"]["embed"]),
+        np.asarray(state["worker_params"]["embed"]))
+    # setitem (analysis helpers mutate states in place)
+    state["outer_params"] = jax.tree.map(jnp.zeros_like, state["outer_params"])
+    assert float(jnp.abs(state.outer_params["embed"]).max()) == 0.0
+
+
+def test_trainstate_checkpoint_roundtrip(tmp_path):
+    model = build_model(CFG)
+    dcfg = DiLoCoConfig(n_workers=2, sync_interval=2, inner_name="muon")
+    engine = TrainEngine(model, dcfg, ICFG)
+    state = engine.init(jax.random.PRNGKey(0))
+    state, _ = engine.step(state, batches_for_round(_stream(2), 0, 2))
+    path = os.path.join(tmp_path, "ckpt.npz")
+    save_checkpoint(path, state, step=7)
+    template = engine.init(jax.random.PRNGKey(1))
+    restored, step = load_checkpoint(path, template)
+    assert step == 7
+    assert isinstance(restored, TrainState)
+    np.testing.assert_allclose(
+        np.asarray(restored["outer_params"]["embed"]),
+        np.asarray(state["outer_params"]["embed"]), rtol=1e-6)
