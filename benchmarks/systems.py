@@ -113,6 +113,48 @@ def bench_train_throughput(rounds: int = 4, warmup: int = 1,
     return rows
 
 
+def bench_optimizer_sweep(rounds: int = 3, warmup: int = 1) -> list[dict]:
+    """Inner-optimizer sweep at the throughput-bench shape (K=4, H=16,
+    seq=16, bpw=1): measured engine steps/s per transform-chain optimizer.
+
+    ``muon_bp`` runs at ns_period=H (one orthogonalization per round — the
+    round boundary aligns with the period). On CPU the vmapped lax.cond
+    lowers to select, so the NS saving shows up on accelerators; here the
+    row mainly proves the variant lowers through the same donated round.
+    """
+    from repro.configs import get_config, reduce_config
+    from repro.core import DiLoCoConfig
+    from repro.data import DataConfig, MarkovStream, batches_for_round
+    from repro.engine import TrainEngine, run_rounds
+    from repro.models import build_model
+    from repro.optim import OptimizerConfig
+
+    cfg = reduce_config(get_config("smollm-135m"))
+    model = build_model(cfg)
+    K, H, SEQ, BPW_ = 4, 16, 16, 1
+    stream = MarkovStream(DataConfig(vocab=cfg.vocab, seq_len=SEQ,
+                                     batch_per_worker=BPW_, n_workers=K, seed=1))
+    total = rounds + warmup
+    round_batches = [batches_for_round(stream, r, H) for r in range(total)]
+
+    rows = []
+    for inner in ("adamw", "muon", "muon_bp"):
+        icfg = OptimizerConfig(lr=2e-2, weight_decay=1e-4, schedule="constant",
+                               ns_period=H if inner == "muon_bp" else 1)
+        dcfg = DiLoCoConfig(n_workers=K, sync_interval=H, inner_name=inner)
+        engine = TrainEngine(model, dcfg, icfg)
+        state = engine.init(jax.random.PRNGKey(0))
+        state, _ = run_rounds(engine, state, lambda r: round_batches[r], warmup)
+        t0 = time.perf_counter()
+        state, _ = run_rounds(engine, state, lambda r: round_batches[r], total,
+                              start=warmup)
+        jax.block_until_ready(state["outer_params"])
+        sps = rounds * H / (time.perf_counter() - t0)
+        rows.append({"name": f"optimizer_bench/{inner}",
+                     "value": round(sps, 3), "derived": "steps_per_s"})
+    return rows
+
+
 def bench_tab10_wallclock() -> list[dict]:
     """Tab. 10: idealized 15B training hours across bandwidths."""
     rows = []

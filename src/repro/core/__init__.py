@@ -11,6 +11,8 @@ from repro.core.diloco import (  # noqa: F401
     dp_step,
     inner_step,
     make_optimizer,
+    make_outer,
     make_streaming_masks,
     outer_step,
+    OuterOptimizer,
 )

@@ -46,6 +46,15 @@ def reduce_pseudogradients(worker_deltas: PyTree, cfg: CompressionConfig) -> PyT
     return jax.tree.map(per_leaf, worker_deltas)
 
 
+def reduce_mean(cfg: CompressionConfig):
+    """The pseudogradient all-reduce as a stateless transform stage:
+    [K, ...]-stacked (compressed) deltas -> Psi (mean over K, + Q2 for the
+    a2a_rs_ag quantized collective)."""
+    from repro.optim.transform import stateless
+
+    return stateless(lambda comm, _params: reduce_pseudogradients(comm, cfg))
+
+
 def collective_bytes_tree(params: PyTree, cfg: CompressionConfig, n_workers: int) -> dict:
     """Wire bytes per outer sync under the modeled collectives (per worker).
 

@@ -151,3 +151,36 @@ def ef_compress_tree(delta: PyTree, residual: PyTree, cfg: CompressionConfig) ->
     comm = jax.tree.map(lambda t: t[0], out, is_leaf=is_tup)
     new_res = jax.tree.map(lambda t: t[1], out, is_leaf=is_tup)
     return comm, new_res
+
+
+# ---------------------------------------------------------------------------
+# Transform-stack stages (the worker side of the pseudogradient chain)
+# ---------------------------------------------------------------------------
+
+
+def compress(cfg: CompressionConfig):
+    """Stateless worker-side compression C(Δ_k) on [K, ...]-stacked deltas."""
+    from repro.optim.transform import stateless
+
+    return stateless(lambda deltas, _params: jax.vmap(
+        lambda d: compress_tree(d, cfg))(deltas))
+
+
+def error_feedback(cfg: CompressionConfig):
+    """Error-feedback compression as a stateful transform on [K, ...] deltas.
+
+    State is the K-stacked residual tree E (allocated by
+    ``diloco_init`` in the optimizer ``state_dtype``); ``update`` runs
+    :func:`ef_compress_tree` per worker and emits the communicated values.
+    The streaming-sync merge (untouched partitions keep their residuals)
+    lives in the outer optimizer, which sees the partition mask.
+    """
+    from repro.optim.transform import Transform
+
+    def init(stacked_template: PyTree) -> PyTree:
+        return jax.tree.map(jnp.zeros_like, stacked_template)
+
+    def update(deltas: PyTree, residuals: PyTree, params: PyTree):
+        return jax.vmap(lambda d, e: ef_compress_tree(d, e, cfg))(deltas, residuals)
+
+    return Transform(init=init, update=update)

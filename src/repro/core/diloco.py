@@ -20,6 +20,11 @@ State lives in :class:`repro.engine.TrainState` (a registered pytree), and
 execution goes through :class:`repro.engine.TrainEngine`, which compiles
 :func:`diloco_round` once as a donated, jitted program. The DP baseline is
 the degenerate ``dp_config`` (K=1, H=1, no outer) of the same round.
+
+Both optimizers are transform chains (:mod:`repro.optim.transform`): the
+inner step is a ``descend``-wrapped chain from :func:`make_optimizer`, and
+the whole pseudogradient path (Δ -> compress/EF -> reduce -> outer descent)
+is the chain declared by :func:`make_outer` and executed by ``outer_step``.
 """
 from __future__ import annotations
 
@@ -29,11 +34,16 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
-from repro.core.collectives import reduce_pseudogradients
-from repro.core.compression import CompressionConfig, compress_tree, ef_compress_tree
+from repro.core.collectives import reduce_mean
+from repro.core.compression import CompressionConfig, compress, error_feedback
 from repro.core.streaming import masked_update, streaming_masks
 from repro.models.api import Model
-from repro.optim import OptimizerConfig, make_inner_optimizer, nesterov_init, nesterov_step
+from repro.optim import (
+    OptimizerConfig,
+    chain,
+    make_inner_optimizer,
+    make_outer_transform,
+)
 
 PyTree = Any
 
@@ -43,11 +53,15 @@ class DiLoCoConfig:
     n_workers: int = 8  # K
     sync_interval: int = 30  # H
     inner_name: str = "muon"  # 'muon' -> MuLoCo, 'adamw' -> DiLoCo
+    outer_name: str = "nesterov"  # 'nesterov' (paper) | 'sgd'
     outer_lr: float = 0.7  # eta_out (paper Fig. 22 optima)
     outer_momentum: float = 0.9  # mu
     compression: CompressionConfig = dataclasses.field(default_factory=CompressionConfig)
     streaming_partitions: int = 1  # J (1 = no streaming)
     ns_impl: str = "jnp"
+    # Route the outer descent through the fused Pallas outer-update kernel
+    # (kernels/outer_update.py): one elementwise VMEM pass for (theta', u').
+    outer_kernel: bool = False
     # False -> the degenerate data-parallel config: no outer Nesterov, the
     # synced params are simply the (K-mean of the) worker params. With
     # K=1, H=1 this IS the plain inner optimizer — DP AdamW / DP Muon run
@@ -67,8 +81,83 @@ def dp_config(inner_name: str, ns_impl: str = "jnp") -> DiLoCoConfig:
 
 
 def make_optimizer(dcfg: DiLoCoConfig, inner_cfg: OptimizerConfig):
-    kw = {"ns_impl": dcfg.ns_impl} if dcfg.inner_name == "muon" else {}
+    kw = {"ns_impl": dcfg.ns_impl} if dcfg.inner_name != "adamw" else {}
     return make_inner_optimizer(dcfg.inner_name, inner_cfg, **kw)
+
+
+# ---------------------------------------------------------------------------
+# The outer optimizer: a declared pseudogradient chain
+# ---------------------------------------------------------------------------
+
+
+class OuterOptimizer:
+    """The pseudogradient path Δ -> compress/EF -> reduce -> outer descent as
+    ONE declared transform chain (``self.tx``), replacing the inline branches
+    the pre-transform ``outer_step`` hand-wired.
+
+    Chain state is the stage tuple ``(ef_residuals | (), (), outer_opt)``;
+    the TrainState keeps storing the EF residuals and the outer-transform
+    state in its ``ef`` / ``outer_opt`` fields (they shard differently:
+    K-stacked vs ZeRO over pods), and this wrapper packs/unpacks them around
+    the chain. ``step`` also owns the streaming-mask merge semantics, which
+    are stage-specific: candidate params and outer momentum merge under the
+    partition mask, untouched partitions keep their EF residuals.
+    """
+
+    def __init__(self, dcfg: DiLoCoConfig, state_dtype="float32"):
+        ccfg = dcfg.compression
+        self.dcfg = dcfg
+        self.state_dtype = jnp.dtype(state_dtype)
+        self.has_ef = bool(ccfg.error_feedback and ccfg.kind != "none")
+        self.worker_stage = error_feedback(ccfg) if self.has_ef else compress(ccfg)
+        self.terminal = make_outer_transform(
+            dcfg.outer_name, dcfg.outer_lr, dcfg.outer_momentum,
+            state_dtype=self.state_dtype, kernel=dcfg.outer_kernel)
+        self.tx = chain(self.worker_stage, reduce_mean(ccfg), self.terminal)
+
+    # -- state construction --------------------------------------------------
+
+    def init_opt(self, params: PyTree) -> PyTree:
+        """Outer-transform state (no K axis; ZeRO-sharded on the mesh)."""
+        return self.terminal.init(params)
+
+    def init_ef(self, params: PyTree, n_workers: int) -> PyTree | None:
+        """K-stacked EF residuals, or None when the config never uses them.
+
+        Matches the legacy allocation rule: residuals exist whenever
+        ``error_feedback=True`` (even with ``kind='none'``, where the chain
+        skips the EF stage)."""
+        if not self.dcfg.compression.error_feedback:
+            return None
+        template = jax.tree.map(
+            lambda p: jnp.zeros((n_workers, *p.shape), self.state_dtype), params)
+        return error_feedback(self.dcfg.compression).init(template)
+
+    # -- the sync ------------------------------------------------------------
+
+    def step(self, params: PyTree, deltas: PyTree, opt_state: PyTree,
+             ef: PyTree | None, mask: PyTree | None = None):
+        """Run the chain on (masked) deltas; returns
+        ``(new_params, new_opt_state, new_ef, psi)``."""
+        state = (ef if self.has_ef else (), (), opt_state)
+        psi, state = self.tx.update(deltas, state, params)
+        cand_params, state = self.tx.apply(params, psi, state)
+        new_ef = state[0] if self.has_ef else ef
+        new_opt = state[2]
+        if mask is None:
+            return cand_params, new_opt, new_ef, psi
+        new_params = masked_update(mask, cand_params, params)
+        new_opt = self.terminal.mask_state(mask, new_opt, opt_state)
+        if self.has_ef:  # untouched partitions keep their residuals
+            new_ef = jax.tree.map(
+                lambda m, ne, oe: jnp.where((m[None] if m.ndim else m) > 0, ne, oe),
+                mask, new_ef, ef)
+        return new_params, new_opt, new_ef, psi
+
+
+def make_outer(dcfg: DiLoCoConfig, state_dtype="float32") -> OuterOptimizer:
+    """Build the declared pseudogradient chain for a DiLoCo config."""
+    return OuterOptimizer(dcfg, state_dtype=state_dtype)
 
 
 # ---------------------------------------------------------------------------
@@ -85,17 +174,14 @@ def diloco_init(model: Model, dcfg: DiLoCoConfig, inner_cfg: OptimizerConfig, rn
     worker_params = jax.tree.map(lambda p: jnp.broadcast_to(p[None], (K, *p.shape)), params)
     opt = make_optimizer(dcfg, inner_cfg)
     inner_state = jax.vmap(opt.init)(worker_params)
-    ef = None
-    if dcfg.compression.error_feedback:
-        sdt = jnp.dtype(inner_cfg.state_dtype)
-        ef = jax.tree.map(lambda p: jnp.zeros((K, *p.shape), sdt), params)
+    outer = make_outer(dcfg, state_dtype=inner_cfg.state_dtype)
     return TrainState(
         outer_params=params,
-        outer_opt=nesterov_init(params, state_dtype=jnp.dtype(inner_cfg.state_dtype)),
+        outer_opt=outer.init_opt(params),
         worker_params=worker_params,
         inner_state=inner_state,
         round=jnp.zeros((), jnp.int32),
-        ef=ef,
+        ef=outer.init_ef(params, K),
     )
 
 
@@ -145,15 +231,19 @@ def compute_deltas(state: PyTree) -> PyTree:
     )
 
 
-def outer_step(dcfg: DiLoCoConfig, state: PyTree, mask: PyTree | None = None) -> tuple[PyTree, PyTree]:
-    """Communicate + outer Nesterov update (+ worker reset). Returns (state, Ψ).
+def outer_step(dcfg: DiLoCoConfig, state: PyTree, mask: PyTree | None = None,
+               outer: OuterOptimizer | None = None) -> tuple[PyTree, PyTree]:
+    """Communicate + outer update (+ worker reset). Returns (state, Ψ).
+
+    The pseudogradient path Δ -> compress/EF -> reduce -> outer descent runs
+    through the declared :class:`OuterOptimizer` chain (built from ``dcfg``
+    when not supplied — the engine builds it once and threads it through).
 
     With ``dcfg.outer_enabled=False`` (the DP degenerate config) the synced
-    params are simply the K-mean of the worker params: no Nesterov, no
+    params are simply the K-mean of the worker params: no outer transform, no
     compression, no worker reset — at K=1 this is exactly the plain inner
     optimizer, through the same code path as DiLoCo/MuLoCo.
     """
-    ccfg = dcfg.compression
     deltas = compute_deltas(state)
     if not dcfg.outer_enabled:
         if mask is not None:
@@ -178,29 +268,10 @@ def outer_step(dcfg: DiLoCoConfig, state: PyTree, mask: PyTree | None = None) ->
     if mask is not None:
         deltas = jax.tree.map(lambda m, d: m[None] * d if m.ndim else m * d, mask, deltas)
 
-    updates: dict = {}
-    if ccfg.error_feedback and ccfg.kind != "none":
-        comm, new_ef = jax.vmap(lambda d, e: ef_compress_tree(d, e, ccfg))(deltas, state["ef"])
-        if mask is not None:  # untouched partitions keep their residuals
-            new_ef = jax.tree.map(
-                lambda m, ne, oe: jnp.where((m[None] if m.ndim else m) > 0, ne, oe),
-                mask, new_ef, state["ef"],
-            )
-        updates["ef"] = new_ef
-    else:
-        comm = jax.vmap(lambda d: compress_tree(d, ccfg))(deltas)
-
-    psi = reduce_pseudogradients(comm, ccfg)  # mean over K (+ Q2 for a2a quant)
-
-    cand_params, cand_opt = nesterov_step(
-        state["outer_params"], psi, state["outer_opt"],
-        lr=dcfg.outer_lr, momentum=dcfg.outer_momentum,
-    )
-    if mask is None:
-        new_outer, new_opt = cand_params, cand_opt
-    else:
-        new_outer = masked_update(mask, cand_params, state["outer_params"])
-        new_opt = {"u": masked_update(mask, cand_opt["u"], state["outer_opt"]["u"])}
+    outer = outer or make_outer(dcfg)
+    new_outer, new_opt, new_ef, psi = outer.step(
+        state["outer_params"], deltas, state["outer_opt"], state.get("ef"),
+        mask=mask)
 
     # broadcast synced params back to workers (masked portions only)
     def reset(o, w, m=None):
@@ -215,8 +286,10 @@ def outer_step(dcfg: DiLoCoConfig, state: PyTree, mask: PyTree | None = None) ->
     else:
         new_workers = jax.tree.map(lambda o, w, m: reset(o, w, m), new_outer, state["worker_params"], mask)
 
-    updates.update(outer_params=new_outer, outer_opt=new_opt,
-                   worker_params=new_workers)
+    updates: dict = dict(outer_params=new_outer, outer_opt=new_opt,
+                         worker_params=new_workers)
+    if new_ef is not None:
+        updates["ef"] = new_ef
     updates["round"] = state["round"] + 1
     return _updated(state, **updates), psi
 
@@ -228,7 +301,8 @@ def outer_step(dcfg: DiLoCoConfig, state: PyTree, mask: PyTree | None = None) ->
 
 def diloco_round(model: Model, dcfg: DiLoCoConfig, opt, state: PyTree, batches: PyTree,
                  masks: list[PyTree] | None = None,
-                 spmd_axis: str | None = None) -> tuple[PyTree, dict]:
+                 spmd_axis: str | None = None,
+                 outer: OuterOptimizer | None = None) -> tuple[PyTree, dict]:
     """One communication round: H inner steps then outer sync(s).
 
     This is THE round function: ``lax.scan`` over the H inner steps with the
@@ -264,7 +338,7 @@ def diloco_round(model: Model, dcfg: DiLoCoConfig, opt, state: PyTree, batches: 
 
     if J <= 1:
         state, losses = scan_inner(state, batches)
-        state, psi = outer_step(dcfg, state)
+        state, psi = outer_step(dcfg, state, outer=outer)
         return state, {"loss": losses, "psi": psi}
 
     if H % J:
@@ -281,7 +355,7 @@ def diloco_round(model: Model, dcfg: DiLoCoConfig, opt, state: PyTree, batches: 
     for j in range(J):
         seg_batches = jax.tree.map(lambda b: b[j * seg : (j + 1) * seg], batches)
         state, losses = scan_inner(state, seg_batches)
-        state, psi_j = outer_step(dcfg, state, mask=masks[j])
+        state, psi_j = outer_step(dcfg, state, mask=masks[j], outer=outer)
         # psi leaves are un-stacked (no K axis): the masks broadcast directly
         masked_j = jax.tree.map(lambda m, p: m * p, masks[j], psi_j)
         psi_acc = masked_j if psi_acc is None else jax.tree.map(jnp.add, psi_acc, masked_j)

@@ -46,13 +46,39 @@ class MarkovStream:
         self.table = jnp.asarray(_transition_table(self.cfg))
         zipf = 1.0 / (np.arange(1, self.cfg.vocab + 1) ** 1.2)
         self.start_logits = jnp.asarray(np.log(zipf / zipf.sum()), jnp.float32)
+        # one compiled sampler per n_steps (jitted: a whole round's batches
+        # are generated in a single dispatch instead of H python-level calls)
+        self._stacked_fns: dict[int, callable] = {}
 
-    def batch(self, step: int) -> dict:
-        """Batch for one global step: leaves [K, B, S] (+labels)."""
+    def _batch_toks(self, step) -> jax.Array:
+        """[K, B, S+1] token sample for one global step (traced-step safe)."""
         cfg = self.cfg
         key = jax.random.fold_in(jax.random.PRNGKey(cfg.seed), step)
         keys = jax.random.split(key, cfg.n_workers)
-        toks = jax.vmap(lambda k: self._sample(k, cfg.batch_per_worker, cfg.seq_len + 1))(keys)
+        return jax.vmap(lambda k: self._sample(k, cfg.batch_per_worker, cfg.seq_len + 1))(keys)
+
+    def batch(self, step: int) -> dict:
+        """Batch for one global step: leaves [K, B, S] (+labels)."""
+        toks = self._batch_toks(step)
+        return {"tokens": toks[..., :-1], "labels": toks[..., 1:]}
+
+    def batch_stack(self, start_step: int, n_steps: int) -> dict:
+        """``n_steps`` consecutive batches in ONE compiled call: [n, K, B, S].
+
+        Bitwise-identical to stacking ``batch(start_step + h)`` for h in
+        range(n_steps) — the per-step threefry fold-in and per-worker sampling
+        are the same ops under an extra vmap — but built device-side in a
+        single dispatch, so the engine's scan input no longer costs H
+        host-level trace/dispatch round-trips per round.
+        """
+        fn = self._stacked_fns.get(n_steps)
+        if fn is None:
+            def stacked(start):
+                steps = start + jnp.arange(n_steps)
+                return jax.vmap(self._batch_toks)(steps)
+
+            fn = self._stacked_fns[n_steps] = jax.jit(stacked)
+        toks = fn(jnp.asarray(start_step, jnp.int32))
         return {"tokens": toks[..., :-1], "labels": toks[..., 1:]}
 
     def _sample(self, key: jax.Array, batch: int, length: int) -> jax.Array:
@@ -75,6 +101,8 @@ class MarkovStream:
 
 
 def batches_for_round(stream: MarkovStream, round_idx: int, sync_interval: int) -> dict:
-    """Stacked batches for one DiLoCo round: leaves [H, K, B, S]."""
-    bs = [stream.batch(round_idx * sync_interval + h) for h in range(sync_interval)]
-    return jax.tree.map(lambda *xs: jnp.stack(xs), *bs)
+    """Stacked batches for one DiLoCo round: leaves [H, K, B, S].
+
+    Generated in one compiled call (:meth:`MarkovStream.batch_stack`) rather
+    than H sequential ``stream.batch`` host dispatches."""
+    return stream.batch_stack(round_idx * sync_interval, sync_interval)

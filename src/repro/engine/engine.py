@@ -32,6 +32,7 @@ from repro.core.diloco import (
     diloco_round,
     dp_config,
     make_optimizer,
+    make_outer,
 )
 from repro.engine.state import TrainState
 from repro.models.api import Model
@@ -43,10 +44,13 @@ PyTree = Any
 def build_round_fn(model: Model, dcfg: DiLoCoConfig, opt,
                    masks: list[PyTree] | None = None,
                    rules: dict | None = None,
-                   spmd_axis: str | None = None) -> Callable:
+                   spmd_axis: str | None = None,
+                   outer=None) -> Callable:
     """The un-jitted round callable shared by the engine and the dry-run
     StepPlans: H inner steps + sync(s) in one traceable program, with the
-    activation-sharding rules (if any) installed around the whole round."""
+    activation-sharding rules (if any) installed around the whole round.
+    ``outer`` is the declared pseudogradient chain (built from ``dcfg`` when
+    omitted)."""
 
     def round_fn(state: PyTree, batches: PyTree) -> tuple[PyTree, dict]:
         if rules is not None:
@@ -54,9 +58,9 @@ def build_round_fn(model: Model, dcfg: DiLoCoConfig, opt,
 
             with activation_sharding(rules):
                 return diloco_round(model, dcfg, opt, state, batches,
-                                    masks=masks, spmd_axis=spmd_axis)
+                                    masks=masks, spmd_axis=spmd_axis, outer=outer)
         return diloco_round(model, dcfg, opt, state, batches,
-                            masks=masks, spmd_axis=spmd_axis)
+                            masks=masks, spmd_axis=spmd_axis, outer=outer)
 
     return round_fn
 
@@ -83,13 +87,15 @@ class TrainEngine:
         self.dcfg = dcfg
         self.icfg = icfg
         self.opt = make_optimizer(dcfg, icfg)
+        self.outer = make_outer(dcfg, state_dtype=icfg.state_dtype)
         self.mesh = mesh
         self.donate = donate
         self._rules = rules
         self._spmd_axis = spmd_axis
         self._masks = self._build_masks()
         self.round_fn = build_round_fn(model, dcfg, self.opt, masks=self._masks,
-                                       rules=rules, spmd_axis=spmd_axis)
+                                       rules=rules, spmd_axis=spmd_axis,
+                                       outer=self.outer)
         self._jitted: Callable | None = None
         self._eval_loss = jax.jit(lambda params, batch: model.loss(params, batch)[0])
 

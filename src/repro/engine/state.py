@@ -4,12 +4,16 @@ A registered-dataclass pytree replacing the raw ``dict`` state that
 ``core/diloco.py`` used to hand around. Fields mirror the paper's Algorithm 1:
 
   * ``outer_params`` / ``outer_opt`` — the synced parameters and the outer
-    Nesterov momentum (no K axis; ZeRO-sharded over ('pod','data') on the
-    production mesh);
+    transform's state (``{"u": tree}`` for Nesterov, ``{}`` for plain SGD;
+    no K axis; ZeRO-sharded over ('pod','data') on the production mesh);
   * ``worker_params`` / ``inner_state`` — K-stacked local replicas and their
-    inner-optimizer state (K sharded over 'pod');
-  * ``ef`` — optional K-stacked error-feedback residuals (``None`` when the
-    compression config doesn't use EF);
+    inner-optimizer transform-chain state (K sharded over 'pod');
+  * ``ef`` — optional K-stacked error-feedback residuals: the state of the
+    pseudogradient chain's EF stage (``None`` when the compression config
+    doesn't use EF). It lives here rather than inside ``outer_opt`` because
+    it shards with the workers (K -> 'pod'), not ZeRO over pods;
+    :class:`repro.core.diloco.OuterOptimizer` packs both fields around its
+    declared chain;
   * ``round`` — the on-device round counter.
 
 Being a real pytree node, TrainState flows through ``jax.jit`` (with buffer

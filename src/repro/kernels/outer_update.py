@@ -6,6 +6,11 @@
 One elementwise VMEM pass producing both outputs — on TPU this halves the
 HBM traffic of the outer step vs materializing u' then re-reading it, which
 matters because the outer step touches 3 full parameter copies.
+
+The kernel sits behind the ``nesterov`` outer transform
+(:mod:`repro.optim.nesterov`): ``DiLoCoConfig.outer_kernel=True`` /
+``--outer-kernel`` routes the terminal ``apply`` of the pseudogradient chain
+through :func:`repro.kernels.ops.nesterov_update` instead of pure XLA.
 """
 from __future__ import annotations
 

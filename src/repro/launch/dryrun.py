@@ -101,6 +101,20 @@ def run_one(arch: str, shape: str, multi_pod: bool, sync_interval: int = 30,
                 model_flops=mf,
                 amortize=float(plan.meta["amortize"]),
             )
+            donation = None
+            if plan.name == "round_step":
+                donation = round_step_donation_report(plan.args[0], hlo_text,
+                                                      mem, chips)
+                # record first, then fail: on a lost alias the record keeps
+                # status=error AND the donation diagnostics (rec.update in
+                # the except handler preserves existing keys)
+                rec["donation"] = donation
+                if not donation["outer_state_aliased"]:
+                    raise RuntimeError(
+                        f"round_step donation lost the outer-transform state: "
+                        f"params {donation['outer_opt_param_indices']} not all "
+                        f"in the input_output_alias map "
+                        f"(alias {donation['alias_bytes_per_chip']} B/chip)")
             rec.update({
                 "status": "ok",
                 "compile_s": round(time.time() - t0, 1),
@@ -130,6 +144,42 @@ def run_one(arch: str, shape: str, multi_pod: bool, sync_interval: int = 30,
             _print_record(rec)
         records.append(rec)
     return records
+
+
+def round_step_donation_report(state_abs, hlo_text: str, mem, chips: int) -> dict:
+    """GSPMD-aliasing evidence for the donated round (ROADMAP open item).
+
+    The round plan donates the TrainState, so the sync-state buffers — outer
+    params AND the outer-transform (pseudogradient chain) state — must come
+    back via input/output aliasing, not fresh allocations. Two checks:
+
+    * per-chip accounting: ``memory_analysis().alias_size_in_bytes`` (a
+      per-device number) covers at least the outer params+opt shard;
+    * the HLO ``input_output_alias`` map contains every ``outer_opt`` entry
+      parameter (jit flattens the donated TrainState field-by-field, so the
+      outer-transform state occupies a contiguous leaf-index range right
+      after ``outer_params``).
+    """
+    import re
+
+    n_outer_params = len(jax.tree.leaves(state_abs["outer_params"]))
+    n_outer_opt = len(jax.tree.leaves(state_abs["outer_opt"]))
+    outer_idx = set(range(n_outer_params, n_outer_params + n_outer_opt))
+    aliased = {int(g) for g in re.findall(
+        r"\((\d+), \{[^}]*\}, \w+-alias\)", hlo_text)}
+    outer_opt_bytes = tree_bytes(state_abs["outer_opt"])
+    outer_param_bytes = tree_bytes(state_abs["outer_params"])
+    alias = int(mem.alias_size_in_bytes)
+    return {
+        "alias_bytes_per_chip": alias,
+        "outer_opt_bytes_global": int(outer_opt_bytes),
+        "outer_params_bytes_global": int(outer_param_bytes),
+        "aliased_param_count": len(aliased),
+        "outer_opt_param_indices": sorted(outer_idx),
+        "outer_state_aliased": bool(
+            outer_idx <= aliased
+            and alias * chips >= outer_opt_bytes + outer_param_bytes),
+    }
 
 
 def _analytic_terms(plan, cfg, params_abs, chips: int, shape: str) -> tuple[float, float]:
@@ -213,7 +263,9 @@ def main() -> None:
     ap.add_argument("--both-meshes", action="store_true")
     ap.add_argument("--all", action="store_true", help="every arch x shape")
     ap.add_argument("--plan", default=None, help="only this plan (train_step/sync_step/...)")
-    ap.add_argument("--inner", default="muon", choices=["muon", "adamw"])
+    from repro.optim import INNER_OPTIMIZERS
+
+    ap.add_argument("--inner", default="muon", choices=list(INNER_OPTIMIZERS))
     ap.add_argument("--out", default="results/dryrun")
     args = ap.parse_args()
 

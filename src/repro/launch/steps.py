@@ -27,7 +27,14 @@ from jax.sharding import Mesh, NamedSharding
 from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import INPUT_SHAPES, config_for_shape
-from repro.core.diloco import DiLoCoConfig, diloco_init, inner_step, make_optimizer, outer_step
+from repro.core.diloco import (
+    DiLoCoConfig,
+    diloco_init,
+    inner_step,
+    make_optimizer,
+    make_outer,
+    outer_step,
+)
 from repro.launch.sharding import (
     batch_shardings,
     cache_shardings,
@@ -141,7 +148,12 @@ def build_train_plans(arch_cfg: ModelConfig, shape: str, mesh: Mesh,
     model = build_model(cfg)
     dcfg = dcfg or DiLoCoConfig(n_workers=n_pods, sync_interval=30, inner_name="muon")
     icfg = default_inner_cfg(cfg)
+    if dcfg.inner_name == "muon_bp":
+        # round-aligned block period: orthogonalize once per sync interval,
+        # so the dry-run lowers the real periodic lax.cond/count program
+        icfg = dataclasses.replace(icfg, ns_period=dcfg.sync_interval)
     opt = make_optimizer(dcfg, icfg)
+    outer = make_outer(dcfg, state_dtype=icfg.state_dtype)
 
     state_abs = jax.eval_shape(lambda: diloco_init(model, dcfg, icfg, jax.random.PRNGKey(0)))
     K = dcfg.n_workers
@@ -166,14 +178,14 @@ def build_train_plans(arch_cfg: ModelConfig, shape: str, mesh: Mesh,
             return inner_step(model, opt, state, batch, spmd_axis=spmd_axis)
 
     def sync_step(state):
-        new_state, _psi = outer_step(dcfg, state)
+        new_state, _psi = outer_step(dcfg, state, outer=outer)
         return new_state
 
     # the fused round executor — same builder the TrainEngine compiles
     from repro.engine import build_round_fn
 
     round_fn = build_round_fn(model, dcfg, opt, masks=None, rules=rules,
-                              spmd_axis=spmd_axis)
+                              spmd_axis=spmd_axis, outer=outer)
     H = dcfg.sync_interval
     round_batch_abs = jax.tree.map(
         lambda b: jax.ShapeDtypeStruct((H, *b.shape), b.dtype), batch_abs)

@@ -33,7 +33,7 @@ from repro.core.diloco import DiLoCoConfig
 from repro.data import DataConfig, MarkovStream, batches_for_round
 from repro.engine import TrainEngine, run_rounds
 from repro.models import build_model
-from repro.optim import OptimizerConfig
+from repro.optim import INNER_OPTIMIZERS, OUTER_OPTIMIZERS, OptimizerConfig
 
 # paper §5 / App. F: smoothed eval loss
 def smoothed_eval_loss(losses: list[float], steps: list[int], H: int, alpha: float = 0.2) -> float:
@@ -65,11 +65,13 @@ def make_diloco_cfg(args) -> DiLoCoConfig:
         n_workers=args.workers,
         sync_interval=args.sync_interval,
         inner_name=args.inner,
+        outer_name=args.outer,
         outer_lr=args.outer_lr,
         outer_momentum=args.outer_momentum,
         compression=comp,
         streaming_partitions=args.streaming,
         ns_impl=args.ns_impl,
+        outer_kernel=args.outer_kernel,
     )
 
 
@@ -91,6 +93,7 @@ def train(args) -> dict:
     icfg = OptimizerConfig(
         lr=args.lr, weight_decay=args.weight_decay, schedule=args.schedule,
         warmup_steps=max(total_steps // 100, 5), total_steps=total_steps,
+        ns_period=args.ns_period,
     )
 
     engine = TrainEngine(model, dcfg, icfg)
@@ -156,7 +159,12 @@ def build_parser() -> argparse.ArgumentParser:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="smollm-135m")
     ap.add_argument("--reduced", action="store_true", help="CPU-sized variant")
-    ap.add_argument("--inner", default="muon", choices=["muon", "adamw"])
+    ap.add_argument("--inner", default="muon", choices=list(INNER_OPTIMIZERS))
+    ap.add_argument("--outer", default="nesterov", choices=list(OUTER_OPTIMIZERS))
+    ap.add_argument("--ns-period", type=int, default=1,
+                    help="muon_bp: orthogonalize every b steps (1 = plain Muon)")
+    ap.add_argument("--outer-kernel", action="store_true",
+                    help="route the outer descent through the fused Pallas kernel")
     ap.add_argument("--workers", type=int, default=4)
     ap.add_argument("--sync-interval", type=int, default=6)
     ap.add_argument("--rounds", type=int, default=20)

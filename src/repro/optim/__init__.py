@@ -1,19 +1,97 @@
-from repro.optim.adamw import adamw  # noqa: F401
+"""Composable optimizer stack: one ``Transform`` protocol from the inner
+step to the outer sync.
+
+Layers:
+
+* :mod:`repro.optim.transform` — the ``Transform`` protocol (``init`` /
+  ``update`` / terminal ``apply``) with ``chain`` and ``partition``
+  combinators;
+* :func:`repro.optim.base.descend` — wraps a direction-producing chain into
+  an ``Optimizer`` (schedule + per-leaf lr scaling + decoupled weight decay,
+  bit-identical to the legacy arithmetic);
+* inner optimizers (:func:`make_inner_optimizer` registry, the names the
+  ``--inner`` CLI flag accepts):
+
+  - ``adamw``   — DiLoCo's inner optimizer (:mod:`repro.optim.adamw`);
+  - ``muon``    — MuLoCo: momentum + Newton–Schulz on hidden matrices,
+    AdamW fallback elsewhere via ``partition`` (:mod:`repro.optim.muon`);
+  - ``muon_bp`` — block-periodic Muon; NS every ``OptimizerConfig.ns_period``
+    steps, momentum-SGD between (:mod:`repro.optim.muon_variants`);
+  - ``normuon`` — Muon + neuron-wise RMS post-scaling
+    (:mod:`repro.optim.muon_variants`);
+
+* outer transforms (``--outer``): ``nesterov`` (paper Eq. 3, optional fused
+  Pallas kernel routing) and ``sgd`` (:mod:`repro.optim.nesterov`).
+"""
+from repro.optim.adamw import adamw, scale_by_adam  # noqa: F401
 from repro.optim.base import (  # noqa: F401
     Optimizer,
     OptimizerConfig,
     constant_schedule,
     cosine_schedule,
+    descend,
     make_schedule,
 )
-from repro.optim.muon import muon, muon_label, newton_schulz, param_labels  # noqa: F401
-from repro.optim.nesterov import nesterov_init, nesterov_step  # noqa: F401
+from repro.optim.muon import (  # noqa: F401
+    muon,
+    muon_label,
+    newton_schulz,
+    orthogonalize,
+    param_labels,
+    trace_momentum,
+)
+from repro.optim.muon_variants import (  # noqa: F401
+    muon_bp,
+    normuon,
+    orthogonalize_periodic,
+    scale_by_neuron_rms,
+)
+from repro.optim.nesterov import (  # noqa: F401
+    nesterov,
+    nesterov_init,
+    nesterov_step,
+    outer_sgd,
+)
+from repro.optim.transform import (  # noqa: F401
+    Transform,
+    apply_updates,
+    chain,
+    identity,
+    partition,
+    scale_by_schedule,
+    stateless,
+)
+
+# Single-source registries: the CLI choice lists and the builder dispatch
+# derive from the same dicts, so adding a variant is one entry.
+_INNER_BUILDERS = {"adamw": adamw, "muon": muon, "muon_bp": muon_bp,
+                   "normuon": normuon}
+_OUTER_BUILDERS = {
+    "nesterov": lambda lr, momentum, state_dtype, kernel: nesterov(
+        lr, momentum, state_dtype=state_dtype, kernel=kernel),
+    "sgd": lambda lr, momentum, state_dtype, kernel: outer_sgd(lr),
+}
+INNER_OPTIMIZERS = tuple(_INNER_BUILDERS)
+OUTER_OPTIMIZERS = tuple(_OUTER_BUILDERS)
 
 
 def make_inner_optimizer(name: str, cfg: OptimizerConfig, **kw) -> Optimizer:
-    """Registry used by DiLoCo: 'adamw' -> DiLoCo, 'muon' -> MuLoCo."""
+    """Registry used by DiLoCo: 'adamw' -> DiLoCo, 'muon' -> MuLoCo, plus the
+    chain-built variants 'muon_bp' (block-periodic NS) and 'normuon'."""
+    if name not in _INNER_BUILDERS:
+        raise ValueError(f"unknown inner optimizer {name!r} "
+                         f"(have {sorted(_INNER_BUILDERS)})")
     if name == "adamw":
-        return adamw(cfg)
-    if name == "muon":
-        return muon(cfg, **kw)
-    raise ValueError(f"unknown inner optimizer {name!r}")
+        kw.pop("ns_impl", None)
+    return _INNER_BUILDERS[name](cfg, **kw)
+
+
+def make_outer_transform(name: str, lr: float, momentum: float, *,
+                         state_dtype="float32", kernel: bool = False) -> Transform:
+    """Registry for the outer (pseudogradient) descent: 'nesterov' | 'sgd'."""
+    import jax.numpy as jnp
+
+    if name not in _OUTER_BUILDERS:
+        raise ValueError(f"unknown outer optimizer {name!r} "
+                         f"(have {sorted(_OUTER_BUILDERS)})")
+    return _OUTER_BUILDERS[name](lr, momentum, jnp.dtype(state_dtype), kernel)

@@ -1,7 +1,13 @@
 """AdamW — the paper's DiLoCo inner optimizer and DP baseline.
 
-Fused update semantics match torch.optim.AdamW (decoupled weight decay,
-bias-corrected moments). Paper setting: b1=0.9, b2=0.99.
+Expressed as a transform chain: :func:`scale_by_adam` produces the
+bias-corrected Adam direction, and :func:`repro.optim.base.descend` applies
+it with the schedule and decoupled weight decay. Update semantics match
+torch.optim.AdamW. Paper setting: b1=0.9, b2=0.99.
+
+``scale_by_adam`` is also the AdamW fallback group inside Muon's
+``partition`` (embeddings/norms/head), where its second-moment buffers only
+exist for the leaves it owns.
 """
 from __future__ import annotations
 
@@ -10,47 +16,45 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
-from repro.optim.base import Optimizer, OptimizerConfig, make_schedule
+from repro.optim.base import Optimizer, OptimizerConfig, descend
+from repro.optim.transform import Transform
+from repro.utils.tree import tree_unzip
 
 PyTree = Any
 
 
-def adamw(cfg: OptimizerConfig) -> Optimizer:
-    sched = make_schedule(cfg)
+def scale_by_adam(cfg: OptimizerConfig) -> Transform:
+    """u = (m / bc1) / (sqrt(v / bc2) + eps), moments stored in state_dtype."""
+    b1, b2, eps = cfg.b1, cfg.b2, cfg.eps
+    sdt = jnp.dtype(cfg.state_dtype)
 
-    def init(params: PyTree) -> PyTree:
-        sdt = jnp.dtype(cfg.state_dtype)
+    def init(tree: PyTree) -> PyTree:
+        zeros = lambda p: jnp.zeros(p.shape, sdt)
         return {
-            "m": jax.tree.map(lambda p: jnp.zeros(p.shape, sdt), params),
-            "v": jax.tree.map(lambda p: jnp.zeros(p.shape, sdt), params),
+            "m": jax.tree.map(zeros, tree),
+            "v": jax.tree.map(zeros, tree),
             "count": jnp.zeros((), jnp.int32),
         }
 
-    def step(params: PyTree, grads: PyTree, state: PyTree):
+    def update(updates: PyTree, state: PyTree, params: PyTree):
         count = state["count"] + 1
-        lr = sched(count)
-        b1, b2, eps, wd = cfg.b1, cfg.b2, cfg.eps, cfg.weight_decay
         bc1 = 1.0 - b1 ** count.astype(jnp.float32)
         bc2 = 1.0 - b2 ** count.astype(jnp.float32)
 
-        sdt = jnp.dtype(cfg.state_dtype)
-
-        def upd(p, g, m, v):
+        def upd(g, m, v):
             g = g.astype(jnp.float32)
             m = b1 * m.astype(jnp.float32) + (1.0 - b1) * g
             v = b2 * v.astype(jnp.float32) + (1.0 - b2) * g * g
             mhat = m / bc1
             vhat = v / bc2
             u = mhat / (jnp.sqrt(vhat) + eps)
-            p32 = p.astype(jnp.float32)
-            new_p = p32 - lr * u - lr * wd * p32
-            return new_p.astype(p.dtype), m.astype(sdt), v.astype(sdt)
+            return u, m.astype(sdt), v.astype(sdt)
 
-        out = jax.tree.map(upd, params, grads, state["m"], state["v"])
-        # out is a tree of 3-tuples; transpose it back into three trees
-        new_params = jax.tree.map(lambda t: t[0], out, is_leaf=lambda t: isinstance(t, tuple))
-        new_m = jax.tree.map(lambda t: t[1], out, is_leaf=lambda t: isinstance(t, tuple))
-        new_v = jax.tree.map(lambda t: t[2], out, is_leaf=lambda t: isinstance(t, tuple))
-        return new_params, {"m": new_m, "v": new_v, "count": count}
+        u, new_m, new_v = tree_unzip(jax.tree.map(upd, updates, state["m"], state["v"]), 3)
+        return u, {"m": new_m, "v": new_v, "count": count}
 
-    return Optimizer(init=init, step=step)
+    return Transform(init=init, update=update)
+
+
+def adamw(cfg: OptimizerConfig) -> Optimizer:
+    return descend(scale_by_adam(cfg), cfg)

@@ -9,6 +9,12 @@ An ``Optimizer`` is a pair of pure functions:
 schedules are resolved inside ``step`` (keeps the DiLoCo inner loop a single
 jittable function). All optimizer math is done in fp32 regardless of the
 parameter dtype, and results are cast back.
+
+Optimizers are built from :class:`repro.optim.transform.Transform` chains via
+:func:`descend`, which turns "gradients -> update direction" transforms into
+a full descent step with schedule, per-leaf lr scaling, and decoupled weight
+decay — evaluated with exactly the legacy arithmetic ``(p - lr*u) - lr*wd*p``
+so refactors of the chain stay bit-for-bit reproducible.
 """
 from __future__ import annotations
 
@@ -17,6 +23,7 @@ from typing import Any, Callable, NamedTuple
 
 import jax
 import jax.numpy as jnp
+from jax import tree_util as jtu
 
 PyTree = Any
 Schedule = Callable[[jax.Array], jax.Array]  # step -> lr multiplier (absolute lr)
@@ -39,6 +46,9 @@ class OptimizerConfig:
     # Muon-specific
     ns_iters: int = 5
     muon_lr_scale_mode: str = "paper"  # paper: sqrt(n/m) | jordan: sqrt(max(1,m/n)) | none
+    # MuonBP (Khaled et al., 2025): orthogonalize every ns_period steps,
+    # momentum-SGD between. 1 = plain Muon.
+    ns_period: int = 1
     # schedule
     schedule: str = "constant"  # constant | cosine
     warmup_steps: int = 0
@@ -84,3 +94,54 @@ def apply_update(param: jax.Array, update: jax.Array, lr, weight_decay) -> jax.A
     p32 = param.astype(jnp.float32)
     new = p32 - lr * update.astype(jnp.float32) - lr * weight_decay * p32
     return new.astype(param.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Transform chain -> Optimizer
+# ---------------------------------------------------------------------------
+
+# mults_fn(path, leaf) -> (update_lr_scale, decay_lr_scale): python floats
+# multiplying the scheduled lr for the descent term and the decay term of one
+# leaf. Muon's sqrt(n/m) shape scaling and its AdamW-fallback lr ratio are
+# both expressed through this hook.
+MultsFn = Callable[[str, Any], tuple[float, float]]
+
+
+def descend(tx: "Any", cfg: OptimizerConfig, mults_fn: MultsFn | None = None,
+            sched: Schedule | None = None) -> Optimizer:
+    """Wrap a direction-producing Transform chain into a full Optimizer.
+
+    The chain maps gradients to an update direction ``u``; ``descend`` then
+    performs the decoupled-weight-decay descent
+
+        p <- p - (lr * u_scale) * u - ((lr * d_scale) * wd) * p
+
+    with exactly that association/order of operations (bit-identical to the
+    pre-transform optimizers, which the fixed-seed parity guard pins down).
+    State is ``{"tx": chain_state, "count": i32}``; lr is resolved from the
+    schedule on the incremented count each step.
+    """
+    from repro.utils.tree import path_str
+
+    sched = sched or make_schedule(cfg)
+    wd = cfg.weight_decay
+
+    def init(params: PyTree) -> PyTree:
+        return {"tx": tx.init(params), "count": jnp.zeros((), jnp.int32)}
+
+    def step(params: PyTree, grads: PyTree, state: PyTree):
+        count = state["count"] + 1
+        lr = sched(count)
+        u, tx_state = tx.update(grads, state["tx"], params)
+
+        def apply(path, p, u_leaf):
+            u_scale, d_scale = mults_fn(path_str(path), p) if mults_fn else (1.0, 1.0)
+            um = lr * u_scale
+            dm = (lr * d_scale) * wd
+            p32 = p.astype(jnp.float32)
+            return (p32 - um * u_leaf - dm * p32).astype(p.dtype)
+
+        new_params = jtu.tree_map_with_path(apply, params, u)
+        return new_params, {"tx": tx_state, "count": count}
+
+    return Optimizer(init=init, step=step)

@@ -1,11 +1,20 @@
-"""Muon — the paper's MuLoCo inner optimizer.
+"""Muon — the paper's MuLoCo inner optimizer, as a transform chain.
 
 Momentum accumulation followed by 5 quintic Newton–Schulz iterations that
 orthogonalize each hidden weight-matrix update (Jordan et al., 2024
 coefficients a,b,c = 3.4445, -4.7750, 2.0315), with decoupled weight decay
 (important at scale per Liu et al., 2025). Per the paper, Muon is applied to
 hidden matrices only; embeddings, norms, biases and the output head fall back
-to AdamW inside the same optimizer step.
+to AdamW — expressed as::
+
+    partition(muon_label, {
+        "muon":  chain(trace_momentum(cfg), orthogonalize(cfg, ns_impl)),
+        "adamw": scale_by_adam(cfg),
+    })
+
+wrapped by :func:`repro.optim.base.descend` with the per-shape lr scale.
+Variants (MuonBP, NorMuon) swap or extend the "muon" chain — see
+:mod:`repro.optim.muon_variants`.
 
 Stacked parameters from scan-over-layers ([L, m, n]) and MoE expert banks
 ([L, E, m, n]) are orthogonalized per-matrix via reshape+vmap.
@@ -24,8 +33,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.models.common import shard_hint
-from repro.optim.base import Optimizer, OptimizerConfig, make_schedule
-from repro.utils.tree import tree_map_with_path
+from repro.optim.adamw import scale_by_adam
+from repro.optim.base import Optimizer, OptimizerConfig, descend
+from repro.optim.transform import Transform, chain, partition
 
 PyTree = Any
 
@@ -51,6 +61,8 @@ def muon_label(path: str, leaf) -> str:
 
 
 def param_labels(params: PyTree) -> PyTree:
+    from repro.utils.tree import tree_map_with_path
+
     return tree_map_with_path(muon_label, params)
 
 
@@ -94,6 +106,10 @@ def newton_schulz_pallas(G: jax.Array, iters: int = 5, eps: float = 1e-7) -> jax
     return ns_orthogonalize(G, iters=iters, eps=eps)
 
 
+def ns_fn_for(ns_impl: str):
+    return newton_schulz_pallas if ns_impl == "pallas" else newton_schulz
+
+
 def _muon_lr_scale(shape: tuple[int, ...], mode: str) -> float:
     m, n = int(shape[-2]), int(shape[-1])
     if mode == "paper":  # paper §5: rescale lr by sqrt(n/m) for W in R^{m x n}
@@ -107,69 +123,82 @@ def _muon_lr_scale(shape: tuple[int, ...], mode: str) -> float:
     raise ValueError(f"unknown muon lr scale mode {mode!r}")
 
 
+# ---------------------------------------------------------------------------
+# The Muon transform stages
+# ---------------------------------------------------------------------------
+
+
+def trace_momentum(cfg: OptimizerConfig) -> Transform:
+    """Muon momentum: m_t = beta * m_{t-1} + g_t (paper Alg. 1; note NO
+    (1-beta) dampening — the raw gradient is added). Passes the fp32
+    accumulator downstream, stores it in ``state_dtype``."""
+    b1 = cfg.b1
+    sdt = jnp.dtype(cfg.state_dtype)
+
+    def init(tree: PyTree) -> PyTree:
+        return {"m": jax.tree.map(lambda p: jnp.zeros(p.shape, sdt), tree)}
+
+    def update(updates: PyTree, state: PyTree, params: PyTree):
+        m = jax.tree.map(
+            lambda g, m: b1 * m.astype(jnp.float32) + g.astype(jnp.float32),
+            updates, state["m"])
+        return m, {"m": jax.tree.map(lambda x: x.astype(sdt), m)}
+
+    return Transform(init=init, update=update)
+
+
+def orthogonalize(cfg: OptimizerConfig, ns_impl: str = "jnp") -> Transform:
+    """Newton–Schulz orthogonalization of each [..., m, n] update.
+
+    Layer-parallel resharding hints: the momentum is resharded so whole
+    matrices live on one chip (leading stacked axis -> mesh) and the 5 NS
+    iterations run with ZERO collectives; the orthogonalized result is
+    resharded back. Without this, every NS matmul psums an [m,m] partial
+    product (measured: 6.1 TB/chip/step on mistral-123b train_4k —
+    EXPERIMENTS.md §Perf it.2). No-op unless launch installs an "ns_matrix"
+    rule.
+    """
+    ns_fn = ns_fn_for(ns_impl)
+    iters = cfg.ns_iters
+
+    def orth(u, _params):
+        def per_leaf(m):
+            m_local = shard_hint(m, "ns_matrix")
+            O = ns_fn(m_local, iters=iters).astype(jnp.float32)
+            return shard_hint(O, "ns_out")
+
+        return jax.tree.map(per_leaf, u)
+
+    from repro.optim.transform import stateless
+
+    return stateless(orth)
+
+
+def muon_partition(cfg: OptimizerConfig, muon_chain: Transform) -> Transform:
+    """``partition(muon_label, {muon: <chain>, adamw: scale_by_adam})``."""
+    return partition(muon_label, {"muon": muon_chain,
+                                  "adamw": scale_by_adam(cfg)})
+
+
+def muon_mults(cfg: OptimizerConfig, adamw_lr_ratio: float = 1.0):
+    """Per-leaf (update, decay) lr multipliers for the descent stage: hidden
+    matrices get the shape-dependent Muon scale (decay stays at the base lr,
+    matching the paper's decoupled decay); AdamW-fallback leaves get the
+    optional lr ratio on both terms."""
+
+    def mults(path: str, leaf) -> tuple[float, float]:
+        if muon_label(path, leaf) == "muon":
+            return _muon_lr_scale(leaf.shape, cfg.muon_lr_scale_mode), 1.0
+        return adamw_lr_ratio, adamw_lr_ratio
+
+    return mults
+
+
 def muon(cfg: OptimizerConfig, ns_impl: str = "jnp", adamw_lr_ratio: float = 1.0) -> Optimizer:
-    """Muon for hidden matrices + AdamW for everything else (single step fn).
+    """Muon for hidden matrices + AdamW for everything else.
 
     ``adamw_lr_ratio`` scales the AdamW learning rate relative to the Muon lr
     (commonly tuned separately; paper tunes one inner lr, so default 1).
     """
-    sched = make_schedule(cfg)
-    ns_fn = newton_schulz_pallas if ns_impl == "pallas" else newton_schulz
-
-    def init(params: PyTree) -> PyTree:
-        labels = param_labels(params)
-        sdt = jnp.dtype(cfg.state_dtype)
-        m = jax.tree.map(lambda p: jnp.zeros(p.shape, sdt), params)
-        # Second moment only materialized for AdamW-labelled leaves: Muon's
-        # 3x-vs-4x memory advantage (paper Tab. 9) falls out of this.
-        v = jax.tree.map(
-            lambda p, lb: jnp.zeros(p.shape if lb == "adamw" else (1,), sdt),
-            params,
-            labels,
-        )
-        return {"m": m, "v": v, "count": jnp.zeros((), jnp.int32)}
-
-    def step(params: PyTree, grads: PyTree, state: PyTree):
-        labels = param_labels(params)
-        count = state["count"] + 1
-        lr = sched(count)
-        b1, b2, eps, wd = cfg.b1, cfg.b2, cfg.eps, cfg.weight_decay
-        bc1 = 1.0 - b1 ** count.astype(jnp.float32)
-        bc2 = 1.0 - b2 ** count.astype(jnp.float32)
-
-        sdt = jnp.dtype(cfg.state_dtype)
-
-        def upd(lb, p, g, m, v):
-            g = g.astype(jnp.float32)
-            p32 = p.astype(jnp.float32)
-            if lb == "muon":
-                m = b1 * m.astype(jnp.float32) + g  # paper: m_t = beta m_{t-1} + g_t
-                # Layer-parallel Newton-Schulz: reshard the momentum so whole
-                # matrices live on one chip (leading stacked axis -> mesh) and
-                # the 5 NS iterations run with ZERO collectives; reshard the
-                # orthogonalized result back. Without this, every NS matmul
-                # psums an [m,m] partial product (measured: 6.1 TB/chip/step
-                # on mistral-123b train_4k — EXPERIMENTS.md §Perf it.2).
-                # No-op unless launch installs an "ns_matrix" rule.
-                m_local = shard_hint(m, "ns_matrix")
-                O = ns_fn(m_local, iters=cfg.ns_iters).astype(jnp.float32)
-                O = shard_hint(O, "ns_out")
-                scale = _muon_lr_scale(p.shape, cfg.muon_lr_scale_mode)
-                new_p = p32 - (lr * scale) * O - lr * wd * p32
-                return new_p.astype(p.dtype), m.astype(sdt), v
-            # AdamW branch (embeddings/norms/head)
-            m = b1 * m.astype(jnp.float32) + (1.0 - b1) * g
-            v = b2 * v.astype(jnp.float32) + (1.0 - b2) * g * g
-            u = (m / bc1) / (jnp.sqrt(v / bc2) + eps)
-            alr = lr * adamw_lr_ratio
-            new_p = p32 - alr * u - alr * wd * p32
-            return new_p.astype(p.dtype), m.astype(sdt), v.astype(sdt)
-
-        out = jax.tree.map(upd, labels, params, grads, state["m"], state["v"])
-        is_tup = lambda t: isinstance(t, tuple)
-        new_params = jax.tree.map(lambda t: t[0], out, is_leaf=is_tup)
-        new_m = jax.tree.map(lambda t: t[1], out, is_leaf=is_tup)
-        new_v = jax.tree.map(lambda t: t[2], out, is_leaf=is_tup)
-        return new_params, {"m": new_m, "v": new_v, "count": count}
-
-    return Optimizer(init=init, step=step)
+    tx = muon_partition(cfg, chain(trace_momentum(cfg), orthogonalize(cfg, ns_impl)))
+    return descend(tx, cfg, muon_mults(cfg, adamw_lr_ratio))

@@ -1,0 +1,123 @@
+"""Muon variants as small deltas on the transform chain — the payoff of the
+composable stack: each is a ~40-line module, not a fork of muon.py.
+
+* ``muon_bp`` — block-periodic Muon (MuonBP, Khaled et al., 2025):
+  orthogonalize every ``cfg.ns_period`` steps, plain momentum-SGD between.
+  In DiLoCo the round boundary naturally aligns with the period (workers
+  reset every H steps), so ``ns_period=H`` orthogonalizes exactly once per
+  round. At period 1 this IS Muon (the periodic stage is bypassed).
+
+* ``normuon`` — neuron-wise second-moment normalization (NorMuon, Li et al.,
+  2025): after Newton–Schulz, each output neuron (row of the [..., m, n]
+  update) is rescaled by its running RMS, then the per-matrix norm is
+  restored so Muon's shape-scaled lr transfer still applies.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import shard_hint
+from repro.optim.base import Optimizer, OptimizerConfig, descend
+from repro.optim.muon import (
+    muon_mults,
+    muon_partition,
+    ns_fn_for,
+    orthogonalize,
+    trace_momentum,
+)
+from repro.optim.transform import Transform, chain
+from repro.utils.tree import tree_unzip
+
+PyTree = Any
+
+
+def orthogonalize_periodic(cfg: OptimizerConfig, ns_impl: str = "jnp") -> Transform:
+    """NS every ``cfg.ns_period`` steps; raw momentum (momentum-SGD) between.
+
+    The branch is a ``lax.cond`` on an own step counter, so the round
+    executor stays a single traced program. (On CPU, vmap over workers
+    lowers cond to select — both branches execute — so the FLOP saving only
+    materializes on accelerators / unbatched paths; the API and update rule
+    are what this module pins down.)
+    """
+    if cfg.ns_period <= 1:
+        return orthogonalize(cfg, ns_impl)
+    ns_fn = ns_fn_for(ns_impl)
+    iters, period = cfg.ns_iters, cfg.ns_period
+
+    def init(tree: PyTree) -> PyTree:
+        return {"count": jnp.zeros((), jnp.int32)}
+
+    def update(updates: PyTree, state: PyTree, params: PyTree):
+        count = state["count"] + 1
+        do_ns = (count - 1) % period == 0  # orthogonalize on step 1, 1+b, ...
+
+        def orth(x):
+            # same layer-parallel resharding hints as `orthogonalize`: whole
+            # matrices on one chip around NS, zero-collective iterations
+            x = shard_hint(x, "ns_matrix")
+            return shard_hint(ns_fn(x, iters=iters).astype(jnp.float32), "ns_out")
+
+        def per_leaf(m):
+            return jax.lax.cond(do_ns, orth, lambda x: x.astype(jnp.float32), m)
+
+        return jax.tree.map(per_leaf, updates), {"count": count}
+
+    return Transform(init=init, update=update)
+
+
+def muon_bp(cfg: OptimizerConfig, ns_impl: str = "jnp",
+            adamw_lr_ratio: float = 1.0) -> Optimizer:
+    """Block-periodic Muon: ``cfg.ns_period`` controls the NS cadence."""
+    tx = muon_partition(cfg, chain(trace_momentum(cfg),
+                                   orthogonalize_periodic(cfg, ns_impl)))
+    return descend(tx, cfg, muon_mults(cfg, adamw_lr_ratio))
+
+
+def scale_by_neuron_rms(cfg: OptimizerConfig) -> Transform:
+    """NorMuon post-scaling: divide each output neuron (row) by its running
+    second-moment RMS, then restore the per-matrix Frobenius norm.
+
+    State is one ``[..., m, 1]`` buffer per hidden matrix, stored in
+    ``cfg.state_dtype`` (the 2nd-moment cost is m, not m*n)."""
+    b2, eps = cfg.b2, cfg.eps
+    sdt = jnp.dtype(cfg.state_dtype)
+
+    def init(tree: PyTree) -> PyTree:
+        return {
+            "v": jax.tree.map(lambda p: jnp.zeros((*p.shape[:-1], 1), sdt), tree),
+            "count": jnp.zeros((), jnp.int32),
+        }
+
+    def update(updates: PyTree, state: PyTree, params: PyTree):
+        count = state["count"] + 1
+        bc2 = 1.0 - b2 ** count.astype(jnp.float32)
+
+        def upd(u, v):
+            u = u.astype(jnp.float32)
+            v = b2 * v.astype(jnp.float32) + (1.0 - b2) * jnp.mean(
+                u * u, axis=-1, keepdims=True)
+            vhat = v / bc2
+            un = u / (jnp.sqrt(vhat) + eps)
+            # restore the per-matrix norm so the orthogonalized scale survives
+            axes = (-2, -1)
+            norm_u = jnp.sqrt(jnp.sum(u * u, axis=axes, keepdims=True))
+            norm_un = jnp.sqrt(jnp.sum(un * un, axis=axes, keepdims=True))
+            return un * (norm_u / (norm_un + eps)), v.astype(sdt)
+
+        u, new_v = tree_unzip(jax.tree.map(upd, updates, state["v"]), 2)
+        return u, {"v": new_v, "count": count}
+
+    return Transform(init=init, update=update)
+
+
+def normuon(cfg: OptimizerConfig, ns_impl: str = "jnp",
+            adamw_lr_ratio: float = 1.0) -> Optimizer:
+    """NorMuon: Muon + neuron-wise RMS post-scaling after Newton–Schulz."""
+    tx = muon_partition(cfg, chain(trace_momentum(cfg),
+                                   orthogonalize(cfg, ns_impl),
+                                   scale_by_neuron_rms(cfg)))
+    return descend(tx, cfg, muon_mults(cfg, adamw_lr_ratio))

@@ -146,7 +146,10 @@ def optimizer_flops(params_tree, inner_name: str) -> float:
         size = 1
         for d in leaf.shape:
             size *= int(d)
-        if inner_name == "muon" and muon_label(path, leaf) == "muon":
+        # muon_bp/normuon share Muon's NS cost model (muon_bp amortizes it by
+        # ns_period on accelerators; we account the orthogonalizing step)
+        muon_family = inner_name in ("muon", "muon_bp", "normuon")
+        if muon_family and muon_label(path, leaf) == "muon":
             *batch, m, n = leaf.shape
             nb = 1
             for d in batch:

@@ -101,6 +101,17 @@ def tree_bytes(tree: PyTree) -> int:
     return total
 
 
+def tree_unzip(tree_of_tuples: PyTree, n: int) -> tuple[PyTree, ...]:
+    """Transpose a tree whose leaves are n-tuples into n trees.
+
+    The standard unpack for ``jax.tree.map`` callbacks returning several
+    values per leaf (new param + new state buffers, etc.)."""
+    is_tup = lambda t: isinstance(t, tuple)
+    return tuple(
+        jax.tree.map(lambda t: t[i], tree_of_tuples, is_leaf=is_tup)  # noqa: B023
+        for i in range(n))
+
+
 def tree_select(mask_tree: PyTree, a: PyTree, b: PyTree) -> PyTree:
     """Leafwise where(mask, a, b); mask leaves are scalars or broadcastable bools."""
     return jax.tree.map(lambda m, x, y: jnp.where(m, x, y), mask_tree, a, b)

@@ -40,9 +40,13 @@ for arch, shape in [("smollm-135m", "train_4k"), ("mamba2-370m", "decode_32k"),
             c = jax.jit(plan.fn, in_shardings=plan.in_shardings,
                         donate_argnums=plan.donate).lower(*plan.args).compile()
         coll = collective_bytes_corrected(c.as_text())
-        out[f"{arch}/{shape}/{plan.name}"] = {
-            "ok": True, "collective_total": coll["total"],
-        }
+        rec = {"ok": True, "collective_total": coll["total"]}
+        if plan.name == "round_step":
+            from repro.launch.dryrun import round_step_donation_report
+            rec["donation"] = round_step_donation_report(
+                plan.args[0], c.as_text(), c.memory_analysis(),
+                mesh.devices.size)
+        out[f"{arch}/{shape}/{plan.name}"] = rec
 print(json.dumps(out))
 """
 
@@ -60,4 +64,11 @@ def test_dryrun_on_8_device_world():
     # the train step moves bytes over the wire (FSDP gathers)
     assert out["smollm-135m/train_4k/train_step"]["collective_total"] > 0
     # the engine's fused round plan lowers on the same mesh and communicates
-    assert out["smollm-135m/train_4k/round_step"]["collective_total"] > 0
+    round_rec = out["smollm-135m/train_4k/round_step"]
+    assert round_rec["collective_total"] > 0
+    # donated round under GSPMD (ROADMAP open item): the outer-transform
+    # state buffers are among the aliased outputs, and the per-chip aliased
+    # bytes cover at least the outer params+opt shard
+    donation = round_rec["donation"]
+    assert donation["outer_opt_bytes_global"] > 0
+    assert donation["outer_state_aliased"], donation

@@ -122,10 +122,15 @@ def test_streaming_requires_masks():
 # ---------------------------------------------------------------------------
 
 
-def test_round_fn_donates_state_and_never_retraces():
+@pytest.mark.parametrize("inner", ["adamw", "muon_bp", "normuon"])
+def test_round_fn_donates_state_and_never_retraces(inner):
+    """Every transform-chain inner optimizer lowers through the engine's
+    single donated jitted round with no retrace."""
     model = build_model(CFG)
-    dcfg = DiLoCoConfig(n_workers=2, sync_interval=2, inner_name="adamw")
-    engine = TrainEngine(model, dcfg, ICFG)
+    dcfg = DiLoCoConfig(n_workers=2, sync_interval=2, inner_name=inner)
+    icfg = ICFG if inner != "muon_bp" else OptimizerConfig(
+        lr=1e-2, weight_decay=0.0, ns_period=2)
+    engine = TrainEngine(model, dcfg, icfg)
     state = engine.init(jax.random.PRNGKey(0))
     stream = _stream(2)
 
@@ -138,6 +143,35 @@ def test_round_fn_donates_state_and_never_retraces():
         state, _ = engine.step(state, batches_for_round(stream, r, 2))
     # three executions (differing data, same shapes) -> exactly one trace
     assert engine.jitted_round._cache_size() == 1
+
+
+def test_outer_kernel_round_matches_xla_outer():
+    """outer_kernel=True routes the sync through the fused Pallas kernel and
+    tracks the pure-XLA outer transform."""
+    model = build_model(CFG)
+    params = {}
+    for kernel in (False, True):
+        dcfg = DiLoCoConfig(n_workers=2, sync_interval=2, inner_name="adamw",
+                            outer_kernel=kernel)
+        engine = TrainEngine(model, dcfg, ICFG)
+        state = engine.init(jax.random.PRNGKey(0))
+        for r in range(2):
+            state, _ = engine.step(state, batches_for_round(_stream(2), r, 2))
+        params[kernel] = state["outer_params"]["layers"]["mlp"]["w_in"]
+    np.testing.assert_allclose(np.asarray(params[True]), np.asarray(params[False]),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_batches_for_round_matches_per_step_batches():
+    """The single-dispatch stacked generation is bitwise the H per-step
+    batches it replaced."""
+    stream = _stream(3, bs=2, s=8)
+    stacked = batches_for_round(stream, 5, 4)
+    for h in range(4):
+        per_step = stream.batch(5 * 4 + h)
+        for key in ("tokens", "labels"):
+            np.testing.assert_array_equal(np.asarray(stacked[key][h]),
+                                          np.asarray(per_step[key]))
 
 
 def test_run_rounds_driver_collects_all_metrics():

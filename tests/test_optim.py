@@ -1,5 +1,6 @@
 """Optimizer unit tests: AdamW semantics, Muon labeling/structure, schedules,
-Nesterov outer update, memory-complexity claim."""
+Nesterov outer update, memory-complexity claim, and the transform-stack
+combinators (chain associativity, partition routing, variant reductions)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -8,13 +9,23 @@ import pytest
 from repro.optim import (
     OptimizerConfig,
     adamw,
+    chain,
     cosine_schedule,
+    identity,
     muon,
+    muon_bp,
+    muon_label,
+    nesterov,
     nesterov_init,
     nesterov_step,
+    normuon,
     param_labels,
+    partition,
+    scale_by_adam,
+    stateless,
+    trace_momentum,
 )
-from repro.utils.tree import tree_bytes
+from repro.utils.tree import tree_bytes, tree_leaves_with_paths
 
 
 def _params():
@@ -27,6 +38,14 @@ def _params():
         "head": jnp.ones((16, 32)),
         "final_norm_scale": jnp.ones((16,)),
     }
+
+
+def _grads(seed=0):
+    p = _params()
+    leaves, treedef = jax.tree.flatten(p)
+    keys = jax.random.split(jax.random.PRNGKey(seed), len(leaves))
+    return jax.tree.unflatten(
+        treedef, [jax.random.normal(k, leaf.shape) for k, leaf in zip(keys, leaves)])
 
 
 def test_param_labels():
@@ -61,8 +80,8 @@ def test_adamw_weight_decay_decoupled():
 
 
 def test_muon_memory_advantage():
-    """Paper Tab. 9: Muon holds 3 param copies vs AdamW's 4 (no 2nd moment
-    for hidden matrices)."""
+    """Paper Tab. 9: Muon holds 3 param copies vs AdamW's 4 (the partitioned
+    second moment only exists for the AdamW-labelled leaves)."""
     p = _params()
     st_m = muon(OptimizerConfig()).init(p)
     st_a = adamw(OptimizerConfig()).init(p)
@@ -101,8 +120,169 @@ def test_nesterov_matches_paper_eq3():
                                np.asarray(t1["w"]) - mu * u2 - lr * 0.5, rtol=1e-6)
 
 
+def test_nesterov_kernel_routing_matches_xla():
+    """The fused Pallas outer kernel is a drop-in for the XLA transform."""
+    theta = {"w": jax.random.normal(jax.random.PRNGKey(0), (37, 5))}
+    psi = {"w": jax.random.normal(jax.random.PRNGKey(1), (37, 5))}
+    t_x = nesterov(0.7, 0.9)
+    t_k = nesterov(0.7, 0.9, kernel=True)
+    sx, sk = t_x.init(theta), t_k.init(theta)
+    for _ in range(2):
+        px, sx = t_x.apply(theta, psi, sx)
+        pk, sk = t_k.apply(theta, psi, sk)
+    np.testing.assert_allclose(np.asarray(px["w"]), np.asarray(pk["w"]), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(sx["u"]["w"]), np.asarray(sk["u"]["w"]),
+                               rtol=1e-6)
+
+
 @pytest.mark.parametrize("state_dtype", ["float32", "bfloat16"])
 def test_optimizer_state_dtype_policy(state_dtype):
     p = _params()
     st = muon(OptimizerConfig(state_dtype=state_dtype)).init(p)
-    assert st["m"]["layers"]["mlp"]["w_in"].dtype == jnp.dtype(state_dtype)
+    # momentum for hidden matrices lives in the 'muon' partition's
+    # trace_momentum stage
+    m = st["tx"]["muon"][0]["m"]["layers"]["mlp"]["w_in"]
+    assert m.dtype == jnp.dtype(state_dtype)
+    # the AdamW-fallback second moment too
+    v = st["tx"]["adamw"]["v"]["embed"]
+    assert v.dtype == jnp.dtype(state_dtype)
+
+
+# ---------------------------------------------------------------------------
+# Transform combinators
+# ---------------------------------------------------------------------------
+
+
+def _double():
+    return stateless(lambda u, p: jax.tree.map(lambda x: 2.0 * x, u))
+
+
+def _add_one():
+    return stateless(lambda u, p: jax.tree.map(lambda x: x + 1.0, u))
+
+
+def test_chain_is_associative_on_updates():
+    p = {"a": jnp.arange(4.0), "b": {"c": jnp.ones((2, 3))}}
+    g = jax.tree.map(lambda x: x + 0.5, p)
+    variants = [
+        chain(_double(), _add_one(), _double()),
+        chain(chain(_double(), _add_one()), _double()),
+        chain(_double(), chain(_add_one(), _double())),
+        chain(identity(), _double(), _add_one(), _double(), identity()),
+    ]
+    outs = []
+    for tx in variants:
+        u, _ = tx.update(g, tx.init(p), p)
+        outs.append(u)
+    for u in outs[1:]:
+        jax.tree.map(lambda a, b: np.testing.assert_array_equal(
+            np.asarray(a), np.asarray(b)), outs[0], u)
+
+
+def test_chain_rejects_nonterminal_apply():
+    with pytest.raises(ValueError, match="terminal"):
+        chain(nesterov(0.7, 0.9), identity())
+
+
+def test_generic_chain_builds_momentum_sgd():
+    """A new optimizer in two lines: trace_momentum | scale_by_schedule with
+    the default p+u application — the API the variant modules build on."""
+    from repro.optim import apply_updates, scale_by_schedule
+
+    lr, b1 = 0.1, 0.9
+    tx = chain(trace_momentum(OptimizerConfig(b1=b1)),
+               scale_by_schedule(lambda count: jnp.float32(-lr)))
+    p = {"w": jnp.ones((3, 3))}
+    st = tx.init(p)
+    m_ref = np.zeros((3, 3), np.float32)
+    for step in range(3):
+        g = {"w": jnp.full((3, 3), float(step + 1))}
+        u, st = tx.update(g, st, p)
+        p = apply_updates(p, u)
+        m_ref = b1 * m_ref + (step + 1)
+    np.testing.assert_allclose(np.asarray(p["w"]),
+                               _sgd_trajectory(m_ref_steps=3, lr=lr, b1=b1),
+                               rtol=1e-6)
+
+
+def _sgd_trajectory(m_ref_steps: int, lr: float, b1: float) -> np.ndarray:
+    p = np.ones((3, 3), np.float32)
+    m = np.zeros((3, 3), np.float32)
+    for step in range(m_ref_steps):
+        m = b1 * m + (step + 1)
+        p = p - lr * m
+    return p
+
+
+def test_partition_routes_exactly_like_the_adamw_pattern():
+    """Hidden matrices -> 'muon', embed/norm/bias/head -> 'adamw', matching
+    the legacy _ADAMW_PATTERN split leaf for leaf."""
+    p = _params()
+    tag_mu = stateless(lambda u, _: jax.tree.map(lambda x: x * 0 + 1.0, u))
+    tag_ad = stateless(lambda u, _: jax.tree.map(lambda x: x * 0 - 1.0, u))
+    tx = partition(muon_label, {"muon": tag_mu, "adamw": tag_ad})
+    u, _ = tx.update(p, tx.init(p), p)
+    for (path, leaf), (_, lab) in zip(tree_leaves_with_paths(u),
+                                      tree_leaves_with_paths(param_labels(p))):
+        want = 1.0 if lab == "muon" else -1.0
+        assert float(np.asarray(leaf).ravel()[0]) == want, (path, lab)
+
+
+def test_partition_state_only_holds_owned_leaves():
+    p = _params()
+    st = partition(muon_label, {"muon": trace_momentum(OptimizerConfig()),
+                                "adamw": scale_by_adam(OptimizerConfig())}).init(p)
+    muon_paths = {path for path, _ in tree_leaves_with_paths(st["muon"])}
+    assert not any("embed" in path or "norm" in path for path in muon_paths)
+    adamw_paths = {path for path, _ in tree_leaves_with_paths(st["adamw"])}
+    assert not any("w_in" in path for path in adamw_paths)
+
+
+def test_partition_unknown_label_raises():
+    with pytest.raises(ValueError, match="no transform"):
+        partition(lambda path, leaf: "mystery", {"muon": identity()}).init(_params())
+
+
+def test_muon_bp_reduces_to_muon_at_period_1():
+    p = _params()
+    g1, g2 = _grads(1), _grads(2)
+    cfg = OptimizerConfig(lr=0.05, weight_decay=1e-4, ns_period=1)
+    o_m, o_bp = muon(cfg), muon_bp(cfg)
+    pm, sm = p, o_m.init(p)
+    pb, sb = p, o_bp.init(p)
+    for g in (g1, g2):
+        pm, sm = o_m.step(pm, g, sm)
+        pb, sb = o_bp.step(pb, g, sb)
+    jax.tree.map(lambda a, b: np.testing.assert_array_equal(
+        np.asarray(a), np.asarray(b)), pm, pb)
+
+
+def test_muon_bp_skips_ns_between_periods():
+    """At period 2, step 2 applies raw momentum (not orthogonalized): the
+    hidden update's singular values stay far from the NS plateau."""
+    p = {"w": jnp.zeros((16, 64))}
+    cfg = OptimizerConfig(lr=1.0, weight_decay=0.0, muon_lr_scale_mode="none",
+                          ns_period=2)
+    opt = muon_bp(cfg)
+    st = opt.init(p)
+    g = {"w": jax.random.normal(jax.random.PRNGKey(0), (16, 64)) * 1e-3}
+    p1, st = opt.step(p, g, st)        # step 1: orthogonalized, O(1) svals
+    s1 = np.linalg.svd(np.asarray(p1["w"]), compute_uv=False)
+    assert s1.max() > 0.3
+    p2, st = opt.step(p1, g, st)       # step 2: momentum-SGD, tiny update
+    step2 = np.asarray(p2["w"] - p1["w"])
+    assert np.abs(step2).max() < 1e-2
+
+
+def test_normuon_state_dtype_respects_policy():
+    p = _params()
+    for sdt in ("float32", "bfloat16"):
+        st = normuon(OptimizerConfig(state_dtype=sdt)).init(p)
+        # chain: (trace_momentum, orthogonalize, scale_by_neuron_rms)
+        v = st["tx"]["muon"][2]["v"]["layers"]["mlp"]["w_in"]
+        assert v.dtype == jnp.dtype(sdt)
+        # neuron-wise: one column per output neuron, not a full matrix
+        assert v.shape == (2, 16, 1)
+    p2, _ = (lambda o, s: o.step(p, _grads(0), s))(
+        normuon(OptimizerConfig(lr=0.05)), normuon(OptimizerConfig(lr=0.05)).init(p))
+    assert all(np.isfinite(np.asarray(x)).all() for x in jax.tree.leaves(p2))

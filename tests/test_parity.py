@@ -1,0 +1,31 @@
+"""Exact-parity guard: the transform-stack optimizers must reproduce the
+seed's fixed-seed reference run bit-for-bit at the reported precision.
+
+The reference command (see CHANGES.md PR 1) is
+
+    train.py --arch smollm-135m --reduced --inner {muon,adamw} --workers 2 \
+        --sync-interval 4 --rounds 6 --seq-len 64 --batch-per-worker 4 --seed 0
+
+whose final smoothed eval losses are pinned below. Any reassociation of the
+optimizer arithmetic (descent order, weight-decay coupling, schedule
+placement) shows up here: Muon's bf16 Newton–Schulz chaotically amplifies
+even 1-ulp perturbations across the 24 steps.
+"""
+import pytest
+
+from repro.launch.train import build_parser, train
+
+REFERENCE = {"muon": 6.2911, "adamw": 6.8274}
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("inner", ["muon", "adamw"])
+def test_fixed_seed_reference_losses(inner, tmp_path):
+    args = build_parser().parse_args([
+        "--arch", "smollm-135m", "--reduced", "--inner", inner,
+        "--workers", "2", "--sync-interval", "4", "--rounds", "6",
+        "--seq-len", "64", "--batch-per-worker", "4", "--seed", "0",
+        "--out", str(tmp_path / inner),
+    ])
+    result = train(args)
+    assert round(result["final_loss"], 4) == REFERENCE[inner]
