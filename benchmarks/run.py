@@ -38,11 +38,15 @@ def all_benchmarks():
     }
 
 
-def main() -> None:
+def build_parser() -> argparse.ArgumentParser:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None, help="comma-separated subset")
     ap.add_argument("--out", default="results/benchmarks.csv")
-    args = ap.parse_args()
+    return ap
+
+
+def main() -> None:
+    args = build_parser().parse_args()
 
     benches = all_benchmarks()
     names = args.only.split(",") if args.only else list(benches)

@@ -19,15 +19,17 @@ from repro.core.wallclock import RunSpec, compute_utilization, training_time_hou
 
 def bench_train_throughput(rounds: int = 4, warmup: int = 1,
                            reps: int = 2) -> list[dict]:
-    """Measured steps/s on the reduced smollm-135m config, three executors:
+    """Measured steps/s on the reduced smollm-135m config, plus an R-sweep:
 
       * ``per_step``  — jit(inner_step) x H + jit(outer_step), host loop with
         a blocking loss read per step (fully unfused dispatch — how the
         pre-engine analysis/dry-run paths drove training);
       * ``seed_path`` — undonated jit(diloco_round) with a blocking metrics
         read every round (what launch/train.py did pre-engine);
-      * ``engine``    — the unified TrainEngine: donated fused round + async
-        metrics drain via the driver.
+      * ``engine``    — the unified TrainEngine at R=1: donated fused round +
+        async metrics drain via the driver (one dispatch per round);
+      * ``superstep_rN`` — the same engine dispatching N rounds per superstep
+        (scan-over-R), which amortizes the per-round host dispatch away.
 
     The shape is dispatch-sensitive (small per-step compute, long H) so the
     executor — not the matmuls — determines steps/s. Variants are measured
@@ -36,7 +38,7 @@ def bench_train_throughput(rounds: int = 4, warmup: int = 1,
     """
     from repro.configs import get_config, reduce_config
     from repro.core import DiLoCoConfig, diloco_round, inner_step, make_optimizer, outer_step
-    from repro.data import DataConfig, MarkovStream, batches_for_round
+    from repro.data import DataConfig, MarkovStream, batches_for_round, batches_for_span
     from repro.engine import TrainEngine, run_rounds
     from repro.models import build_model
     from repro.optim import OptimizerConfig
@@ -51,6 +53,13 @@ def bench_train_throughput(rounds: int = 4, warmup: int = 1,
     total = rounds + warmup
     round_batches = [batches_for_round(stream, r, H) for r in range(total)]
     step_batches = [stream.batch(t) for t in range(total * H)]
+    # pre-generated span batches for the R-sweep (data gen stays out of the
+    # timed region, as it does for the other variants)
+    R_SWEEP = tuple(r for r in (2, 4) if rounds % r == 0)
+    span_batches = {
+        (r0, n): batches_for_span(stream, r0, H, n)
+        for n in R_SWEEP for r0 in range(warmup, total, n)
+    }
     opt = make_optimizer(dcfg, icfg)
 
     def bench_per_step() -> float:
@@ -93,8 +102,26 @@ def bench_train_throughput(rounds: int = 4, warmup: int = 1,
         jax.block_until_ready(state["outer_params"])
         return rounds * H / (time.perf_counter() - t0)
 
+    def bench_superstep(R: int):
+        def run() -> float:
+            engine = TrainEngine(model, dcfg, icfg)
+            state = engine.init(jax.random.PRNGKey(0))
+            state, _ = run_rounds(engine, state, lambda r: round_batches[r], warmup)
+            # compile + execute the R-wide dispatch outside the timed region
+            state, _ = engine.superstep(state, span_batches[(warmup, R)])
+            jax.block_until_ready(state["outer_params"])
+            t0 = time.perf_counter()
+            state, _ = run_rounds(engine, state, lambda r: round_batches[r],
+                                  total, start=warmup, rounds_per_dispatch=R,
+                                  span_batches_for=lambda r0, n: span_batches[(r0, n)])
+            jax.block_until_ready(state["outer_params"])
+            return rounds * H / (time.perf_counter() - t0)
+
+        return run
+
     variants = {"per_step": bench_per_step, "seed_path": bench_seed_path,
                 "engine": bench_engine}
+    variants.update({f"superstep_r{R}": bench_superstep(R) for R in R_SWEEP})
     best = {name: 0.0 for name in variants}
     for _ in range(reps):
         for name, fn in variants.items():
@@ -110,6 +137,13 @@ def bench_train_throughput(rounds: int = 4, warmup: int = 1,
                     f"speedup_vs_seed={best['engine'] / best['seed_path']:.2f}x;"
                     f"speedup_vs_per_step={best['engine'] / best['per_step']:.2f}x"},
     ]
+    for R in R_SWEEP:
+        v = best[f"superstep_r{R}"]
+        rows.append({
+            "name": f"train_throughput/superstep_r{R}", "value": round(v, 3),
+            "derived": f"steps_per_s;rounds_per_dispatch={R};"
+                       f"speedup_vs_r1_engine={v / best['engine']:.2f}x",
+        })
     return rows
 
 

@@ -1,14 +1,16 @@
 """Quickstart: MuLoCo vs DiLoCo in ~40 lines using the unified TrainEngine.
 
-The engine compiles the whole communication round (H inner steps + outer
-sync) into one donated, jitted function; the loop below just feeds batches.
+The engine compiles communication rounds (H inner steps + outer sync each)
+into one donated, jitted superstep — below, the WHOLE run is a single
+device dispatch: batches arrive round-stacked [R, H, K, B, S] and per-round
+losses come back in one [R, H] buffer.
 
     PYTHONPATH=src python examples/quickstart.py
 """
 import jax
 
 from repro.core import DiLoCoConfig
-from repro.data import DataConfig, MarkovStream, batches_for_round
+from repro.data import DataConfig, MarkovStream, batches_for_span
 from repro.engine import TrainEngine
 from repro.models import ModelConfig, build_model
 from repro.optim import OptimizerConfig
@@ -29,9 +31,9 @@ for inner, lr in (("muon", 2e-2), ("adamw", 4e-3)):
     state = engine.init(jax.random.PRNGKey(0))
     data = MarkovStream(DataConfig(vocab=cfg.vocab, seq_len=64, batch_per_worker=8,
                                    n_workers=K, seed=1))
-    for r in range(ROUNDS):
-        state, info = engine.step(state, batches_for_round(data, r, H))
+    # all ROUNDS rounds in ONE dispatch; loss comes back [ROUNDS, H]
+    state, out = engine.superstep(state, batches_for_span(data, 0, H, ROUNDS))
     name = "MuLoCo" if inner == "muon" else "DiLoCo"
     print(f"{name}: final train loss after {ROUNDS} rounds "
-          f"({ROUNDS * H} inner steps, {ROUNDS} communications): "
-          f"{float(info['loss'][-1]):.4f}")
+          f"({ROUNDS * H} inner steps, {ROUNDS} communications, 1 dispatch): "
+          f"{float(out['loss'][-1, -1]):.4f}")

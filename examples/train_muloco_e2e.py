@@ -1,7 +1,8 @@
 """End-to-end driver: train a ~small LM with MuLoCo for a few hundred steps,
 with cosine schedule, eval logging, checkpointing and resume — the full
-production path via repro.launch.train, which executes every round through
-the unified TrainEngine (one donated, jitted round fn + async metrics drain).
+production path via repro.launch.train, which executes rounds through the
+unified TrainEngine in supersteps (here 5 rounds per donated, jitted
+dispatch, eval folded in + async metrics drain).
 
     PYTHONPATH=src python examples/train_muloco_e2e.py
 """
@@ -14,6 +15,7 @@ args = build_parser().parse_args([
     "--workers", "4",
     "--sync-interval", "10",
     "--rounds", "25",              # 250 inner steps
+    "--rounds-per-dispatch", "5",  # superstep: 5 rounds per device dispatch
     "--seq-len", "64",
     "--batch-per-worker", "8",
     "--lr", "2e-2",

@@ -18,8 +18,10 @@ in through :mod:`repro.core.streaming` / :mod:`repro.core.collectives`.
 
 State lives in :class:`repro.engine.TrainState` (a registered pytree), and
 execution goes through :class:`repro.engine.TrainEngine`, which compiles
-:func:`diloco_round` once as a donated, jitted program. The DP baseline is
-the degenerate ``dp_config`` (K=1, H=1, no outer) of the same round.
+:func:`diloco_round` once as a donated, jitted program — scanned over R
+rounds per dispatch by the superstep executor, of which single-round
+execution is the degenerate R=1 case. The DP baseline is the degenerate
+``dp_config`` (K=1, H=1, no outer) of the same round.
 
 Both optimizers are transform chains (:mod:`repro.optim.transform`): the
 inner step is a ``descend``-wrapped chain from :func:`make_optimizer`, and
@@ -308,9 +310,13 @@ def diloco_round(model: Model, dcfg: DiLoCoConfig, opt, state: PyTree, batches: 
     This is THE round function: ``lax.scan`` over the H inner steps with the
     outer sync (and, for streaming, the J per-segment partition syncs —
     statically unrolled, since each segment carries a different mask) folded
-    into the same traced program. :class:`repro.engine.TrainEngine` compiles
-    it once, donated, and every training path (train / dryrun / bench /
-    examples) executes it.
+    into the same traced program. The sync itself is not hand-wired here: it
+    is the declared pseudogradient transform chain Δ -> compress/EF ->
+    reduce -> outer descent built by :func:`make_outer` and threaded through
+    ``outer_step``. :class:`repro.engine.TrainEngine` wraps this function in
+    the superstep executor (``lax.scan`` over R rounds per dispatch,
+    :mod:`repro.engine.superstep`), compiles it once, donated, and every
+    training path (train / dryrun / bench / examples) executes it.
 
     ``batches`` leaves: [H, K, B/K, ...]. With streaming (J>1) the round is J
     segments of H/J steps, each followed by a partition-j sync — peak

@@ -1,1 +1,6 @@
-from repro.data.synthetic import DataConfig, MarkovStream, batches_for_round  # noqa: F401
+from repro.data.synthetic import (  # noqa: F401
+    DataConfig,
+    MarkovStream,
+    batches_for_round,
+    batches_for_span,
+)

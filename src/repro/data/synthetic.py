@@ -106,3 +106,17 @@ def batches_for_round(stream: MarkovStream, round_idx: int, sync_interval: int) 
     Generated in one compiled call (:meth:`MarkovStream.batch_stack`) rather
     than H sequential ``stream.batch`` host dispatches."""
     return stream.batch_stack(round_idx * sync_interval, sync_interval)
+
+
+def batches_for_span(stream: MarkovStream, round_idx: int, sync_interval: int,
+                     n_rounds: int) -> dict:
+    """Round-stacked batches for ``n_rounds`` consecutive rounds:
+    leaves [R, H, K, B, S] — the superstep executor's input.
+
+    One compiled ``batch_stack`` call for all R*H steps, then a reshape of
+    the leading axis; bitwise-identical to stacking
+    ``batches_for_round(stream, round_idx + i, sync_interval)`` for i in
+    range(n_rounds)."""
+    flat = stream.batch_stack(round_idx * sync_interval, n_rounds * sync_interval)
+    return jax.tree.map(
+        lambda x: x.reshape(n_rounds, sync_interval, *x.shape[1:]), flat)

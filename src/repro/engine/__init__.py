@@ -1,14 +1,20 @@
-"""The training engine: one donated, fully-jitted round executor.
+"""The training engine: one donated, fully-jitted multi-round executor.
 
-``TrainState`` (registered pytree) + ``TrainEngine`` (compiles THE round
-function) + ``run_rounds`` (async multi-round driver). All four training
-paths — launch/train, launch/dryrun, benchmarks, examples — consume this
-subsystem instead of hand-wiring diloco_init/diloco_round.
+``TrainState`` (registered pytree) + ``TrainEngine`` (compiles THE
+superstep executor — R rounds per dispatch, single-round as the degenerate
+R=1 case) + ``run_rounds`` (async driver draining metrics once per
+superstep). All four training paths — launch/train, launch/dryrun,
+benchmarks, examples — consume this subsystem instead of hand-wiring
+diloco_init/diloco_round.
 """
 from repro.engine.state import TrainState  # noqa: F401
 from repro.engine.engine import (  # noqa: F401
     TrainEngine,
     build_round_fn,
     dp_engine,
+)
+from repro.engine.superstep import (  # noqa: F401
+    build_superstep_fn,
+    effective_rounds_per_dispatch,
 )
 from repro.engine.driver import run_rounds  # noqa: F401

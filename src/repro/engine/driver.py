@@ -1,12 +1,23 @@
-"""Async multi-round driver: overlap dispatch with host-side metrics drain.
+"""Async superstep driver: overlap dispatch with host-side metrics drain.
 
-JAX dispatch is asynchronous: ``engine.step`` returns device values
-immediately while the round executes. The driver exploits that by keeping up
-to ``max_in_flight`` rounds' metrics un-materialized — the host converts
-round r's losses to floats (a blocking device read) only after round r+1 has
-already been dispatched, so data generation + CSV writing + logging ride for
-free under the accelerator's compute. The seed-era loops blocked on
-``float(info["loss"].mean())`` every round, serializing host and device.
+JAX dispatch is asynchronous: ``engine.superstep`` returns device values
+immediately while the rounds execute. The driver exploits that twice over:
+
+* **R rounds per dispatch** — with ``rounds_per_dispatch=R`` the engine runs
+  R whole communication rounds inside one ``lax.scan`` program
+  (:mod:`repro.engine.superstep`), so the host touches the device once per
+  superstep instead of once per round. R is auto-clamped
+  (:func:`repro.engine.superstep.effective_rounds_per_dispatch`) to divide
+  both the remaining rounds and the checkpoint cadence, which is how
+  eval/checkpoint schedules survive multi-round dispatch without any
+  in-program branching.
+* **late metric reads** — up to ``max_in_flight`` dispatches' metrics stay
+  un-materialized: the host converts a superstep's ``[R, H]`` loss buffer
+  (and ``[R]`` eval-loss buffer) to floats — a blocking device read — only
+  after the next superstep has already been dispatched, so data generation +
+  CSV writing + logging ride for free under the accelerator's compute. The
+  seed-era loops blocked on ``float(info["loss"].mean())`` every round,
+  serializing host and device.
 """
 from __future__ import annotations
 
@@ -14,12 +25,18 @@ import collections
 from typing import Any, Callable
 
 import jax
+import numpy as np
+
+from repro.engine.superstep import effective_rounds_per_dispatch
 
 PyTree = Any
 
 
 def run_rounds(engine, state, batches_for: Callable[[int], PyTree],
                rounds: int, *, start: int = 0,
+               rounds_per_dispatch: int = 1,
+               span_batches_for: Callable[[int, int], PyTree] | None = None,
+               eval_batches_for: Callable[[int, int], PyTree] | None = None,
                eval_fn: Callable[[Any, int], jax.Array] | None = None,
                on_round: Callable[[dict], None] | None = None,
                on_state: Callable[[int, Any], None] | None = None,
@@ -27,44 +44,75 @@ def run_rounds(engine, state, batches_for: Callable[[int], PyTree],
                max_in_flight: int = 2) -> tuple[Any, list[dict]]:
     """Run rounds ``start..rounds-1`` through the engine.
 
-    ``batches_for(r)`` supplies the [H, K, B, ...] batches for round r.
-    ``eval_fn(state, r)`` (optional) returns a device scalar evaluated after
-    the round's sync (dispatched, not read). ``on_round(metrics)`` fires when
-    a round's metrics are drained to host floats. ``on_state(r, state)``
-    fires every ``on_state_every``-th round (r+1 divisible) with the new
-    state, for checkpointing; all pending metrics are drained first so
-    whatever on_round persisted (e.g. the CSV) never lags a saved
-    checkpoint. Returns the final state and the per-round metrics.
+    ``batches_for(r)`` supplies the [H, K, B, ...] batches for round r; with
+    ``rounds_per_dispatch > 1``, ``span_batches_for(r0, n)`` (when given)
+    supplies the round-stacked [n, H, K, B, ...] leaves for rounds
+    ``r0..r0+n-1`` in one call — otherwise the driver stacks ``batches_for``
+    on host. ``eval_batches_for(r0, n)`` (optional) supplies [n, B, ...]
+    eval batches; the engine then computes every round's post-sync eval loss
+    *inside* the superstep program. ``eval_fn(state, r)`` is the legacy
+    host-side alternative (a separately-jitted device scalar per round); it
+    needs the state between rounds, so it pins the dispatch width to R=1.
+
+    ``on_round(metrics)`` fires per round when a superstep's metrics are
+    drained to host floats. ``on_state(r, state)`` fires every
+    ``on_state_every``-th round (r+1 divisible) with the new state, for
+    checkpointing; the requested ``rounds_per_dispatch`` is clamped to divide
+    that cadence, and all pending metrics are drained first so whatever
+    on_round persisted (e.g. the CSV) never lags a saved checkpoint.
+    Returns the final state and the per-round metrics.
     """
+    span = rounds - start
+    R = effective_rounds_per_dispatch(
+        rounds_per_dispatch if eval_fn is None else 1, span,
+        on_state_every if on_state is not None else 0, start=start)
+
     pending: collections.deque = collections.deque()
     history: list[dict] = []
+    H = engine.dcfg.sync_interval
 
     def drain_one() -> None:
-        r, loss, ev = pending.popleft()
-        losses = jax.device_get(loss)
-        rec = {
-            "round": r,
-            "step": (r + 1) * engine.dcfg.sync_interval,
-            "train_loss": float(losses.mean()),
-            "train_loss_last": float(losses[-1]),
-        }
-        if ev is not None:
-            rec["eval_loss"] = float(jax.device_get(ev))
-        history.append(rec)
-        if on_round is not None:
-            on_round(rec)
+        r0, n, loss, ev = pending.popleft()
+        losses = np.atleast_2d(np.asarray(jax.device_get(loss)))  # [n, H]
+        evs = None if ev is None else np.atleast_1d(np.asarray(jax.device_get(ev)))
+        for i in range(n):
+            rec = {
+                "round": r0 + i,
+                "step": (r0 + i + 1) * H,
+                "train_loss": float(losses[i].mean()),
+                "train_loss_last": float(losses[i, -1]),
+            }
+            if evs is not None:
+                rec["eval_loss"] = float(evs[i])
+            history.append(rec)
+            if on_round is not None:
+                on_round(rec)
 
-    for r in range(start, rounds):
-        state, info = engine.step(state, batches_for(r))
-        ev = eval_fn(state, r) if eval_fn is not None else None
-        # keep only the loss vector alive; the rest of info (notably the
-        # parameter-sized psi tree) must be freeable as soon as the round's
-        # consumers drop it
-        pending.append((r, info["loss"], ev))
-        if on_state is not None and on_state_every and (r + 1) % on_state_every == 0:
+    for r0 in range(start, rounds, R):
+        if R == 1 and eval_batches_for is None:
+            # classic path: single-round dispatch + optional host-side eval
+            state, info = engine.step(state, batches_for(r0))
+            ev = eval_fn(state, r0) if eval_fn is not None else None
+            loss = info["loss"]
+        else:
+            if span_batches_for is not None:
+                batches = span_batches_for(r0, R)
+            else:
+                batches = jax.tree.map(
+                    lambda *bs: np.stack([np.asarray(b) for b in bs]),
+                    *[batches_for(r0 + i) for i in range(R)])
+            eb = eval_batches_for(r0, R) if eval_batches_for is not None else None
+            state, out = engine.superstep(state, batches, eb)
+            ev = out.get("eval_loss")
+            loss = out["loss"]
+        # keep only the metric buffers alive; the rest (notably the
+        # parameter-sized psi tree of the R=1 path) must be freeable as soon
+        # as the dispatch's consumers drop it
+        pending.append((r0, R, loss, ev))
+        if on_state is not None and on_state_every and (r0 + R) % on_state_every == 0:
             while pending:  # CSV/metrics must never lag a saved checkpoint
                 drain_one()
-            on_state(r, state)
+            on_state(r0 + R - 1, state)
         while len(pending) > max_in_flight:
             drain_one()
     while pending:

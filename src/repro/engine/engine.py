@@ -1,24 +1,31 @@
-"""TrainEngine: one donated, fully-jitted round executor for every path.
+"""TrainEngine: one donated, fully-jitted multi-round executor for every path.
 
 The paper's hot loop — H inner steps + the outer sync — used to be re-wired
 by hand in four places (launch/train.py, launch/dryrun.py, benchmarks,
 examples), each with its own jit boundary, no buffer donation, and host
 round-trips for metrics. The engine collapses them to a single builder:
 
-  * ``TrainEngine(model, dcfg, icfg)`` compiles **one** jitted round function
-    (``lax.scan`` over the H inner steps with the outer sync — and the J
-    streaming segment syncs — folded inside) with the TrainState argument
-    **donated**, so the round updates in place instead of double-buffering
-    the 4 parameter-sized state copies;
+  * ``TrainEngine(model, dcfg, icfg)`` compiles **one** jitted executor:
+    ``lax.scan`` over the H inner steps, the outer sync — the declared
+    pseudogradient transform chain of :func:`repro.core.diloco.make_outer`
+    (Δ -> compress/EF -> reduce -> outer descent), plus the J streaming
+    segment syncs — folded inside, and (via
+    :mod:`repro.engine.superstep`) an outer ``lax.scan`` running R whole
+    communication rounds per dispatch. The TrainState argument is
+    **donated**, so rounds update in place instead of double-buffering the
+    4 parameter-sized state copies;
   * on the production mesh the same builder threads the StepPlan shardings
     (worker axis -> 'pod', FSDP/TP within a pod) and activation rules through
     ``jax.jit``, so the CPU path and the 512-chip path lower from the same
     code;
   * the DP baseline is the degenerate config ``dp_config(inner)`` (K=1, H=1,
-    no outer): DP AdamW / DP Muon and DiLoCo/MuLoCo share one executor;
-  * ``engine.step`` dispatches asynchronously — metrics come back as device
-    values, and :mod:`repro.engine.driver` drains them on the host while the
-    next round is already running.
+    no outer), and the single-round ``engine.step`` is the degenerate R=1
+    case of the same superstep builder: DP AdamW / DP Muon, DiLoCo/MuLoCo,
+    and single- vs multi-round dispatch all share one executor;
+  * dispatch is asynchronous — metrics come back as device buffers
+    (``[R, H]`` losses, ``[R]`` eval losses), and
+    :mod:`repro.engine.driver` drains them on the host once per superstep
+    while the next superstep is already running.
 """
 from __future__ import annotations
 
@@ -35,6 +42,7 @@ from repro.core.diloco import (
     make_outer,
 )
 from repro.engine.state import TrainState
+from repro.engine.superstep import build_superstep_fn
 from repro.models.api import Model
 from repro.optim import OptimizerConfig
 
@@ -75,8 +83,11 @@ class TrainEngine:
         for r in range(rounds):
             state, info = engine.step(state, batches_for_round(stream, r, H))
 
-    ``step`` donates the incoming state; never reuse a state you passed in.
-    For overlapping dispatch with host-side metrics draining use
+        # or R rounds in ONE dispatch (leaves [R, H, K, B, ...]):
+        state, out = engine.superstep(state, batches_for_span(stream, 0, H, R))
+
+    ``step``/``superstep`` donate the incoming state; never reuse a state you
+    passed in. For overlapping dispatch with host-side metrics draining use
     :func:`repro.engine.driver.run_rounds`.
     """
 
@@ -96,8 +107,13 @@ class TrainEngine:
         self.round_fn = build_round_fn(model, dcfg, self.opt, masks=self._masks,
                                        rules=rules, spmd_axis=spmd_axis,
                                        outer=self.outer)
+        # ONE eval closure serves both the in-superstep folded eval and the
+        # standalone eval_loss jit — they must stay bitwise-identical
+        eval_loss_fn = lambda params, batch: model.loss(params, batch)[0]  # noqa: E731
+        self.superstep_fn = build_superstep_fn(self.round_fn,
+                                               eval_loss_fn=eval_loss_fn)
         self._jitted: Callable | None = None
-        self._eval_loss = jax.jit(lambda params, batch: model.loss(params, batch)[0])
+        self._eval_loss = jax.jit(eval_loss_fn)
 
     # -- construction helpers ----------------------------------------------
 
@@ -129,24 +145,31 @@ class TrainEngine:
         """Commit a TrainState to the mesh under the StepPlan shardings."""
         return jax.device_put(state, self.state_shardings(tensor_parallel))
 
-    def place_batches(self, batches: PyTree) -> PyTree:
-        """Commit [H, K, B, ...] round batches (K->'pod', B->'data')."""
+    def place_batches(self, batches: PyTree, leading_scan: int = 1) -> PyTree:
+        """Commit [H, K, B, ...] round batches (K->'pod', B->'data').
+
+        ``leading_scan`` counts the unsharded scanned axes: 1 for a round's
+        [H, ...] batches, 2 for a superstep's [R, H, ...] batches."""
         if self.mesh is None:
             return batches
         from repro.launch.sharding import batch_shardings
 
         return jax.device_put(
             batches, batch_shardings(self.mesh, batches, k_stacked=True,
-                                     leading_scan=True))
+                                     leading_scan=leading_scan))
 
     @property
     def jitted_round(self) -> Callable:
-        """The one donated, jitted round executor (compiled lazily)."""
+        """THE donated, jitted executor (compiled lazily).
+
+        One jit object serves every dispatch width: each distinct
+        (R, with/without eval) signature traces the same superstep builder
+        once; R == 1 without eval *is* the single-round program."""
         if self._jitted is None:
             kw: dict = {}
             if self.donate:
                 kw["donate_argnums"] = (0,)
-            self._jitted = jax.jit(self.round_fn, **kw)
+            self._jitted = jax.jit(self.superstep_fn, **kw)
         return self._jitted
 
     # -- execution ----------------------------------------------------------
@@ -157,13 +180,37 @@ class TrainEngine:
     def step(self, state: TrainState, batches: PyTree) -> tuple[TrainState, dict]:
         """One communication round; async dispatch, donated state.
 
-        On a mesh, the committed shardings of ``state`` (see
-        :meth:`place_state`) and the batches propagate through jit, so the
-        round lowers with the production layout."""
+        The degenerate R=1 dispatch of :meth:`superstep` — same executor,
+        single-round metrics (``loss`` [H] plus the round's ``psi``). On a
+        mesh, the committed shardings of ``state`` (see :meth:`place_state`)
+        and the batches propagate through jit, so the round lowers with the
+        production layout."""
+        state, out = self.superstep(
+            state, jax.tree.map(lambda b: b[None], batches))
+        return state, {"loss": out["loss"][0], "psi": out["psi"]}
+
+    def superstep(self, state: TrainState, batches: PyTree,
+                  eval_batches: PyTree | None = None) -> tuple[TrainState, dict]:
+        """R communication rounds in ONE dispatch; donated state.
+
+        ``batches`` leaves are round-stacked [R, H, K, B, ...]. Returns
+        ``(state, {"loss": f32[R, H]})`` plus ``"eval_loss": f32[R]`` when
+        ``eval_batches`` (leaves [R, B, ...]) are supplied — the post-sync
+        outer params of every round are evaluated inside the same program.
+        """
         if self.mesh is not None:
+            from repro.launch.sharding import batch_shardings
+
             with self.mesh:
-                return self.jitted_round(state, self.place_batches(batches))
-        return self.jitted_round(state, batches)
+                if eval_batches is not None:
+                    eval_batches = jax.device_put(
+                        eval_batches, batch_shardings(
+                            self.mesh, eval_batches, k_stacked=False,
+                            leading_scan=1))
+                return self.jitted_round(
+                    state, self.place_batches(batches, leading_scan=2),
+                    eval_batches)
+        return self.jitted_round(state, batches, eval_batches)
 
     def eval_loss(self, params: PyTree, batch: PyTree) -> jax.Array:
         """Loss of the synced (outer) params on one un-stacked batch."""
@@ -172,7 +219,9 @@ class TrainEngine:
     # -- introspection (used by the no-retrace / donation tests) ------------
 
     def lower(self, state: TrainState, batches: PyTree):
-        return self.jitted_round.lower(state, batches)
+        """Lower the degenerate R=1 dispatch (the single-round program)."""
+        return self.jitted_round.lower(
+            state, jax.tree.map(lambda b: b[None], batches), None)
 
 
 def dp_engine(model: Model, inner_name: str, icfg: OptimizerConfig,

@@ -14,11 +14,16 @@ A registered-dataclass pytree replacing the raw ``dict`` state that
     it shards with the workers (K -> 'pod'), not ZeRO over pods;
     :class:`repro.core.diloco.OuterOptimizer` packs both fields around its
     declared chain;
-  * ``round`` — the on-device round counter.
+  * ``round`` — the on-device round counter. It lives in the state (not on
+    the host) so that the superstep executor's scan-over-R carry advances it
+    R times per dispatch and checkpoints taken at superstep boundaries
+    resume at the true round index.
 
 Being a real pytree node, TrainState flows through ``jax.jit`` (with buffer
 donation), ``jax.eval_shape``, checkpointing, and sharding-tree construction
-unchanged. For backward compatibility with the dict era it also supports
+unchanged — it is the carry of both engine scans (over the H inner steps
+and over the R rounds of a superstep; per-round metrics travel separately
+as the scan's stacked ``[R, ...]`` outputs, never through the carry). For backward compatibility with the dict era it also supports
 mapping-style access (``state["outer_params"]``, ``state["round"]``), which
 the analysis helpers and older tests use.
 """

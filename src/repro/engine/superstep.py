@@ -1,0 +1,121 @@
+"""Superstep executor: R communication rounds per device dispatch.
+
+The engine's round program already folds the H inner steps and the outer
+sync into one jitted function, but the host still re-enters the device once
+per round — dispatch latency, donation bookkeeping, and metric reads that
+are pure overhead on the paper's long runs (DiLoCo explicitly targets
+low-*orchestration* training, and K=16 MuLoCo at 15B spends thousands of
+rounds). The superstep retires that last per-round host round-trip:
+
+  * :func:`build_superstep_fn` wraps THE round function (the same
+    ``build_round_fn`` product the engine and the dry-run StepPlans compile)
+    in a ``lax.scan`` over a *static* number of rounds R — batches arrive
+    round-stacked ``[R, H, K, B, ...]`` and the scan slices one round per
+    iteration;
+  * per-round metrics accumulate into the scan's stacked outputs — a
+    preallocated ``[R, H]`` loss buffer (plus an optional ``[R]`` eval-loss
+    buffer) that the host drains ONCE per superstep
+    (:func:`repro.engine.driver.run_rounds`), not once per round;
+  * the round counter already lives in :class:`repro.engine.TrainState`, so
+    it advances on device inside the scan carry and checkpoints/resume see
+    the true round index;
+  * eval rides inside the program: when ``eval_loss_fn`` is given and eval
+    batches ``[R, B, ...]`` are passed, the loss of the freshly-synced outer
+    params is computed after every round's sync, inside the same dispatch;
+  * the single-round program is the **degenerate R=1 case**: at R == 1 the
+    builder emits the round function directly (no scan), exactly mirroring
+    how the DP baseline is the degenerate K=1/H=1 DiLoCo config. This is
+    what keeps R a pure scheduling knob — every R that divides the run
+    replays the identical arithmetic, bit for bit.
+
+Eval/checkpoint cadence is handled by *choosing* R, not by branching inside
+the program: :func:`effective_rounds_per_dispatch` clamps the requested R to
+a common divisor of the remaining rounds and the checkpoint interval, so
+superstep boundaries always land on cadence boundaries.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Callable
+
+import jax
+
+PyTree = Any
+
+
+def build_superstep_fn(round_fn: Callable,
+                       eval_loss_fn: Callable | None = None) -> Callable:
+    """Wrap a round function into the R-rounds-per-dispatch executor.
+
+    ``round_fn(state, round_batches) -> (state, {"loss": f32[H], "psi": ...})``
+    is the product of :func:`repro.engine.build_round_fn`. The returned
+    ``superstep_fn(state, batches, eval_batches=None)`` takes round-stacked
+    batches (leaves ``[R, H, K, B, ...]``) and returns
+
+    * ``state`` after R rounds (round counter advanced by R on device);
+    * ``{"loss": f32[R, H]}`` — and ``"eval_loss": f32[R]`` when
+      ``eval_loss_fn`` was supplied and ``eval_batches`` (leaves
+      ``[R, B, ...]``) are passed: the post-sync outer params of round i are
+      evaluated inside the same program;
+    * at R == 1 additionally ``"psi"``, the round's pseudogradient tree —
+      the degenerate case *is* the single-round program (direct call, no
+      scan), so its full metrics survive. For R > 1 psi is not stacked
+      (R parameter-sized trees would dwarf the state).
+
+    R is read from the static leading batch dim at trace time; each distinct
+    (R, with/without eval) pair is one trace of the same jitted executor.
+    """
+
+    def superstep_fn(state: PyTree, batches: PyTree,
+                     eval_batches: PyTree | None = None) -> tuple[PyTree, dict]:
+        R = jax.tree.leaves(batches)[0].shape[0]
+        do_eval = eval_loss_fn is not None and eval_batches is not None
+
+        if R == 1:  # degenerate case: exactly the single-round program
+            state, info = round_fn(state, jax.tree.map(lambda b: b[0], batches))
+            out = {"loss": info["loss"][None], "psi": info["psi"]}
+            if do_eval:
+                out["eval_loss"] = eval_loss_fn(
+                    state["outer_params"],
+                    jax.tree.map(lambda e: e[0], eval_batches))[None]
+            return state, out
+
+        def body(carry: PyTree, xs) -> tuple[PyTree, dict]:
+            rb, eb = xs
+            carry, info = round_fn(carry, rb)
+            ys = {"loss": info["loss"]}
+            if do_eval:
+                ys["eval_loss"] = eval_loss_fn(carry["outer_params"], eb)
+            return carry, ys
+
+        xs = (batches, eval_batches if do_eval else None)
+        state, ys = jax.lax.scan(body, state, xs)
+        return state, ys
+
+    return superstep_fn
+
+
+def effective_rounds_per_dispatch(requested: int, rounds_to_run: int,
+                                  checkpoint_every: int = 0,
+                                  start: int = 0) -> int:
+    """Clamp a requested superstep length to the run's cadences.
+
+    The superstep must divide (a) the number of rounds left to run — the run
+    is a whole number of equally-sized dispatches, so one trace serves all of
+    them — and (b) when checkpointing is on, the checkpoint interval AND the
+    ``start`` round of a resumed run, so every cadence boundary (absolute
+    round count divisible by the interval) coincides with a superstep
+    boundary ``start + k*R`` and state is on host exactly there. The clamp
+    is the gcd of the requested R with each constraint — a common divisor,
+    not necessarily the *largest* divisor <= requested (requesting R=4 on a
+    6-round run yields 2, not 3; gcd keeps the rule deterministic and
+    order-free). R = 1 recovers the classic one-dispatch-per-round driver.
+    """
+    r = max(1, int(requested))
+    if rounds_to_run > 0:
+        r = math.gcd(r, rounds_to_run)
+    if checkpoint_every:
+        r = math.gcd(r, checkpoint_every)
+        if start:  # resumed off-cadence: boundaries must still hit it
+            r = math.gcd(r, start)
+    return max(1, r)

@@ -146,18 +146,20 @@ def diloco_state_shardings(mesh: Mesh, state: PyTree, tensor_parallel: bool = Tr
 
 
 def batch_shardings(mesh: Mesh, batch: PyTree, k_stacked: bool = True,
-                    leading_scan: bool = False) -> PyTree:
-    """``leading_scan=True`` shards [H, K, B, ...] round-stacked batches (the
-    engine's fused round input): the scanned H axis stays unsharded, K and B
-    follow the per-step rule."""
+                    leading_scan: int = 0) -> PyTree:
+    """``leading_scan`` counts leading scanned axes left unsharded: 1 for
+    [H, K, B, ...] round-stacked batches (the engine's fused round input),
+    2 for the superstep's [R, H, K, B, ...]; K and B follow the per-step
+    rule either way. (``True`` is accepted as 1 for the older bool form.)"""
     sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    n_lead = int(leading_scan)
 
     def spec(path, x):
         nd = len(x.shape)
         shape = x.shape
         lead: tuple = ()
-        if leading_scan:
-            lead, shape, nd = (None,), x.shape[1:], nd - 1
+        if n_lead:
+            lead, shape, nd = (None,) * n_lead, x.shape[n_lead:], nd - n_lead
         if k_stacked:
             pod = "pod" if ("pod" in sizes and _div(shape[0], sizes["pod"])) else None
             data = "data" if (nd > 1 and _div(shape[1], sizes.get("data", 0))) else None

@@ -2,9 +2,11 @@
 
   train_4k     -> DiLoCo ``train_step`` (inner step, every-step cost),
                   ``sync_step`` (outer step, every-H cost — the cross-pod
-                  collective the paper optimizes), and ``round_step`` (the
-                  engine's fused H-steps+sync round executor, donated — the
-                  program production training actually runs)
+                  collective the paper optimizes), ``round_step`` (the
+                  engine's fused H-steps+sync round executor, donated), and
+                  ``superstep`` (R rounds per dispatch — the scan-over-R
+                  program production training actually runs; it threads the
+                  round-step shardings with one extra unsharded scan axis)
   prefill_32k  -> ``prefill_step`` (full-seq forward, last-position logits)
   decode_32k / long_500k -> ``serve_step`` (1 token vs seq_len KV/SSM cache)
 
@@ -140,7 +142,8 @@ def activation_rules(mesh: Mesh, batch_per_worker: int, cfg: ModelConfig,
 
 
 def build_train_plans(arch_cfg: ModelConfig, shape: str, mesh: Mesh,
-                      dcfg: DiLoCoConfig | None = None) -> list[StepPlan]:
+                      dcfg: DiLoCoConfig | None = None,
+                      rounds_per_dispatch: int = 4) -> list[StepPlan]:
     spec = INPUT_SHAPES[shape]
     assert spec.kind == "train"
     n_pods = dict(zip(mesh.axis_names, mesh.devices.shape)).get("pod", 1)
@@ -182,7 +185,7 @@ def build_train_plans(arch_cfg: ModelConfig, shape: str, mesh: Mesh,
         return new_state
 
     # the fused round executor — same builder the TrainEngine compiles
-    from repro.engine import build_round_fn
+    from repro.engine import build_round_fn, build_superstep_fn
 
     round_fn = build_round_fn(model, dcfg, opt, masks=None, rules=rules,
                               spmd_axis=spmd_axis, outer=outer)
@@ -190,7 +193,16 @@ def build_train_plans(arch_cfg: ModelConfig, shape: str, mesh: Mesh,
     round_batch_abs = jax.tree.map(
         lambda b: jax.ShapeDtypeStruct((H, *b.shape), b.dtype), batch_abs)
     round_batch_sh = batch_shardings(mesh, round_batch_abs, k_stacked=True,
-                                     leading_scan=True)
+                                     leading_scan=1)
+
+    # the superstep executor: scan-over-R of the same round function, with
+    # the round-step shardings threaded under one extra unsharded scan axis
+    R = max(1, rounds_per_dispatch)
+    superstep_fn = build_superstep_fn(round_fn)
+    super_batch_abs = jax.tree.map(
+        lambda b: jax.ShapeDtypeStruct((R, *b.shape), b.dtype), round_batch_abs)
+    super_batch_sh = batch_shardings(mesh, super_batch_abs, k_stacked=True,
+                                     leading_scan=2)
 
     plans = [
         StepPlan(
@@ -219,6 +231,17 @@ def build_train_plans(arch_cfg: ModelConfig, shape: str, mesh: Mesh,
             donate=(0,),
             meta={"kind": "round", "tokens_per_step": spec.global_batch * S * H,
                   "amortize": 1, "cfg": cfg, "dcfg": dcfg},
+        ),
+        StepPlan(
+            name="superstep",
+            fn=superstep_fn,
+            args=(state_abs, super_batch_abs),
+            in_shardings=(state_sh, super_batch_sh),
+            donate=(0,),
+            meta={"kind": "superstep",
+                  "tokens_per_step": spec.global_batch * S * H * R,
+                  "amortize": 1, "cfg": cfg, "dcfg": dcfg,
+                  "rounds_per_dispatch": R},
         ),
     ]
     return plans

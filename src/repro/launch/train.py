@@ -1,12 +1,16 @@
 """End-to-end training driver on the unified TrainEngine.
 
-The driver is a thin scheduler around :class:`repro.engine.TrainEngine`: the
-entire communication round (H inner steps + outer sync, streaming segments
-included) is ONE donated, jitted function that stays on device; the Python
-layer only generates batches, drains metrics asynchronously (the paper's
-smoothed-EMA eval estimate + CSV logging ride under the accelerator's
-compute via :func:`repro.engine.run_rounds`), and checkpoints. The DP
-baseline is the same engine with the degenerate (K=1, H=1, no-outer) config.
+The driver is a thin scheduler around :class:`repro.engine.TrainEngine`:
+``--rounds-per-dispatch R`` communication rounds (each H inner steps + the
+outer pseudogradient-chain sync, streaming segments included) run as ONE
+donated, jitted superstep that stays on device — per-round train/eval
+losses come back in [R, H]/[R] device buffers and the Python layer only
+generates batches, drains metrics asynchronously (the paper's smoothed-EMA
+eval estimate + CSV logging ride under the accelerator's compute via
+:func:`repro.engine.run_rounds`), and checkpoints. R is auto-clamped to
+divide the run length and the checkpoint cadence; every dividing R replays
+the identical arithmetic bit for bit. The DP baseline is the same engine
+with the degenerate (K=1, H=1, no-outer) config.
 
 Runs DiLoCo/MuLoCo on the synthetic LM data stream. On CPU this trains
 reduced configs (examples/); on a TPU cluster the same driver runs the
@@ -30,7 +34,7 @@ from repro.checkpoint import load_checkpoint, save_checkpoint
 from repro.configs import get_config, reduce_config
 from repro.core.compression import CompressionConfig
 from repro.core.diloco import DiLoCoConfig
-from repro.data import DataConfig, MarkovStream, batches_for_round
+from repro.data import DataConfig, MarkovStream, batches_for_round, batches_for_span
 from repro.engine import TrainEngine, run_rounds
 from repro.models import build_model
 from repro.optim import INNER_OPTIMIZERS, OUTER_OPTIMIZERS, OptimizerConfig
@@ -115,9 +119,10 @@ def train(args) -> dict:
         batch_per_worker=args.batch_per_worker, n_workers=1, seed=args.seed + 10_000,
     ))
 
-    def eval_fn(st, r):
-        b = jax.tree.map(lambda x: x[0], eval_data.batch(r))  # single eval shard
-        return engine.eval_loss(st["outer_params"], b)
+    def eval_batches_for(r0, n):
+        # [n, B, S] held-out batches, one per round; the engine evaluates the
+        # post-sync outer params inside the superstep program itself
+        return jax.tree.map(lambda x: x[:, 0], eval_data.batch_stack(r0, n))
 
     os.makedirs(args.out, exist_ok=True)
     csv_path = os.path.join(args.out, "metrics.csv")
@@ -143,7 +148,11 @@ def train(args) -> dict:
 
         state, _history = run_rounds(
             engine, state, lambda r: batches_for_round(data, r, dcfg.sync_interval),
-            args.rounds, start=start_round, eval_fn=eval_fn,
+            args.rounds, start=start_round,
+            rounds_per_dispatch=args.rounds_per_dispatch,
+            span_batches_for=lambda r0, n: batches_for_span(
+                data, r0, dcfg.sync_interval, n),
+            eval_batches_for=eval_batches_for,
             on_round=on_round,
             on_state=on_state if args.checkpoint_every else None,
             on_state_every=args.checkpoint_every,
@@ -168,6 +177,10 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--workers", type=int, default=4)
     ap.add_argument("--sync-interval", type=int, default=6)
     ap.add_argument("--rounds", type=int, default=20)
+    ap.add_argument("--rounds-per-dispatch", type=int, default=1,
+                    help="rounds per device dispatch (superstep length R); "
+                         "auto-clamped to divide the run and the checkpoint "
+                         "cadence — any dividing R is bitwise-identical")
     ap.add_argument("--lr", type=float, default=2e-2)
     ap.add_argument("--weight-decay", type=float, default=1e-4)
     ap.add_argument("--schedule", default="cosine", choices=["cosine", "constant"])

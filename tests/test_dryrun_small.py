@@ -41,7 +41,7 @@ for arch, shape in [("smollm-135m", "train_4k"), ("mamba2-370m", "decode_32k"),
                         donate_argnums=plan.donate).lower(*plan.args).compile()
         coll = collective_bytes_corrected(c.as_text())
         rec = {"ok": True, "collective_total": coll["total"]}
-        if plan.name == "round_step":
+        if plan.name in ("round_step", "superstep"):
             from repro.launch.dryrun import round_step_donation_report
             rec["donation"] = round_step_donation_report(
                 plan.args[0], c.as_text(), c.memory_analysis(),
@@ -58,17 +58,19 @@ def test_dryrun_on_8_device_world():
                          text=True, env=env, cwd=os.path.dirname(os.path.dirname(__file__)))
     assert res.returncode == 0, res.stderr[-3000:]
     out = json.loads(res.stdout.strip().splitlines()[-1])
-    assert len(out) == 5  # train has train+sync+round plans
+    assert len(out) == 6  # train has train+sync+round+superstep plans
     # the DiLoCo sync step must exist and every plan lowered
     assert all(v["ok"] for v in out.values())
     # the train step moves bytes over the wire (FSDP gathers)
     assert out["smollm-135m/train_4k/train_step"]["collective_total"] > 0
-    # the engine's fused round plan lowers on the same mesh and communicates
-    round_rec = out["smollm-135m/train_4k/round_step"]
-    assert round_rec["collective_total"] > 0
-    # donated round under GSPMD (ROADMAP open item): the outer-transform
-    # state buffers are among the aliased outputs, and the per-chip aliased
-    # bytes cover at least the outer params+opt shard
-    donation = round_rec["donation"]
-    assert donation["outer_opt_bytes_global"] > 0
-    assert donation["outer_state_aliased"], donation
+    # the engine's fused round + scan-over-R superstep plans lower on the
+    # same mesh and communicate
+    for plan in ("round_step", "superstep"):
+        rec = out[f"smollm-135m/train_4k/{plan}"]
+        assert rec["collective_total"] > 0
+        # donated under GSPMD (ROADMAP open item): the outer-transform
+        # state buffers are among the aliased outputs, and the per-chip
+        # aliased bytes cover at least the outer params+opt shard
+        donation = rec["donation"]
+        assert donation["outer_opt_bytes_global"] > 0
+        assert donation["outer_state_aliased"], donation

@@ -1,5 +1,6 @@
-"""TrainEngine invariants: DP degeneracy, streaming parity, donation,
-no-retrace, TrainState pytree/mapping behaviour, checkpoint roundtrip."""
+"""TrainEngine invariants: DP degeneracy, superstep bit-parity, streaming
+parity, donation, no-retrace, TrainState pytree/mapping behaviour,
+checkpoint roundtrip."""
 import os
 
 import jax
@@ -9,8 +10,14 @@ import pytest
 
 from repro.checkpoint import load_checkpoint, save_checkpoint
 from repro.core import DiLoCoConfig, diloco_round, dp_config, dp_init, dp_step, make_optimizer
-from repro.data import DataConfig, MarkovStream, batches_for_round
-from repro.engine import TrainEngine, TrainState, dp_engine, run_rounds
+from repro.data import DataConfig, MarkovStream, batches_for_round, batches_for_span
+from repro.engine import (
+    TrainEngine,
+    TrainState,
+    dp_engine,
+    effective_rounds_per_dispatch,
+    run_rounds,
+)
 from repro.models import ModelConfig, build_model
 from repro.optim import OptimizerConfig
 
@@ -53,6 +60,151 @@ def test_dp_config_shape():
     dcfg = dp_config("muon")
     assert dcfg.n_workers == 1 and dcfg.sync_interval == 1
     assert not dcfg.outer_enabled and dcfg.is_muloco
+
+
+# ---------------------------------------------------------------------------
+# Superstep: R rounds per dispatch == R sequential rounds, bit for bit
+# ---------------------------------------------------------------------------
+
+
+def _fresh(inner="muon", H=4, K=2):
+    model = build_model(CFG)
+    dcfg = DiLoCoConfig(n_workers=K, sync_interval=H, inner_name=inner)
+    engine = TrainEngine(model, dcfg, ICFG)
+    return engine, engine.init(jax.random.PRNGKey(0))
+
+
+@pytest.mark.parametrize("inner", ["adamw", "muon"])
+def test_superstep_matches_sequential_rounds_bitwise(inner):
+    """One R=4 dispatch replays 4 sequential engine.step rounds exactly."""
+    H, R = 4, 4
+    e1, s1 = _fresh(inner, H)
+    losses = []
+    for r in range(R):
+        s1, info = e1.step(s1, batches_for_round(_stream(2), r, H))
+        losses.append(np.asarray(info["loss"]))
+
+    e2, s2 = _fresh(inner, H)
+    s2, out = e2.superstep(s2, batches_for_span(_stream(2), 0, H, R))
+    assert out["loss"].shape == (R, H)
+    np.testing.assert_array_equal(np.asarray(out["loss"]), np.stack(losses))
+    np.testing.assert_array_equal(
+        np.asarray(s2["outer_params"]["layers"]["mlp"]["w_in"]),
+        np.asarray(s1["outer_params"]["layers"]["mlp"]["w_in"]))
+    assert int(s2["round"]) == R  # counter advanced on device, inside the scan
+
+
+def test_superstep_folded_eval_matches_separate_jit():
+    """The [R] eval buffer equals per-round engine.eval_loss on the synced
+    params — eval rides inside the superstep program without changing it."""
+    H, R = 4, 3
+    ev_stream = MarkovStream(DataConfig(vocab=CFG.vocab, seq_len=16,
+                                        batch_per_worker=2, n_workers=1, seed=99))
+    e1, s1 = _fresh("muon", H)
+    separate = []
+    for r in range(R):
+        s1, _ = e1.step(s1, batches_for_round(_stream(2), r, H))
+        separate.append(float(e1.eval_loss(
+            s1["outer_params"], jax.tree.map(lambda x: x[0], ev_stream.batch(r)))))
+
+    e2, s2 = _fresh("muon", H)
+    eb = jax.tree.map(lambda x: x[:, 0], ev_stream.batch_stack(0, R))
+    s2, out = e2.superstep(s2, batches_for_span(_stream(2), 0, H, R), eb)
+    assert out["loss"].shape == (R, H) and out["eval_loss"].shape == (R,)
+    np.testing.assert_array_equal(np.asarray(out["eval_loss"]),
+                                  np.asarray(separate, np.float32))
+
+
+def test_batches_for_span_matches_stacked_rounds():
+    stream = _stream(3, bs=2, s=8)
+    span = batches_for_span(stream, 2, 4, 3)
+    for i in range(3):
+        per_round = batches_for_round(_stream(3, bs=2, s=8), 2 + i, 4)
+        for key in ("tokens", "labels"):
+            np.testing.assert_array_equal(np.asarray(span[key][i]),
+                                          np.asarray(per_round[key]))
+
+
+def test_effective_rounds_per_dispatch_clamps():
+    assert effective_rounds_per_dispatch(1, 100) == 1
+    assert effective_rounds_per_dispatch(4, 8) == 4
+    assert effective_rounds_per_dispatch(4, 6) == 2          # divides the run
+    assert effective_rounds_per_dispatch(4, 8, 6) == 2       # and the cadence
+    assert effective_rounds_per_dispatch(5, 25, 10) == 5
+    assert effective_rounds_per_dispatch(3, 8, 4) == 1       # nothing fits
+    assert effective_rounds_per_dispatch(0, 8) == 1
+    # resumed off-cadence: boundaries start + k*R must still hit every
+    # absolute cadence point (rounds 8, 16 with start=6 -> R=2, not 4)
+    assert effective_rounds_per_dispatch(4, 16, 8, start=6) == 2
+    assert effective_rounds_per_dispatch(8, 16, 8, start=4) == 4
+    assert effective_rounds_per_dispatch(4, 16, 8, start=8) == 4  # aligned start
+    assert effective_rounds_per_dispatch(4, 16, 8) == 4           # no resume
+
+
+def test_run_rounds_checkpoints_after_offset_resume():
+    """A resume whose start round is off the checkpoint cadence must still
+    checkpoint at every absolute cadence point (regression: the superstep
+    boundary condition used to skip them all)."""
+    engine, state = _fresh("adamw", H=2)
+    stream = _stream(2)
+    saves = []
+    run_rounds(
+        engine, state, lambda r: batches_for_round(stream, r, 2), 10,
+        start=2, rounds_per_dispatch=4,
+        span_batches_for=lambda r0, n: batches_for_span(stream, r0, 2, n),
+        on_state=lambda r, st: saves.append(r),
+        on_state_every=4)
+    # cadence points after start=2: rounds-completed 4 and 8 -> r = 3, 7
+    assert saves == [3, 7]
+
+
+def test_run_rounds_superstep_history_matches_r1():
+    """run_rounds at R=2 emits the identical per-round records as R=1."""
+    histories = {}
+    for R in (1, 2):
+        engine, state = _fresh("adamw", H=2)
+        stream = _stream(2)
+        _, histories[R] = run_rounds(
+            engine, state, lambda r: batches_for_round(stream, r, 2), 4,
+            rounds_per_dispatch=R,
+            span_batches_for=lambda r0, n: batches_for_span(stream, r0, 2, n))
+    assert [h["round"] for h in histories[2]] == [0, 1, 2, 3]
+    for a, b in zip(histories[1], histories[2]):
+        assert a == b  # floats drained from the same device arithmetic
+
+
+def test_run_rounds_superstep_checkpoint_cadence():
+    """on_state fires at every cadence boundary; requested R=4 is clamped to
+    divide checkpoint_every=2, and the CSV (on_round) never lags a save."""
+    engine, state = _fresh("adamw", H=2)
+    stream = _stream(2)
+    saves, rounds_seen = [], []
+    run_rounds(
+        engine, state, lambda r: batches_for_round(stream, r, 2), 8,
+        rounds_per_dispatch=4,
+        span_batches_for=lambda r0, n: batches_for_span(stream, r0, 2, n),
+        on_round=lambda rec: rounds_seen.append(rec["round"]),
+        on_state=lambda r, st: saves.append((r, len(rounds_seen))),
+        on_state_every=2)
+    assert [r for r, _ in saves] == [1, 3, 5, 7]
+    # at each save, all rounds up to it were already drained to on_round
+    assert all(n_drained >= r + 1 for r, n_drained in saves)
+    assert rounds_seen == list(range(8))
+
+
+def test_run_rounds_host_eval_fn_pins_r1():
+    """The legacy host-side eval_fn needs per-round state, so a requested
+    R>1 falls back to single-round dispatch — and still evaluates every
+    round."""
+    engine, state = _fresh("adamw", H=2)
+    stream = _stream(2)
+    _, history = run_rounds(
+        engine, state, lambda r: batches_for_round(stream, r, 2), 4,
+        rounds_per_dispatch=4,
+        eval_fn=lambda st, r: engine.eval_loss(
+            st["outer_params"], jax.tree.map(lambda x: x[0], stream.batch(r))))
+    assert [h["round"] for h in history] == [0, 1, 2, 3]
+    assert all(np.isfinite(h["eval_loss"]) for h in history)
 
 
 # ---------------------------------------------------------------------------
