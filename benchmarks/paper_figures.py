@@ -1,19 +1,17 @@
 """One benchmark per paper table/figure. Each returns CSV-able rows."""
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import (
-    BPW,
     ROUNDS,
     collect_pseudogradients,
     dp_baseline,
     train_diloco,
 )
 from repro.core import CompressionConfig, DiLoCoConfig
-from repro.core.analysis import frobenius_norms, interference_gap, per_matrix_cosines
+from repro.core.analysis import interference_gap, per_matrix_cosines
 
 
 def bench_fig6a_worker_scaling() -> list[dict]:

@@ -30,6 +30,7 @@ def all_benchmarks():
         "prop42": pf.bench_prop42_identity,
         "train_throughput": sy.bench_train_throughput,
         "optimizer_bench": sy.bench_optimizer_sweep,
+        "compression_bench": sy.bench_compression_sweep,
         "tab10": sy.bench_tab10_wallclock,
         "fig16": sy.bench_fig16_utilization,
         "tab2": sy.bench_tab2_scaling_forms,

@@ -1,12 +1,16 @@
 """Communication-compression sweep (paper §6.3): quantization bits x mode x
-error feedback, plus the wire-byte accounting used for the bandwidth model.
+error feedback, with both wire-byte accountings — *measured* (the actual
+wire buffers the engine's collective moves: packed codes + row metadata +
+indices; also reported per round by the engine as ``comm_bytes``) and the
+closed-form *model* used by the bandwidth estimates.
 
     PYTHONPATH=src python examples/compression_sweep.py
 """
 import jax
+import jax.numpy as jnp
 
 from repro.core import CompressionConfig, DiLoCoConfig
-from repro.core.collectives import collective_bytes_tree
+from repro.core.collectives import collective_bytes_tree, measured_sync_bytes
 from repro.data import DataConfig, MarkovStream, batches_for_round
 from repro.engine import TrainEngine
 from repro.models import ModelConfig, build_model
@@ -17,7 +21,7 @@ cfg = ModelConfig(arch_type="dense", n_layers=2, d_model=48, n_heads=4, n_kv_hea
 model = build_model(cfg)
 K, H, ROUNDS = 2, 4, 6
 
-def run(comp: CompressionConfig) -> float:
+def run(comp: CompressionConfig) -> tuple[float, float]:
     dcfg = DiLoCoConfig(n_workers=K, sync_interval=H, inner_name="muon", compression=comp)
     engine = TrainEngine(model, dcfg, OptimizerConfig(lr=2e-2))
     state = engine.init(jax.random.PRNGKey(0))
@@ -25,11 +29,12 @@ def run(comp: CompressionConfig) -> float:
                                    n_workers=K, seed=1))
     for r in range(ROUNDS):
         state, info = engine.step(state, batches_for_round(data, r, H))
-    return float(info["loss"][-1])
+    # the engine reports each round's measured wire traffic
+    return float(info["loss"][-1]), float(info["comm_bytes"])
 
 
 params = build_model(cfg).init(jax.random.PRNGKey(0))
-print(f"{'config':38s} {'loss':>8s} {'wire bytes/sync':>16s}")
+print(f"{'config':38s} {'loss':>8s} {'measured B/sync':>16s} {'modeled B/sync':>15s}")
 for comp in [
     CompressionConfig(kind="none"),
     CompressionConfig(kind="quant", bits=8, quant_mode="linear"),
@@ -42,6 +47,9 @@ for comp in [
     label = f"{comp.kind}/{comp.quant_mode if comp.kind == 'quant' else ''}" \
             f"{comp.bits if comp.kind == 'quant' else comp.topk_frac}" \
             f"{'/rw' if comp.rowwise else ''}{'/EF' if comp.error_feedback else ''}"
-    loss = run(comp)
-    wire = collective_bytes_tree(params, comp, K)["bytes_per_sync_per_worker"]
-    print(f"{label:38s} {loss:8.4f} {wire:16,d}")
+    loss, measured = run(comp)
+    # engine metric == direct accounting (the metric travels as f32, so
+    # compare at f32 precision — exact below ~16.7 MB/sync)
+    assert measured == float(jnp.float32(measured_sync_bytes(params, comp, K)))
+    modeled = collective_bytes_tree(params, comp, K)["bytes_per_sync_per_worker"]
+    print(f"{label:38s} {loss:8.4f} {measured:16,.0f} {modeled:15,d}")

@@ -8,11 +8,11 @@ import sys
 
 sys.path.insert(0, ".")  # for benchmarks.*
 
-import jax.numpy as jnp
-import numpy as np
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
 
-from benchmarks.common import collect_pseudogradients
-from repro.core.analysis import (
+from benchmarks.common import collect_pseudogradients  # noqa: E402
+from repro.core.analysis import (  # noqa: E402
     interference_gap,
     per_matrix_cosines,
     prop42_nuclear_identity,

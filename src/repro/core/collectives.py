@@ -8,13 +8,23 @@ quantize/dequantize ops total, avoiding the per-hop error accumulation of a
 ring all-reduce. Top-k instead uses an all-gather + local reduce (one
 compression).
 
-Workers live on a stacked leading K axis (sharded over the `pod` mesh axis in
-production), so ``mean over axis 0`` lowers to the cross-pod all-reduce; the
-quantization placement here reproduces the *values* the modeled collective
-would produce, which is what training dynamics (and our experiments) see.
+The reduce here is **wire-format-faithful**: it consumes the real wire
+buffers the worker stage emitted (:mod:`repro.core.wire` — bit-packed codes
++ row metadata, or (index, value) pairs), decodes them (D1), reduces in
+fp32, and for the quantized a2a_rs_ag collective re-encodes/decodes the
+reduced shard (Q2/D2) through another wire buffer. Workers live on a stacked
+leading K axis (sharded over the `pod` mesh axis in production), so ``mean
+over axis 0`` lowers to the cross-pod all-reduce.
 
-``collective_bytes_tree`` accounts wire bytes per method for the wallclock
-model (Tab. 10 / Fig. 16).
+Byte accounting comes in two flavors:
+
+* :func:`measured_sync_bytes` — **measured**: read off the actual wire
+  buffer shapes/dtypes (codes + metadata + indices, packing padding and
+  all) via ``jax.eval_shape`` on the real encode path; this is what the
+  engine threads into the per-round ``comm_bytes`` metric;
+* :func:`collective_bytes_tree` — the original closed-form **model**
+  (Tab. 10 / Fig. 16), kept for the wallclock estimates where no concrete
+  parameter tree exists.
 """
 from __future__ import annotations
 
@@ -22,46 +32,141 @@ from typing import Any
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-from repro.core.compression import CompressionConfig, compress_tensor
+from repro.core.compression import CompressionConfig
+from repro.core.wire import (
+    decode_leaf,
+    encode_leaf,
+    is_wire,
+    wire_tree_bytes,
+)
 
 PyTree = Any
 
 
-def reduce_pseudogradients(worker_deltas: PyTree, cfg: CompressionConfig) -> PyTree:
-    """Average compressed per-worker deltas [K, ...] into a pseudogradient.
+def reduce_pseudogradients(worker_comm: PyTree, cfg: CompressionConfig) -> PyTree:
+    """Reduce per-worker wire buffers into the pseudogradient Psi.
 
-    ``worker_deltas`` leaves are the *already worker-side compressed* deltas
-    (Q1 / top-k applied, with or without EF, by the caller). For the
-    'a2a_rs_ag' quantized collective we apply the second quantization (Q2)
-    to the reduced value before the all-gather.
+    ``worker_comm`` leaves are the worker stage's output: dense [K, ...]
+    deltas for ``kind='none'`` (bit-exact legacy path), wire packets
+    otherwise (Q1 / top-k applied, with or without EF, by the caller). For
+    the 'a2a_rs_ag' quantized collective the reduced shard is re-encoded
+    through a second wire buffer (Q2) and decoded (D2) before the
+    all-gather, exactly the paper's two quantization points.
     """
+    if cfg.kind == "none":
+        return jax.tree.map(
+            lambda d: jnp.mean(d.astype(jnp.float32), axis=0), worker_comm)
 
-    def per_leaf(d):
-        psi = jnp.mean(d.astype(jnp.float32), axis=0)
+    def per_leaf(w):
+        vals = decode_leaf(w, impl=cfg.wire_impl)  # D1: [K, ...] f32
+        psi = jnp.mean(vals, axis=0)
         if cfg.kind == "quant" and cfg.collective == "a2a_rs_ag":
-            psi = compress_tensor(psi, cfg)  # Q2: re-quantize reduced shard
+            w2 = encode_leaf(psi, cfg, batch_ndim=0)  # Q2: re-quantize shard
+            psi = decode_leaf(w2, impl=cfg.wire_impl)  # D2: after all-gather
         return psi
 
-    return jax.tree.map(per_leaf, worker_deltas)
+    return jax.tree.map(per_leaf, worker_comm, is_leaf=is_wire)
 
 
 def reduce_mean(cfg: CompressionConfig):
     """The pseudogradient all-reduce as a stateless transform stage:
-    [K, ...]-stacked (compressed) deltas -> Psi (mean over K, + Q2 for the
-    a2a_rs_ag quantized collective)."""
+    [K, ...]-stacked wire buffers (or dense deltas for kind='none') -> Psi
+    (mean over K, + Q2/D2 for the a2a_rs_ag quantized collective)."""
     from repro.optim.transform import stateless
 
     return stateless(lambda comm, _params: reduce_pseudogradients(comm, cfg))
 
 
+# ---------------------------------------------------------------------------
+# Byte accounting
+# ---------------------------------------------------------------------------
+
+
+def _leaf_sync_bytes(leaf, cfg: CompressionConfig, n_workers: int) -> float:
+    """Measured per-sync wire bytes *per worker* for one parameter leaf.
+
+    Buffer sizes come from ``jax.eval_shape`` over the real encode path, so
+    codes, row metadata, indices, and bit-packing padding are all counted
+    exactly as allocated. Phases per collective:
+
+    * dense (kind='none'):  fp32 reduce-scatter + all-gather = 2 full trees;
+    * quant 'a2a_rs_ag':    the worker's Q1 buffer out + the Q2 buffer in;
+    * quant/top-k 'gather': every worker receives all K workers' buffers
+      (all-gather bandwidth grows with K — paper §2).
+    """
+    K = n_workers
+    shape, dtype = tuple(leaf.shape), jnp.dtype(leaf.dtype)
+    if cfg.kind == "none":
+        return 2.0 * float(np.prod(shape)) * 4  # fp32 on the wire
+    stacked = jax.ShapeDtypeStruct((K, *shape), jnp.float32)
+    w1 = jax.eval_shape(
+        lambda x: encode_leaf(x, cfg, batch_ndim=1, impl="jnp"), stacked)
+    q1_per_worker = wire_tree_bytes(w1) / K
+    if cfg.kind == "quant" and cfg.collective == "a2a_rs_ag":
+        w2 = jax.eval_shape(
+            lambda x: encode_leaf(x, cfg, batch_ndim=0, impl="jnp"),
+            jax.ShapeDtypeStruct(shape, jnp.float32))
+        return q1_per_worker + wire_tree_bytes(w2)
+    return q1_per_worker * K  # gather: receive every worker's buffer
+
+
+def measured_sync_bytes(params: PyTree, cfg: CompressionConfig,
+                        n_workers: int, mask: PyTree | None = None,
+                        outer_enabled: bool = True) -> int:
+    """Measured wire bytes per outer sync **per worker**, from the actual
+    buffers the collective moves.
+
+    ``params`` may be concrete or abstract (only shapes/dtypes are read).
+    With a streaming partition ``mask`` (concrete {0,1} arrays), each leaf's
+    bytes scale by the fraction of rows the partition owns — the subset a
+    real streaming collective would ship (our simulation encodes full-size
+    buffers with zeros outside the partition; see docs/transforms.md).
+    With ``outer_enabled=False`` (the DP-degenerate config) the sync is the
+    K-way parameter average: a dense fp32 all-reduce for K > 1, nothing at
+    all for K == 1.
+    """
+    leaves = jax.tree.leaves(params)
+    mask_leaves = (jax.tree.leaves(mask) if mask is not None
+                   else [None] * len(leaves))
+    total = 0.0
+    for p, m in zip(leaves, mask_leaves):
+        frac = 1.0 if m is None else float(np.asarray(m, np.float32).mean())
+        if frac == 0.0:
+            continue
+        if not outer_enabled:
+            per_worker = (0.0 if n_workers == 1
+                          else 2.0 * float(np.prod(tuple(p.shape))) * 4)
+        else:
+            per_worker = _leaf_sync_bytes(p, cfg, n_workers)
+        total += frac * per_worker
+    return int(round(total))
+
+
+def measured_compression_ratio(params: PyTree, cfg: CompressionConfig,
+                               n_workers: int) -> float:
+    """Measured wire bytes vs the dense fp32 collective on the same tree.
+
+    Replaces ``CompressionConfig.compression_ratio()`` (the closed-form
+    model) wherever a representative parameter tree exists: the measured
+    ratio includes row metadata, index widths, packing padding, and the
+    K-scaling of the gather collective.
+    """
+    dense = measured_sync_bytes(params, CompressionConfig(kind="none"), n_workers)
+    return measured_sync_bytes(params, cfg, n_workers) / max(dense, 1)
+
+
 def collective_bytes_tree(params: PyTree, cfg: CompressionConfig, n_workers: int) -> dict:
-    """Wire bytes per outer sync under the modeled collectives (per worker).
+    """*Modeled* wire bytes per outer sync (per worker) — Tab. 10 / Fig. 16.
 
     dense ring all-reduce:   2 * P * 4 bytes (reduce-scatter + all-gather)
     quant a2a_rs + ring ag:  2 * P * bits/8
     top-k all-gather:        K * kept * (4 + 4) bytes (value + index), since
                              all-gather bandwidth grows with K (paper §2).
+
+    Kept as the closed-form estimate for parameter counts without a concrete
+    tree; prefer :func:`measured_sync_bytes` when buffers exist.
     """
     n = 0
     for leaf in jax.tree.leaves(params):

@@ -1,11 +1,19 @@
 """Pseudogradient compressors (paper §2, §6.3): top-k sparsification and
 linear / statistical quantization, each in global and row-wise variants.
 
-All compressors are *value-semantics*: they return the dequantized tensor the
-receiving end would reconstruct, plus enough metadata to account bits on the
-wire. The collective layer (``repro.core.collectives``) composes them into the
-paper's all-to-all reduce-scatter + ring all-gather model (exactly two
-quantize/dequantize ops per communication).
+The transform-stack stages at the bottom (``compress`` / ``error_feedback``)
+are **wire-format-faithful**: they emit real wire buffers
+(:mod:`repro.core.wire` — bit-packed uint8 codes + per-row metadata for
+quantization, (index, value) pairs for top-k), and the EF residual is
+computed against the actual reconstruction the receiver decodes from those
+buffers. The collective layer (``repro.core.collectives``) moves and reduces
+the buffers with exactly the paper's two quantize/dequantize points.
+
+The standalone tensor functions above them (``topk_sparsify``,
+``quantize_linear``, ``quantize_statistical``, ``ef_compress_tree``) keep
+the original *value semantics* — they return the dequantized tensor the
+receiver would reconstruct — and remain the oracles the property tests and
+the analysis helpers use.
 """
 from __future__ import annotations
 
@@ -34,9 +42,19 @@ class CompressionConfig:
     # ring all-gather (2 quantizations); 'gather' = all-gather + local
     # reduce (1 quantization, used for top-k)
     collective: str = "a2a_rs_ag"
+    # wire-buffer backend for linear quantization: 'pallas' routes encode /
+    # decode through the fused rowwise kernels (bit-identical to 'jnp' under
+    # jit); 'jnp' is used where Pallas cannot lower (multi-device GSPMD
+    # dry-runs). Statistical quantization and top-k are always jnp.
+    wire_impl: str = "pallas"
 
     def compression_ratio(self) -> float:
-        """Approximate wire-bytes ratio vs fp32 (for wallclock modeling)."""
+        """Approximate wire-bytes ratio vs fp32 — the *modeled* number.
+
+        Ignores metadata rows, index widths, and bit-packing padding; the
+        measured accounting (``collectives.measured_sync_bytes``, computed
+        from the actual wire buffers) supersedes it wherever buffers exist.
+        """
         if self.kind == "none":
             return 1.0
         if self.kind == "topk":
@@ -147,40 +165,62 @@ def ef_compress_tree(delta: PyTree, residual: PyTree, cfg: CompressionConfig) ->
         return comm.astype(d.dtype), (acc - comm)
 
     out = jax.tree.map(per_leaf, delta, residual)
-    is_tup = lambda t: isinstance(t, tuple)
+    is_tup = lambda t: isinstance(t, tuple)  # noqa: E731
     comm = jax.tree.map(lambda t: t[0], out, is_leaf=is_tup)
     new_res = jax.tree.map(lambda t: t[1], out, is_leaf=is_tup)
     return comm, new_res
 
 
 # ---------------------------------------------------------------------------
-# Transform-stack stages (the worker side of the pseudogradient chain)
+# Transform-stack stages (the worker side of the pseudogradient chain).
+# These are wire-format-faithful: they emit repro.core.wire packets, which
+# the reduce stage (collectives.reduce_mean) moves and decodes.
 # ---------------------------------------------------------------------------
 
 
 def compress(cfg: CompressionConfig):
-    """Stateless worker-side compression C(Δ_k) on [K, ...]-stacked deltas."""
+    """Stateless worker-side compression on [K, ...]-stacked deltas.
+
+    Emits the Q1 / top-k **wire buffers** (the K axis folds into the row
+    axis, so one fused kernel call encodes every worker); ``kind='none'``
+    passes the dense deltas through untouched (bit-exact legacy path).
+    """
+    from repro.core.wire import encode_tree
     from repro.optim.transform import stateless
 
-    return stateless(lambda deltas, _params: jax.vmap(
-        lambda d: compress_tree(d, cfg))(deltas))
+    if cfg.kind == "none":
+        return stateless(lambda deltas, _params: deltas)
+    return stateless(lambda deltas, _params: encode_tree(deltas, cfg, batch_ndim=1))
 
 
 def error_feedback(cfg: CompressionConfig):
     """Error-feedback compression as a stateful transform on [K, ...] deltas.
 
-    State is the K-stacked residual tree E (allocated by
-    ``diloco_init`` in the optimizer ``state_dtype``); ``update`` runs
-    :func:`ef_compress_tree` per worker and emits the communicated values.
+    State is the K-stacked residual tree E (allocated by ``diloco_init`` in
+    the optimizer ``state_dtype``). Per Alg. 2: ``E <- beta*E + delta``, the
+    **wire buffers** ``W = Enc(E)`` are emitted downstream, and the new
+    residual is ``E - Dec(W)`` — computed against the *actual reconstruction
+    the receiver decodes from the wire*, not a value-semantics stand-in.
     The streaming-sync merge (untouched partitions keep their residuals)
     lives in the outer optimizer, which sees the partition mask.
     """
+    from repro.core.wire import decode_leaf, encode_leaf
     from repro.optim.transform import Transform
 
     def init(stacked_template: PyTree) -> PyTree:
         return jax.tree.map(jnp.zeros_like, stacked_template)
 
     def update(deltas: PyTree, residuals: PyTree, params: PyTree):
-        return jax.vmap(lambda d, e: ef_compress_tree(d, e, cfg))(deltas, residuals)
+        def per_leaf(d, e):
+            acc = cfg.ef_decay * e.astype(jnp.float32) + d.astype(jnp.float32)
+            w = encode_leaf(acc, cfg, batch_ndim=1)
+            recon = decode_leaf(w, impl=cfg.wire_impl)
+            return w, acc - recon
+
+        out = jax.tree.map(per_leaf, deltas, residuals)
+        is_pair = lambda t: isinstance(t, tuple)  # noqa: E731
+        comm = jax.tree.map(lambda t: t[0], out, is_leaf=is_pair)
+        new_res = jax.tree.map(lambda t: t[1], out, is_leaf=is_pair)
+        return comm, new_res
 
     return Transform(init=init, update=update)

@@ -36,7 +36,7 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
-from repro.core.collectives import reduce_mean
+from repro.core.collectives import measured_sync_bytes, reduce_mean
 from repro.core.compression import CompressionConfig, compress, error_feedback
 from repro.core.streaming import masked_update, streaming_masks
 from repro.models.api import Model
@@ -322,12 +322,24 @@ def diloco_round(model: Model, dcfg: DiLoCoConfig, opt, state: PyTree, batches: 
     segments of H/J steps, each followed by a partition-j sync — peak
     bandwidth drops by J while the sync period per partition stays H.
 
-    Returns ``(state, {"loss": f32[H], "psi": pseudogradient_tree})`` for
-    every J; with J>1 the ``psi`` leaves are the mask-combined per-segment
-    pseudogradients (each parameter's entry comes from the segment that
-    synced it), so the signature is identical to the J==1 path.
+    Returns ``(state, {"loss": f32[H], "psi": pseudogradient_tree,
+    "comm_bytes": f32[]})`` for every J; with J>1 the ``psi`` leaves are the
+    mask-combined per-segment pseudogradients (each parameter's entry comes
+    from the segment that synced it), so the signature is identical to the
+    J==1 path. ``comm_bytes`` is the round's measured per-worker wire
+    traffic — read off the actual wire buffer shapes/dtypes the sync(s)
+    move (:func:`repro.core.collectives.measured_sync_bytes`), summed over
+    the J segment syncs (each segment ships its partition's share). The
+    metric travels as f32 (x64 is disabled), so above ~16.7 MB/round it
+    carries ~7 significant digits; exact integers come from calling
+    ``measured_sync_bytes`` directly.
     """
     H, J = dcfg.sync_interval, dcfg.streaming_partitions
+
+    def sync_bytes(mask=None) -> int:
+        return measured_sync_bytes(state["outer_params"], dcfg.compression,
+                                   dcfg.n_workers, mask=mask,
+                                   outer_enabled=dcfg.outer_enabled)
 
     def scan_inner(state, seg_batches):
         # carry only what the inner steps mutate: outer params/opt, EF
@@ -343,9 +355,11 @@ def diloco_round(model: Model, dcfg: DiLoCoConfig, opt, state: PyTree, batches: 
         return _updated(state, worker_params=wp, inner_state=ins), losses
 
     if J <= 1:
+        comm = sync_bytes()
         state, losses = scan_inner(state, batches)
         state, psi = outer_step(dcfg, state, outer=outer)
-        return state, {"loss": losses, "psi": psi}
+        return state, {"loss": losses, "psi": psi,
+                       "comm_bytes": jnp.asarray(comm, jnp.float32)}
 
     if H % J:
         raise ValueError(
@@ -358,15 +372,18 @@ def diloco_round(model: Model, dcfg: DiLoCoConfig, opt, state: PyTree, batches: 
     seg = H // J
     all_losses = []
     psi_acc = None
+    comm = 0
     for j in range(J):
         seg_batches = jax.tree.map(lambda b: b[j * seg : (j + 1) * seg], batches)
         state, losses = scan_inner(state, seg_batches)
+        comm += sync_bytes(mask=masks[j])
         state, psi_j = outer_step(dcfg, state, mask=masks[j], outer=outer)
         # psi leaves are un-stacked (no K axis): the masks broadcast directly
         masked_j = jax.tree.map(lambda m, p: m * p, masks[j], psi_j)
         psi_acc = masked_j if psi_acc is None else jax.tree.map(jnp.add, psi_acc, masked_j)
         all_losses.append(losses)
-    return state, {"loss": jnp.concatenate(all_losses), "psi": psi_acc}
+    return state, {"loss": jnp.concatenate(all_losses), "psi": psi_acc,
+                   "comm_bytes": jnp.asarray(comm, jnp.float32)}
 
 
 def make_streaming_masks(state: PyTree, dcfg: DiLoCoConfig) -> list[PyTree] | None:

@@ -113,18 +113,18 @@ def optimal_and_critical_batch(batches: Sequence[float], losses: Sequence[float]
     """B_opt = argmin L; B_crit = largest B with L(B) <= (1+tol) L(B_opt),
     log-linearly interpolated between swept batch sizes."""
     b = np.asarray(batches, float)
-    l = np.asarray(losses, float)
+    ls = np.asarray(losses, float)
     order = np.argsort(b)
-    b, l = b[order], l[order]
-    i_opt = int(np.argmin(l))
-    b_opt, l_opt = b[i_opt], l[i_opt]
+    b, ls = b[order], ls[order]
+    i_opt = int(np.argmin(ls))
+    b_opt, l_opt = b[i_opt], ls[i_opt]
     thresh = (1.0 + tol) * l_opt
     b_crit = b_opt
     for i in range(i_opt, len(b)):
-        if l[i] <= thresh:
+        if ls[i] <= thresh:
             b_crit = b[i]
         else:  # interpolate crossing in log-B
-            l0, l1 = l[i - 1], l[i]
+            l0, l1 = ls[i - 1], ls[i]
             if l1 > l0:
                 t = (thresh - l0) / (l1 - l0)
                 b_crit = float(np.exp(np.log(b[i - 1]) + t * (np.log(b[i]) - np.log(b[i - 1]))))

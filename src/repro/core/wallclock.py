@@ -29,7 +29,15 @@ class RunSpec:
     n_steps: int
     sync_interval: int = 1  # H (1 => DP: communicate every step)
     n_workers: int = 1
-    compression_ratio: float = 1.0  # wire bytes vs fp32
+    # wire bytes vs fp32. Prefer the *measured* ratio from real wire buffers
+    # (repro.core.collectives.measured_compression_ratio, which counts codes
+    # + row metadata + indices + packing padding) over the closed-form
+    # CompressionConfig.compression_ratio() model when a representative
+    # parameter tree exists.
+    compression_ratio: float = 1.0
+    # measured wire bytes per sync per worker; when > 0 it overrides the
+    # ratio model above (set it from collectives.measured_sync_bytes)
+    wire_bytes_per_sync: float = 0.0
     optimizer_overhead: float = 0.0096  # paper Tab. 9: +0.96% for Muon
 
 
@@ -41,9 +49,12 @@ def step_compute_time(spec: RunSpec, hw: HardwareModel) -> float:
 def sync_comm_time(spec: RunSpec, bandwidth_bps: float) -> float:
     """Cross-pool pseudogradient bytes per sync / available bandwidth.
 
-    Ring all-reduce volume 2*P*4 bytes, scaled by the compression ratio.
-    ``bandwidth_bps`` is bits/s (paper quotes Gbit/s links)."""
-    bytes_wire = 2.0 * spec.n_params * 4.0 * spec.compression_ratio
+    Uses the measured per-sync wire bytes when the spec carries them;
+    otherwise the modeled ring all-reduce volume 2*P*4 bytes scaled by the
+    compression ratio. ``bandwidth_bps`` is bits/s (paper quotes Gbit/s
+    links)."""
+    bytes_wire = (spec.wire_bytes_per_sync
+                  or 2.0 * spec.n_params * 4.0 * spec.compression_ratio)
     return bytes_wire * 8.0 / bandwidth_bps
 
 

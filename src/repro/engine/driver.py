@@ -13,7 +13,8 @@ immediately while the rounds execute. The driver exploits that twice over:
   in-program branching.
 * **late metric reads** — up to ``max_in_flight`` dispatches' metrics stay
   un-materialized: the host converts a superstep's ``[R, H]`` loss buffer
-  (and ``[R]`` eval-loss buffer) to floats — a blocking device read — only
+  (and ``[R]`` eval-loss / measured ``comm_bytes`` buffers) to floats — a
+  blocking device read — only
   after the next superstep has already been dispatched, so data generation +
   CSV writing + logging ride for free under the accelerator's compute. The
   seed-era loops blocked on ``float(info["loss"].mean())`` every round,
@@ -72,15 +73,17 @@ def run_rounds(engine, state, batches_for: Callable[[int], PyTree],
     H = engine.dcfg.sync_interval
 
     def drain_one() -> None:
-        r0, n, loss, ev = pending.popleft()
+        r0, n, loss, ev, cb = pending.popleft()
         losses = np.atleast_2d(np.asarray(jax.device_get(loss)))  # [n, H]
         evs = None if ev is None else np.atleast_1d(np.asarray(jax.device_get(ev)))
+        cbs = np.atleast_1d(np.asarray(jax.device_get(cb)))  # [n]
         for i in range(n):
             rec = {
                 "round": r0 + i,
                 "step": (r0 + i + 1) * H,
                 "train_loss": float(losses[i].mean()),
                 "train_loss_last": float(losses[i, -1]),
+                "comm_bytes": float(cbs[i]),
             }
             if evs is not None:
                 rec["eval_loss"] = float(evs[i])
@@ -93,7 +96,7 @@ def run_rounds(engine, state, batches_for: Callable[[int], PyTree],
             # classic path: single-round dispatch + optional host-side eval
             state, info = engine.step(state, batches_for(r0))
             ev = eval_fn(state, r0) if eval_fn is not None else None
-            loss = info["loss"]
+            loss, cb = info["loss"], info["comm_bytes"]
         else:
             if span_batches_for is not None:
                 batches = span_batches_for(r0, R)
@@ -104,11 +107,11 @@ def run_rounds(engine, state, batches_for: Callable[[int], PyTree],
             eb = eval_batches_for(r0, R) if eval_batches_for is not None else None
             state, out = engine.superstep(state, batches, eb)
             ev = out.get("eval_loss")
-            loss = out["loss"]
+            loss, cb = out["loss"], out["comm_bytes"]
         # keep only the metric buffers alive; the rest (notably the
         # parameter-sized psi tree of the R=1 path) must be freeable as soon
         # as the dispatch's consumers drop it
-        pending.append((r0, R, loss, ev))
+        pending.append((r0, R, loss, ev, cb))
         if on_state is not None and on_state_every and (r0 + R) % on_state_every == 0:
             while pending:  # CSV/metrics must never lag a saved checkpoint
                 drain_one()

@@ -187,7 +187,8 @@ class TrainEngine:
         production layout."""
         state, out = self.superstep(
             state, jax.tree.map(lambda b: b[None], batches))
-        return state, {"loss": out["loss"][0], "psi": out["psi"]}
+        return state, {"loss": out["loss"][0], "psi": out["psi"],
+                       "comm_bytes": out["comm_bytes"][0]}
 
     def superstep(self, state: TrainState, batches: PyTree,
                   eval_batches: PyTree | None = None) -> tuple[TrainState, dict]:

@@ -53,10 +53,11 @@ def build_superstep_fn(round_fn: Callable,
     batches (leaves ``[R, H, K, B, ...]``) and returns
 
     * ``state`` after R rounds (round counter advanced by R on device);
-    * ``{"loss": f32[R, H]}`` — and ``"eval_loss": f32[R]`` when
-      ``eval_loss_fn`` was supplied and ``eval_batches`` (leaves
-      ``[R, B, ...]``) are passed: the post-sync outer params of round i are
-      evaluated inside the same program;
+    * ``{"loss": f32[R, H], "comm_bytes": f32[R]}`` (``comm_bytes`` is each
+      round's measured per-worker wire traffic, stacked like the losses) —
+      and ``"eval_loss": f32[R]`` when ``eval_loss_fn`` was supplied and
+      ``eval_batches`` (leaves ``[R, B, ...]``) are passed: the post-sync
+      outer params of round i are evaluated inside the same program;
     * at R == 1 additionally ``"psi"``, the round's pseudogradient tree —
       the degenerate case *is* the single-round program (direct call, no
       scan), so its full metrics survive. For R > 1 psi is not stacked
@@ -73,7 +74,8 @@ def build_superstep_fn(round_fn: Callable,
 
         if R == 1:  # degenerate case: exactly the single-round program
             state, info = round_fn(state, jax.tree.map(lambda b: b[0], batches))
-            out = {"loss": info["loss"][None], "psi": info["psi"]}
+            out = {"loss": info["loss"][None], "psi": info["psi"],
+                   "comm_bytes": info["comm_bytes"][None]}
             if do_eval:
                 out["eval_loss"] = eval_loss_fn(
                     state["outer_params"],
@@ -83,7 +85,7 @@ def build_superstep_fn(round_fn: Callable,
         def body(carry: PyTree, xs) -> tuple[PyTree, dict]:
             rb, eb = xs
             carry, info = round_fn(carry, rb)
-            ys = {"loss": info["loss"]}
+            ys = {"loss": info["loss"], "comm_bytes": info["comm_bytes"]}
             if do_eval:
                 ys["eval_loss"] = eval_loss_fn(carry["outer_params"], eb)
             return carry, ys

@@ -9,7 +9,8 @@ import jax.numpy as jnp
 
 from repro.kernels.matmul import matmul_epilogue
 from repro.kernels.outer_update import fused_nesterov_update
-from repro.kernels.quantize import rowwise_quantize
+from repro.kernels.quantize import rowwise_dequantize, rowwise_quantize
+from repro.kernels.topk_pack import pack_topk, unpack_topk  # noqa: F401 (re-export)
 from repro.optim.muon import NS_COEFFS
 
 
@@ -80,6 +81,19 @@ def quantize_rowwise(x: jax.Array, bits: int = 4, block_rows: int = 8):
     deq, codes, lo, scale = rowwise_quantize(xp, bits, block_rows=block_rows,
                                              interpret=_interpret())
     return deq[:m], codes[:m], lo[:m], scale[:m]
+
+
+@partial(jax.jit, static_argnames=("block_rows",))
+def dequantize_rowwise(codes: jax.Array, lo: jax.Array, scale: jax.Array,
+                       block_rows: int = 8) -> jax.Array:
+    """Fused receiver-side reconstruction: (codes u8 [m, n], lo, scale) -> f32."""
+    m, n = codes.shape
+    cp = _pad_to(codes, (block_rows, 1))
+    lp = _pad_to(lo, (block_rows, 1))
+    sp = _pad_to(scale, (block_rows, 1))
+    out = rowwise_dequantize(cp, lp, sp, block_rows=block_rows,
+                             interpret=_interpret())
+    return out[:m]
 
 
 @partial(jax.jit, static_argnames=("lr", "momentum", "block"))

@@ -1,12 +1,16 @@
-"""Row-wise linear quantize→dequantize Pallas kernel.
+"""Row-wise linear quantize→dequantize Pallas kernels + code bit-packing.
 
 The paper argues row-wise quantization is the production choice because each
 row carries its own (min, scale) metadata and the dequantize-reduce-quantize
 in the all-to-all reduce-scatter parallelizes per row (§6.3 "Global v.s.
-Row-wise"). The kernel fuses: per-row min/max reduction, code assignment, and
-dequantization in one VMEM pass over a [block_rows, n] tile. Codes are
-emitted alongside the dequantized values so the wire format (uint8 codes +
-fp32 row metadata) is materialized for the collective layer.
+Row-wise"). The encode kernel fuses: per-row min/max reduction, code
+assignment, and dequantization in one VMEM pass over a [block_rows, n] tile.
+Codes are emitted alongside the dequantized values so the wire format
+(bit-packed uint8 codes + fp32 row metadata) is materialized for the
+collective layer; :func:`rowwise_dequantize` is the receiver side (codes +
+metadata -> values, the reconstruction both the reduce and the EF residual
+see). :func:`pack_codes` / :func:`unpack_codes` implement the on-the-wire
+byte layout: for bits in {1, 2, 4, 8}, 8/bits codes share one byte.
 """
 from __future__ import annotations
 
@@ -62,3 +66,84 @@ def rowwise_quantize(
         interpret=interpret,
     )(x)
     return deq, codes, lo, scale
+
+
+def _rowwise_dequant_kernel(code_ref, lo_ref, scale_ref, out_ref):
+    q = code_ref[...].astype(jnp.float32)  # [bm, n]
+    out_ref[...] = (lo_ref[...] + q * scale_ref[...]).astype(out_ref.dtype)
+
+
+def rowwise_dequantize(
+    codes: jax.Array,
+    lo: jax.Array,
+    scale: jax.Array,
+    *,
+    block_rows: int = 8,
+    interpret: bool = True,
+    out_dtype=jnp.float32,
+) -> jax.Array:
+    """The receiver side: (codes u8 [m, n], lo [m, 1], scale [m, 1]) -> values.
+
+    One VMEM pass per [block_rows, n] tile; bit-identical to the jnp
+    reconstruction ``lo + codes * scale`` (same ops, same order)."""
+    m, n = codes.shape
+    assert m % block_rows == 0, f"pad rows to a multiple of {block_rows}"
+    (out,) = pl.pallas_call(
+        _rowwise_dequant_kernel,
+        grid=(m // block_rows,),
+        in_specs=[
+            pl.BlockSpec((block_rows, n), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows, 1), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows, 1), lambda i: (i, 0)),
+        ],
+        out_specs=[pl.BlockSpec((block_rows, n), lambda i: (i, 0))],
+        out_shape=[jax.ShapeDtypeStruct((m, n), out_dtype)],
+        interpret=interpret,
+    )(codes, lo, scale)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Wire byte layout: bit-packing of quantization codes
+# ---------------------------------------------------------------------------
+
+
+def packed_width(n: int, bits: int) -> int:
+    """Bytes per row of n codes at the given width (ceil; 1 byte/code when
+    bits does not divide 8)."""
+    if 8 % bits:
+        return n
+    per = 8 // bits
+    return (n + per - 1) // per
+
+
+def pack_codes(codes: jax.Array, bits: int) -> jax.Array:
+    """[..., n] u8 codes -> [..., packed_width(n, bits)] u8 wire bytes.
+
+    For bits in {1, 2, 4, 8} exactly 8/bits codes share one byte (code i of a
+    group occupies bits [i*bits, (i+1)*bits)); other widths ship one code per
+    byte. Lossless: :func:`unpack_codes` inverts it exactly.
+    """
+    if 8 % bits:
+        return codes
+    per = 8 // bits
+    n = codes.shape[-1]
+    pad = (-n) % per
+    if pad:
+        codes = jnp.pad(codes, [(0, 0)] * (codes.ndim - 1) + [(0, pad)])
+    grouped = codes.reshape(*codes.shape[:-1], -1, per)
+    packed = jnp.zeros(grouped.shape[:-1], jnp.uint8)
+    for i in range(per):
+        packed = packed | (grouped[..., i] << jnp.uint8(i * bits))
+    return packed
+
+
+def unpack_codes(packed: jax.Array, bits: int, n: int) -> jax.Array:
+    """Inverse of :func:`pack_codes`: [..., packed] u8 -> [..., n] u8 codes."""
+    if 8 % bits:
+        return packed[..., :n]
+    per = 8 // bits
+    mask = jnp.uint8((1 << bits) - 1)
+    parts = [(packed >> jnp.uint8(i * bits)) & mask for i in range(per)]
+    codes = jnp.stack(parts, axis=-1).reshape(*packed.shape[:-1], -1)
+    return codes[..., :n]

@@ -53,6 +53,11 @@ def rowwise_quantize_ref(x: jax.Array, bits: int):
     return (lo + q * scale).astype(x.dtype), q.astype(jnp.uint8), lo, scale
 
 
+def rowwise_dequantize_ref(codes: jax.Array, lo: jax.Array, scale: jax.Array) -> jax.Array:
+    """Receiver-side reconstruction oracle: lo + codes * scale (fp32)."""
+    return lo + codes.astype(jnp.float32) * scale
+
+
 def nesterov_update_ref(theta, psi, u, *, lr, momentum):
     psi32 = psi.astype(jnp.float32)
     u_new = momentum * u + lr * psi32

@@ -1,0 +1,34 @@
+"""Top-k (index, value) wire packing for the sparse pseudogradient collective.
+
+The paper's top-k compressor ships the k largest-|.| entries of each worker
+delta as explicit (index, value) pairs; the all-gather + local-reduce
+collective then scatters every worker's pairs back into a dense accumulator
+(§2 "Collectives for compressed communication"). These are the pack/unpack
+halves of that wire format. They are XLA gather/scatter ops rather than a
+Pallas kernel: the access pattern is data-dependent and memory-bound, so a
+hand-written kernel has nothing to fuse — the wire layout (int32 index +
+fp32 value per kept entry) is the point.
+
+``pack_topk(x, k)`` is value-equivalent to keeping the same k entries of
+``repro.core.compression.topk_sparsify`` (both rank by |.| via
+``jax.lax.top_k``, so tie-breaking is identical).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def pack_topk(x: jax.Array, k: int) -> tuple[jax.Array, jax.Array]:
+    """[n] -> (indices i32 [k], values [k]): the k largest-|.| entries."""
+    flat = x.reshape(-1)
+    _, idx = jax.lax.top_k(jnp.abs(flat), k)
+    return idx.astype(jnp.int32), flat[idx]
+
+
+def unpack_topk(indices: jax.Array, values: jax.Array, n: int) -> jax.Array:
+    """(indices [k], values [k]) -> dense [n] with zeros elsewhere.
+
+    ``jax.lax.top_k`` indices are unique, so the scatter has no collisions.
+    """
+    return jnp.zeros((n,), values.dtype).at[indices].set(values)

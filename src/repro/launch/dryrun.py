@@ -36,7 +36,6 @@ from repro.roofline.analysis import (
 from repro.roofline.flops import (
     forward_flops,
     hbm_bytes,
-    optimizer_flops,
     train_step_flops,
 )
 from repro.roofline.hlo import collective_bytes_corrected
@@ -45,8 +44,12 @@ from repro.utils.tree import tree_bytes, tree_count_params
 
 def run_one(arch: str, shape: str, multi_pod: bool, sync_interval: int = 30,
             verbose: bool = True, plan_filter: str | None = None,
-            inner_name: str = "muon", rounds_per_dispatch: int = 4) -> list[dict]:
+            inner_name: str = "muon", rounds_per_dispatch: int = 4,
+            compression: str = "none", bits: int = 4,
+            topk_frac: float = 0.01) -> list[dict]:
     """Lower + compile all step plans for one (arch, shape, mesh) combo."""
+    from repro.core.compression import CompressionConfig
+
     cfg0 = get_config(arch)
     if not shape_supported(cfg0, shape):
         return [{
@@ -57,12 +60,20 @@ def run_one(arch: str, shape: str, multi_pod: bool, sync_interval: int = 30,
     chips = mesh.devices.size
     records = []
     kw = {}
+    # wire_impl='jnp': Pallas has no GSPMD partitioning rules, so the wire
+    # stages lower through the elementwise-identical jnp path on the
+    # placeholder-device mesh
+    ccfg = CompressionConfig(
+        kind=compression, bits=bits, topk_frac=topk_frac, wire_impl="jnp",
+        collective="gather" if compression == "topk" else "a2a_rs_ag")
+    dcfg = None
     if INPUT_SHAPES[shape].kind == "train":
         from repro.core.diloco import DiLoCoConfig
 
         n_pods = 2 if multi_pod else 1
-        kw["dcfg"] = DiLoCoConfig(n_workers=n_pods, sync_interval=sync_interval,
-                                  inner_name=inner_name)
+        dcfg = DiLoCoConfig(n_workers=n_pods, sync_interval=sync_interval,
+                            inner_name=inner_name, compression=ccfg)
+        kw["dcfg"] = dcfg
         kw["rounds_per_dispatch"] = rounds_per_dispatch
     plans = build_plans(cfg0, shape, mesh, **kw)
     for plan in plans:
@@ -86,6 +97,8 @@ def run_one(arch: str, shape: str, multi_pod: bool, sync_interval: int = 30,
                 compiled = lowered.compile()
             mem = compiled.memory_analysis()
             cost = compiled.cost_analysis()
+            if isinstance(cost, list):  # some jaxlibs return [dict]
+                cost = cost[0] if cost else {}
             hlo_text = compiled.as_text()
             coll_flat = parse_collective_bytes(hlo_text)
             coll = collective_bytes_corrected(hlo_text)
@@ -95,6 +108,29 @@ def run_one(arch: str, shape: str, multi_pod: bool, sync_interval: int = 30,
             n_active = active_params(cfg, n_params)
             mf = model_flops(plan.meta["kind"], n_active, plan.meta["tokens_per_step"])
             flops_chip, bytes_chip = _analytic_terms(plan, cfg, params_abs, chips, shape)
+            # measured cross-worker wire traffic of the program's outer
+            # sync(s): actual wire-buffer sizes, not the ratio model
+            comm = None
+            wire_total = 0.0
+            if dcfg is not None and plan.meta["kind"] in ("sync", "round", "superstep"):
+                from repro.core.collectives import (
+                    collective_bytes_tree,
+                    measured_sync_bytes,
+                )
+
+                per_sync = measured_sync_bytes(params_abs, ccfg, dcfg.n_workers)
+                syncs = (plan.meta.get("rounds_per_dispatch", 1)
+                         if plan.meta["kind"] == "superstep" else 1)
+                wire_total = float(per_sync) * syncs
+                comm = {
+                    "compression": {"kind": ccfg.kind, "bits": ccfg.bits,
+                                    "topk_frac": ccfg.topk_frac},
+                    "measured_bytes_per_sync_per_worker": int(per_sync),
+                    "modeled_bytes_per_sync_per_worker": collective_bytes_tree(
+                        params_abs, ccfg, dcfg.n_workers)["bytes_per_sync_per_worker"],
+                    "syncs_in_program": int(syncs),
+                    "measured_bytes_in_program": int(wire_total),
+                }
             terms = RooflineTerms(
                 flops=flops_chip,
                 hlo_bytes=bytes_chip,
@@ -102,6 +138,7 @@ def run_one(arch: str, shape: str, multi_pod: bool, sync_interval: int = 30,
                 chips=chips,
                 model_flops=mf,
                 amortize=float(plan.meta["amortize"]),
+                wire_bytes=wire_total,
             )
             donation = None
             if plan.name in ("round_step", "superstep"):
@@ -117,6 +154,8 @@ def run_one(arch: str, shape: str, multi_pod: bool, sync_interval: int = 30,
                         f"params {donation['outer_opt_param_indices']} not all "
                         f"in the input_output_alias map "
                         f"(alias {donation['alias_bytes_per_chip']} B/chip)")
+            if comm is not None:
+                rec["comm"] = comm
             rec.update({
                 "status": "ok",
                 "compile_s": round(time.time() - t0, 1),
@@ -166,20 +205,31 @@ def round_step_donation_report(state_abs, hlo_text: str, mem, chips: int) -> dic
       O(kB) vector buffers (norm scales), so up to 1% of the outer-state
       bytes may escape aliasing — the parameter-sized buffers donation
       exists for must all alias.
+
+    The report is **per-buffer**: every outer-params / outer-opt leaf is
+    listed by its tree path with its bytes and aliasing verdict, so the
+    escaped bytes are attributed to named buffers (``unaliased_buffers``)
+    rather than a byte total.
     """
     import re
 
-    outer_leaves = jax.tree.leaves(state_abs["outer_params"])
-    opt_leaves = jax.tree.leaves(state_abs["outer_opt"])
-    n_outer_params = len(outer_leaves)
-    outer_idx = set(range(n_outer_params, n_outer_params + len(opt_leaves)))
+    def named_leaves(tree, start: int) -> list[dict]:
+        flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+        return [{
+            "param_index": start + i,
+            "path": jax.tree_util.keystr(path),
+            "bytes": int(leaf.size * leaf.dtype.itemsize),
+        } for i, (path, leaf) in enumerate(flat)]
+
+    param_entries = named_leaves(state_abs["outer_params"], 0)
+    opt_entries = named_leaves(state_abs["outer_opt"], len(param_entries))
     aliased = {int(g) for g in re.findall(
         r"\((\d+), \{[^}]*\}, \w+-alias\)", hlo_text)}
+    for e in param_entries + opt_entries:
+        e["aliased"] = e["param_index"] in aliased
     outer_opt_bytes = tree_bytes(state_abs["outer_opt"])
     outer_param_bytes = tree_bytes(state_abs["outer_params"])
-    unaliased_opt_bytes = sum(
-        leaf.size * leaf.dtype.itemsize
-        for i, leaf in zip(sorted(outer_idx), opt_leaves) if i not in aliased)
+    unaliased_opt_bytes = sum(e["bytes"] for e in opt_entries if not e["aliased"])
     alias = int(mem.alias_size_in_bytes)
     return {
         "alias_bytes_per_chip": alias,
@@ -187,7 +237,11 @@ def round_step_donation_report(state_abs, hlo_text: str, mem, chips: int) -> dic
         "outer_params_bytes_global": int(outer_param_bytes),
         "outer_opt_unaliased_bytes": int(unaliased_opt_bytes),
         "aliased_param_count": len(aliased),
-        "outer_opt_param_indices": sorted(outer_idx),
+        "outer_opt_param_indices": [e["param_index"] for e in opt_entries],
+        "buffers": param_entries + opt_entries,
+        "unaliased_buffers": [
+            {"path": e["path"], "bytes": e["bytes"]}
+            for e in param_entries + opt_entries if not e["aliased"]],
         "outer_state_aliased": bool(
             unaliased_opt_bytes <= 0.01 * max(outer_opt_bytes, 1)
             and alias * chips >= (outer_opt_bytes + outer_param_bytes
@@ -284,6 +338,13 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--inner", default="muon", choices=list(INNER_OPTIMIZERS))
     ap.add_argument("--rounds-per-dispatch", type=int, default=4,
                     help="R of the superstep plan (rounds per dispatch)")
+    ap.add_argument("--compression", default="none",
+                    choices=["none", "topk", "quant"],
+                    help="pseudogradient wire format for the train plans "
+                         "(lowered via the jnp wire path; the comm block "
+                         "records measured vs modeled bytes)")
+    ap.add_argument("--bits", type=int, default=4)
+    ap.add_argument("--topk-frac", type=float, default=0.01)
     ap.add_argument("--out", default="results/dryrun")
     return ap
 
@@ -300,13 +361,19 @@ def main() -> None:
         for shape in shapes:
             for mp in meshes:
                 tag = f"{arch}__{shape}__{'2x16x16' if mp else '16x16'}__{args.inner}"
+                if args.compression == "quant":
+                    tag += f"__quant{args.bits}"
+                elif args.compression == "topk":
+                    tag += f"__topk{args.topk_frac}"
                 path = os.path.join(args.out, tag + ".json")
                 if os.path.exists(path):
                     print(f"[CACHED] {tag}")
                     continue
                 recs = run_one(arch, shape, mp, plan_filter=args.plan,
                                inner_name=args.inner,
-                               rounds_per_dispatch=args.rounds_per_dispatch)
+                               rounds_per_dispatch=args.rounds_per_dispatch,
+                               compression=args.compression, bits=args.bits,
+                               topk_frac=args.topk_frac)
                 with open(path, "w") as f:
                     json.dump(recs, f, indent=2)
 

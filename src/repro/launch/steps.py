@@ -20,12 +20,11 @@ ever allocated, which is what lets 1T-param configs lower on the CPU host.
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh, NamedSharding
+from jax.sharding import Mesh
 from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import INPUT_SHAPES, config_for_shape
@@ -44,7 +43,7 @@ from repro.launch.sharding import (
     params_shardings,
     replicated,
 )
-from repro.models.api import Model, build_model
+from repro.models.api import build_model
 from repro.models.common import ModelConfig, activation_sharding
 from repro.optim import OptimizerConfig
 from repro.utils.tree import tree_count_params

@@ -131,17 +131,23 @@ def train(args) -> dict:
     with open(csv_path, "a", newline="") as f:
         writer = csv.writer(f)
         if start_round == 0:
-            writer.writerow(["round", "step", "train_loss", "eval_loss", "wall_s"])
+            writer.writerow(["round", "step", "train_loss", "eval_loss",
+                             "comm_bytes", "wall_s"])
 
         def on_round(rec):
             losses.append(rec["eval_loss"])
             steps.append(rec["step"])
+            # comm_bytes is the round's *measured* per-worker wire traffic,
+            # drained from the engine's [R] device buffer (actual wire-buffer
+            # sizes, not the modeled compression ratio)
             writer.writerow([rec["round"], rec["step"], f"{rec['train_loss']:.5f}",
-                             f"{rec['eval_loss']:.5f}", f"{time.time()-t_start:.1f}"])
+                             f"{rec['eval_loss']:.5f}", f"{rec['comm_bytes']:.0f}",
+                             f"{time.time()-t_start:.1f}"])
             f.flush()
             if args.verbose:
                 print(f"round {rec['round']:4d} step {rec['step']:6d} "
-                      f"train {rec['train_loss']:.4f} eval {rec['eval_loss']:.4f}")
+                      f"train {rec['train_loss']:.4f} eval {rec['eval_loss']:.4f} "
+                      f"comm {rec['comm_bytes']:.2e}B")
 
         def on_state(r, st):
             save_checkpoint(os.path.join(args.out, "ckpt.npz"), st, step=r + 1)

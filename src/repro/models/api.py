@@ -14,11 +14,9 @@ optional "context": f[B,Sctx,d] (audio frames / image patches)}.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from functools import partial
 from typing import Any, Callable
 
 import jax
-import jax.numpy as jnp
 
 from repro.models import lm, ssm_lm, vlm, whisper
 from repro.models.common import ModelConfig, fused_cross_entropy, softmax_cross_entropy

@@ -184,7 +184,6 @@ def init_cache(cfg: ModelConfig, batch: int, cache_len: int, n_layers: int, dtyp
 
 def fill_cache_from_prefill(k: jax.Array, v: jax.Array, cache_layer: PyTree) -> PyTree:
     """Write full-seq prefill K/V into the (larger) cache buffers."""
-    S = k.shape[1]
     ck = jax.lax.dynamic_update_slice(cache_layer["k"], k, (0, 0, 0, 0))
     cv = jax.lax.dynamic_update_slice(cache_layer["v"], v, (0, 0, 0, 0))
     return {"k": ck, "v": cv}

@@ -7,7 +7,6 @@ Gemma3-style scaling-ladder models (SwiGLU + QK-norm + post-norms).
 from __future__ import annotations
 
 import math
-from functools import partial
 from typing import Any
 
 import jax
@@ -113,7 +112,6 @@ def decode_step_lm(cfg: ModelConfig, params: PyTree, cache: PyTree, token: jax.A
                    pos: jax.Array, **_) -> tuple[jax.Array, PyTree]:
     """One decode step. token [B] int32; cache from init_cache_lm; pos i32[]."""
     x = _embed(cfg, params, token[:, None])
-    positions = None
 
     def body(x, inp):
         lp, cl = inp

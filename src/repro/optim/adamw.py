@@ -29,7 +29,9 @@ def scale_by_adam(cfg: OptimizerConfig) -> Transform:
     sdt = jnp.dtype(cfg.state_dtype)
 
     def init(tree: PyTree) -> PyTree:
-        zeros = lambda p: jnp.zeros(p.shape, sdt)
+        def zeros(p):
+            return jnp.zeros(p.shape, sdt)
+
         return {
             "m": jax.tree.map(zeros, tree),
             "v": jax.tree.map(zeros, tree),

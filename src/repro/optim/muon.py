@@ -164,8 +164,8 @@ def orthogonalize(cfg: OptimizerConfig, ns_impl: str = "jnp") -> Transform:
     def orth(u, _params):
         def per_leaf(m):
             m_local = shard_hint(m, "ns_matrix")
-            O = ns_fn(m_local, iters=iters).astype(jnp.float32)
-            return shard_hint(O, "ns_out")
+            out = ns_fn(m_local, iters=iters).astype(jnp.float32)
+            return shard_hint(out, "ns_out")
 
         return jax.tree.map(per_leaf, u)
 

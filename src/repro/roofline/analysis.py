@@ -78,6 +78,11 @@ class RooflineTerms:
     chips: int
     model_flops: float = 0.0
     amortize: float = 1.0  # divide by H for the sync step
+    # measured cross-worker pseudogradient wire bytes for the whole program
+    # (per worker, from the actual wire buffers — collectives.
+    # measured_sync_bytes), as opposed to the HLO-parsed on-mesh collective
+    # bytes above. 0 for programs without an outer sync.
+    wire_bytes: float = 0.0
 
     @property
     def compute_s(self) -> float:
@@ -90,6 +95,12 @@ class RooflineTerms:
     @property
     def collective_s(self) -> float:
         return self.collective_bytes / LINK_BW / self.amortize
+
+    @property
+    def wire_comm_s(self) -> float:
+        """Cross-worker wire time at ICI link speed (lower bound; the
+        cross-DC links DiLoCo targets are slower — scale by LINK_BW/bw)."""
+        return self.wire_bytes / LINK_BW / self.amortize
 
     @property
     def dominant(self) -> str:
@@ -108,9 +119,11 @@ class RooflineTerms:
             "flops_per_chip": self.flops,
             "hlo_bytes_per_chip": self.hlo_bytes,
             "collective_bytes_per_chip": self.collective_bytes,
+            "wire_bytes_per_worker": self.wire_bytes,
             "compute_s": self.compute_s,
             "memory_s": self.memory_s,
             "collective_s": self.collective_s,
+            "wire_comm_s": self.wire_comm_s,
             "dominant": self.dominant,
             "model_flops": self.model_flops,
             "useful_flops_ratio": self.useful_flops_ratio,

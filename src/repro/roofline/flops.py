@@ -113,12 +113,12 @@ def forward_flops(cfg: ModelConfig, S: int, B: int, T: int | None = None,
     if cfg.arch_type == "vlm":
         ns = cfg.n_layers // cfg.vlm_period
         n_self = cfg.n_layers - ns
-        I = cfg.n_image_tokens
-        itoks = float(B * I)
+        img = cfg.n_image_tokens
+        itoks = float(B * img)
         self_l = n_self * (_attn_flops(cfg, S, tokens, kv_len) + _mlp_flops(cfg, tokens))
         cross_kv = 0.0 if T == 1 else ns * 2.0 * 2.0 * itoks * cfg.d_model * (cfg.n_kv_heads * cfg.hd)
         cross = ns * (2.0 * tokens * cfg.d_model * (cfg.n_heads * cfg.hd)
-                      + 2.0 * tokens * cfg.n_heads * cfg.hd * I * 2.0
+                      + 2.0 * tokens * cfg.n_heads * cfg.hd * img * 2.0
                       + 2.0 * tokens * (cfg.n_heads * cfg.hd) * cfg.d_model
                       + _mlp_flops(cfg, tokens))
         proj = 2.0 * itoks * cfg.d_model * cfg.d_model if T != 1 else 0.0
@@ -136,8 +136,6 @@ def newton_schulz_flops(m: int, n: int, iters: int = 5) -> float:
 
 def optimizer_flops(params_tree, inner_name: str) -> float:
     """Per-step optimizer flops across the whole parameter tree."""
-    import jax
-
     from repro.optim.muon import muon_label
     from repro.utils.tree import tree_leaves_with_paths
 

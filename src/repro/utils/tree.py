@@ -106,7 +106,7 @@ def tree_unzip(tree_of_tuples: PyTree, n: int) -> tuple[PyTree, ...]:
 
     The standard unpack for ``jax.tree.map`` callbacks returning several
     values per leaf (new param + new state buffers, etc.)."""
-    is_tup = lambda t: isinstance(t, tuple)
+    is_tup = lambda t: isinstance(t, tuple)  # noqa: E731
     return tuple(
         jax.tree.map(lambda t: t[i], tree_of_tuples, is_leaf=is_tup)  # noqa: B023
         for i in range(n))

@@ -1,0 +1,129 @@
+"""CI workflow dry parse: the sharded fast tier must cover every non-slow
+test file exactly once, and the job commands must stay consistent with the
+repo's test layout (the 'equivalent dry parse' of `act`).
+
+A test file is *slow-only* when every test in it carries
+``@pytest.mark.slow`` (detected by AST, so the classification can't rot);
+those files belong to the gated slow job, all others to exactly one fast
+shard. Adding a test file without slotting it into a shard fails here.
+"""
+import ast
+import glob
+import os
+
+import pytest
+
+yaml = pytest.importorskip("yaml", reason="workflow parse needs PyYAML")
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+WORKFLOW = os.path.join(REPO, ".github", "workflows", "ci.yml")
+
+
+@pytest.fixture(scope="module")
+def workflow() -> dict:
+    assert os.path.exists(WORKFLOW), ".github/workflows/ci.yml is missing"
+    with open(WORKFLOW) as f:
+        wf = yaml.safe_load(f)
+    assert isinstance(wf, dict) and "jobs" in wf, "workflow must define jobs"
+    return wf
+
+
+def _test_files() -> list[str]:
+    return sorted(os.path.relpath(p, REPO)
+                  for p in glob.glob(os.path.join(REPO, "tests", "test_*.py")))
+
+
+def _is_slow_only(path: str) -> bool:
+    """True when every test function in the file is @pytest.mark.slow."""
+    tree = ast.parse(open(os.path.join(REPO, path)).read())
+    tests = [n for n in ast.walk(tree)
+             if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))
+             and n.name.startswith("test_")]
+    if not tests:
+        return False
+
+    def is_slow(fn) -> bool:
+        return any("slow" in ast.dump(d) for d in fn.decorator_list)
+
+    return all(is_slow(fn) for fn in tests)
+
+
+def _fast_shards(workflow) -> list[dict]:
+    fast = workflow["jobs"]["fast-tests"]
+    shards = fast["strategy"]["matrix"]["include"]
+    assert len(shards) >= 3, "fast tier must shard across >= 3 parallel jobs"
+    return shards
+
+
+def test_workflow_has_required_jobs(workflow):
+    jobs = workflow["jobs"]
+    for name in ("lint", "fast-tests", "smoke", "slow-tests"):
+        assert name in jobs, f"CI must define the {name} job"
+
+
+def test_fast_shards_cover_every_nonslow_file_exactly_once(workflow):
+    shards = _fast_shards(workflow)
+    listed: list[str] = []
+    for shard in shards:
+        files = shard["files"].split()
+        assert files, f"shard {shard.get('shard')} lists no test files"
+        listed.extend(files)
+    assert len(listed) == len(set(listed)), (
+        f"test files listed in more than one shard: "
+        f"{sorted(f for f in listed if listed.count(f) > 1)}")
+    nonslow = {f for f in _test_files() if not _is_slow_only(f)}
+    assert set(listed) == nonslow, (
+        f"fast shards out of sync with tests/: "
+        f"missing={sorted(nonslow - set(listed))} "
+        f"stale={sorted(set(listed) - nonslow)}")
+    for f in listed:
+        assert os.path.exists(os.path.join(REPO, f)), f"{f} does not exist"
+
+
+def test_fast_shard_commands_deselect_slow(workflow):
+    steps = workflow["jobs"]["fast-tests"]["steps"]
+    cmds = [s.get("run", "") for s in steps]
+    test_cmd = next(c for c in cmds if "pytest" in c)
+    assert '-m "not slow"' in test_cmd
+    assert "PYTHONPATH=src" in test_cmd
+    assert "${{ matrix.files }}" in test_cmd
+
+
+def test_slow_job_is_gated_and_runs_slow_marker(workflow):
+    slow = workflow["jobs"]["slow-tests"]
+    assert "if" in slow, "slow tier must be schedule/label/dispatch gated"
+    test_cmd = next(s["run"] for s in slow["steps"] if "pytest" in s.get("run", ""))
+    assert "-m slow" in test_cmd and "PYTHONPATH=src" in test_cmd
+
+
+def test_lint_job_runs_ruff_check_and_format_gate(workflow):
+    cmds = [s.get("run", "") for s in workflow["jobs"]["lint"]["steps"]]
+    assert any(c.strip().startswith("ruff check .") for c in cmds)
+    assert any("--select E101,W191,W291,W292,W293" in c for c in cmds)
+
+
+def test_smoke_job_exercises_launch_paths(workflow):
+    cmds = " ".join(s.get("run", "") for s in workflow["jobs"]["smoke"]["steps"])
+    assert "examples/quickstart.py" in cmds
+    assert "repro.launch.dryrun" in cmds
+
+
+def test_jobs_pip_cache_the_jax_install(workflow):
+    """Every job must restore the pip cache keyed on requirements-ci.txt."""
+    for name, job in workflow["jobs"].items():
+        setups = [s for s in job["steps"]
+                  if "setup-python" in str(s.get("uses", ""))]
+        assert setups, f"{name} job does not set up python"
+        with_ = setups[0].get("with", {})
+        assert with_.get("cache") == "pip", f"{name} job must pip-cache"
+        assert with_.get("cache-dependency-path") == "requirements-ci.txt"
+
+
+def test_slow_only_classification_matches_known_files():
+    """The AST classifier agrees with the repo's current layout (guards the
+    classifier itself against rot)."""
+    slow_only = {f for f in _test_files() if _is_slow_only(f)}
+    assert {"tests/test_parity.py", "tests/test_system.py",
+            "tests/test_dryrun_small.py"} <= slow_only
+    assert "tests/test_engine.py" not in slow_only
+    assert "tests/test_wire.py" not in slow_only

@@ -19,8 +19,8 @@ REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 DOC_FILES = ["README.md", "docs/architecture.md", "docs/transforms.md",
              "docs/benchmarks.md"]
 
-# flags that belong to external tools (XLA itself), not to our parsers
-EXTERNAL_PREFIXES = ("--xla",)
+# flags that belong to external tools (XLA, ruff), not to our parsers
+EXTERNAL_PREFIXES = ("--xla", "--select")
 
 _COLLECT = r"""
 import json

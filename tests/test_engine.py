@@ -222,8 +222,11 @@ def test_streaming_round_signature_matches_dense():
         state = engine.init(jax.random.PRNGKey(0))
         _, info = engine.step(state, batches_for_round(_stream(2), 0, 4))
         infos[J] = info
-    assert sorted(infos[1]) == sorted(infos[2]) == ["loss", "psi"]
+    assert sorted(infos[1]) == sorted(infos[2]) == ["comm_bytes", "loss", "psi"]
     assert infos[1]["loss"].shape == infos[2]["loss"].shape == (4,)
+    # streaming's J segment syncs each ship their partition's share: the
+    # measured per-round wire bytes must equal the dense single sync
+    assert float(infos[1]["comm_bytes"]) == float(infos[2]["comm_bytes"]) > 0
     assert (jax.tree.structure(infos[1]["psi"])
             == jax.tree.structure(infos[2]["psi"]))
 

@@ -8,20 +8,20 @@ pytest.importorskip("hypothesis", reason="property tests need hypothesis")
 from hypothesis import given, settings  # noqa: E402
 from hypothesis import strategies as st  # noqa: E402
 
-from repro.core.analysis import (
+from repro.core.analysis import (  # noqa: E402
     interference_gap,
     nuclear_norm,
     orthonormal_factor,
     prop42_nuclear_identity,
 )
-from repro.core.compression import (
+from repro.core.compression import (  # noqa: E402
     CompressionConfig,
     ef_compress_tree,
     quantize_linear,
     quantize_statistical,
     topk_sparsify,
 )
-from repro.optim.muon import newton_schulz
+from repro.optim.muon import newton_schulz  # noqa: E402
 
 SETTINGS = dict(max_examples=20, deadline=None)
 

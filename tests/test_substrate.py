@@ -13,7 +13,7 @@ from repro.core.scaling_laws import (
     iso_loss_time_ratio,
     optimal_and_critical_batch,
 )
-from repro.core.wallclock import HardwareModel, RunSpec, compute_utilization, training_time_hours
+from repro.core.wallclock import RunSpec, compute_utilization, training_time_hours
 from repro.data import DataConfig, MarkovStream, batches_for_round
 from repro.roofline.analysis import RooflineTerms, parse_collective_bytes
 from repro.roofline.hlo import collective_bytes_corrected
