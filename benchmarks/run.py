@@ -35,6 +35,7 @@ def all_benchmarks():
         "fig16": sy.bench_fig16_utilization,
         "tab2": sy.bench_tab2_scaling_forms,
         "kernels": sy.bench_kernel_micro,
+        "attention_bench": sy.bench_attention_sweep,
         "roofline": sy.bench_roofline_table,
     }
 

@@ -360,6 +360,57 @@ def bench_kernel_micro() -> list[dict]:
     return rows
 
 
+def bench_attention_sweep() -> list[dict]:
+    """attention_bench: seq x impl x window sweep of the attention backends.
+
+    Times one full-sequence ``attend`` call (the per-layer training hot
+    path) for the three execution paths — dense XLA softmax, blockwise XLA
+    with schedule skipping, and the fused Pallas flash-attention kernel
+    (interpret mode on CPU, so its absolute time measures the interpreter,
+    not TPU perf — the row exists to track the schedule, not the clock).
+    ``derived`` reports the visit schedule's fraction of the dense block
+    grid and the achieved fraction of dense-attention FLOP throughput
+    (``visited_fraction * t_dense / t``): > 1 means block skipping bought
+    real wall-clock on top of what dense does.
+    """
+    from repro.kernels.flash_attention import visited_fraction
+    from repro.models import ModelConfig
+    from repro.models.attention import attend, init_attention
+
+    B, H, KV, hd = 2, 4, 2, 16
+    d = 64
+    rows = []
+    for S in (128, 256):
+        for window in (0, S // 4):
+            base = ModelConfig(n_layers=1, d_model=d, n_heads=H, n_kv_heads=KV,
+                               head_dim=hd, d_ff=d, vocab=64, dtype="float32",
+                               qk_norm=False, sliding_window=window,
+                               attn_block_q=64, attn_block_kv=64)
+            p = init_attention(jax.random.PRNGKey(0), base)
+            x = jax.random.normal(jax.random.PRNGKey(1), (B, S, d), jnp.float32)
+            pos = jnp.arange(S)
+            impls = {
+                "xla_dense": base.replace(blockwise_threshold=S + 1),
+                "xla_blockwise": base.replace(blockwise_threshold=S),
+                "pallas": base.replace(attn_impl="pallas"),
+            }
+            frac = visited_fraction(S, 64, 64, causal=True, window=window)
+            t_dense = None
+            for name, cfg in impls.items():
+                fn = jax.jit(lambda x, cfg=cfg: attend(p, cfg, x, pos))
+                us = _time(fn, x)
+                if t_dense is None:
+                    t_dense = us
+                rows.append({
+                    "name": f"attention_bench/S{S}_w{window}/{name}",
+                    "value": round(us, 1),
+                    "derived": (f"us_per_call;visited_frac={frac:.3f};"
+                                f"frac_of_dense_flops="
+                                f"{frac * t_dense / us:.3f}"),
+                })
+    return rows
+
+
 def bench_roofline_table(dryrun_dir: str = "results/dryrun") -> list[dict]:
     """The 40-combination baseline roofline table from the dry-run records."""
     rows = []

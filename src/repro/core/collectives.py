@@ -70,6 +70,72 @@ def reduce_pseudogradients(worker_comm: PyTree, cfg: CompressionConfig) -> PyTre
     return jax.tree.map(per_leaf, worker_comm, is_leaf=is_wire)
 
 
+def _leaf_wire_pipeline(d: jax.Array, e: jax.Array | None,
+                        cfg: CompressionConfig):
+    """The full per-leaf wire path on a [K, ...] delta leaf: (EF accumulate
+    ->) Q1 encode -> D1 decode -> mean over K (-> Q2/D2 for a2a_rs_ag).
+    Mirrors ``compress``/``error_feedback`` + :func:`reduce_pseudogradients`
+    leafwise. Returns ``(psi f32, new_residual f32 | None)``."""
+    if e is not None:
+        acc = cfg.ef_decay * e.astype(jnp.float32) + d.astype(jnp.float32)
+        w = encode_leaf(acc, cfg, batch_ndim=1)
+    else:
+        acc = None
+        w = encode_leaf(d, cfg, batch_ndim=1)
+    vals = decode_leaf(w, impl=cfg.wire_impl)  # D1: the true reconstruction
+    new_e = acc - vals if acc is not None else None
+    psi = jnp.mean(vals, axis=0)
+    if cfg.kind == "quant" and cfg.collective == "a2a_rs_ag":
+        w2 = encode_leaf(psi, cfg, batch_ndim=0)
+        psi = decode_leaf(w2, impl=cfg.wire_impl)
+    return psi, new_e
+
+
+def segment_sync_update(deltas: PyTree, residuals: PyTree | None,
+                        mask: PyTree, cfg: CompressionConfig):
+    """One streaming segment's worker+reduce stages with **wire-row
+    subsetting** (ROADMAP item): the concrete partition mask decides, per
+    leaf, whether to encode the whole leaf, nothing, only its owned L-rows
+    (gathered into a genuinely smaller wire buffer — what a real streaming
+    collective would ship), or to fall back to the legacy full-size masked
+    encode where subsetting would split wire rows
+    (:func:`repro.core.streaming.subset_plan`).
+
+    ``deltas`` leaves are the mask-multiplied [K, ...] worker deltas;
+    ``residuals`` is the K-stacked EF tree or ``None``. Returns
+    ``(psi, new_residuals)``. For ``'skip'``/``'rows'`` leaves psi is
+    exactly zero outside the partition and unowned residual rows come back
+    unchanged; a ``'legacy'`` leaf runs the full-size masked encode, so its
+    unowned psi entries are only quantization-level small and its unowned
+    residual rows are EF-decayed — callers MUST still mask psi and
+    mask-merge the residuals (``outer_step``/``OuterOptimizer.step`` do).
+    """
+    from repro.core.streaming import subset_plan
+
+    def per_leaf(d, e, m):
+        plan, idx = subset_plan(m, d.shape[1:], cfg)
+        if plan == "skip":
+            return jnp.zeros(d.shape[1:], jnp.float32), e
+        if plan == "rows":
+            e_in = e[:, idx] if e is not None else None
+            psi_sub, new_e_sub = _leaf_wire_pipeline(d[:, idx], e_in, cfg)
+            psi = jnp.zeros(d.shape[1:], jnp.float32).at[idx].set(psi_sub)
+            new_e = (e.astype(jnp.float32).at[:, idx].set(new_e_sub)
+                     if e is not None else None)
+            return psi, new_e
+        return _leaf_wire_pipeline(d, e, cfg)  # 'all' / 'legacy'
+
+    if residuals is None:
+        out = jax.tree.map(lambda d, m: per_leaf(d, None, m), deltas, mask)
+    else:
+        out = jax.tree.map(per_leaf, deltas, residuals, mask)
+    is_pair = lambda t: isinstance(t, tuple)  # noqa: E731
+    psi = jax.tree.map(lambda t: t[0], out, is_leaf=is_pair)
+    if residuals is None:
+        return psi, None
+    return psi, jax.tree.map(lambda t: t[1], out, is_leaf=is_pair)
+
+
 def reduce_mean(cfg: CompressionConfig):
     """The pseudogradient all-reduce as a stateless transform stage:
     [K, ...]-stacked wire buffers (or dense deltas for kind='none') -> Psi
@@ -119,28 +185,44 @@ def measured_sync_bytes(params: PyTree, cfg: CompressionConfig,
     buffers the collective moves.
 
     ``params`` may be concrete or abstract (only shapes/dtypes are read).
-    With a streaming partition ``mask`` (concrete {0,1} arrays), each leaf's
-    bytes scale by the fraction of rows the partition owns — the subset a
-    real streaming collective would ship (our simulation encodes full-size
-    buffers with zeros outside the partition; see docs/transforms.md).
-    With ``outer_enabled=False`` (the DP-degenerate config) the sync is the
-    K-way parameter average: a dense fp32 all-reduce for K > 1, nothing at
-    all for K == 1.
+    With a streaming partition ``mask`` (concrete {0,1} arrays) the
+    accounting follows the same per-leaf :func:`subset_plan` the segment
+    sync executes: wholly-owned leaves are counted in full, unowned leaves
+    not at all, and ``'rows'`` leaves are ``jax.eval_shape``-measured on the
+    *subset* shape the sync actually encodes — so per-segment totals sum
+    exactly to the dense single-sync total. Only the ``'legacy'`` fallback
+    (partial ownership that would split wire rows) still scales full-size
+    buffer bytes by the masked-row fraction. With ``outer_enabled=False``
+    (the DP-degenerate config) the sync is the K-way parameter average: a
+    dense fp32 all-reduce for K > 1, nothing at all for K == 1.
     """
+    from repro.core.streaming import subset_plan
+
     leaves = jax.tree.leaves(params)
     mask_leaves = (jax.tree.leaves(mask) if mask is not None
                    else [None] * len(leaves))
     total = 0.0
     for p, m in zip(leaves, mask_leaves):
-        frac = 1.0 if m is None else float(np.asarray(m, np.float32).mean())
-        if frac == 0.0:
-            continue
         if not outer_enabled:
-            per_worker = (0.0 if n_workers == 1
-                          else 2.0 * float(np.prod(tuple(p.shape))) * 4)
-        else:
-            per_worker = _leaf_sync_bytes(p, cfg, n_workers)
-        total += frac * per_worker
+            frac = 1.0 if m is None else float(np.asarray(m, np.float32).mean())
+            total += frac * (0.0 if n_workers == 1
+                             else 2.0 * float(np.prod(tuple(p.shape))) * 4)
+            continue
+        if m is None or cfg.kind == "none":
+            frac = 1.0 if m is None else float(np.asarray(m, np.float32).mean())
+            total += frac * _leaf_sync_bytes(p, cfg, n_workers)
+            continue
+        plan, idx = subset_plan(m, tuple(p.shape), cfg)
+        if plan == "skip":
+            continue
+        if plan == "rows":  # bytes of the buffers the subset encode emits
+            sub = jax.ShapeDtypeStruct((len(idx), *p.shape[1:]), p.dtype)
+            total += _leaf_sync_bytes(sub, cfg, n_workers)
+        elif plan == "all":
+            total += _leaf_sync_bytes(p, cfg, n_workers)
+        else:  # 'legacy': full-size masked encode, fraction-accounted
+            frac = float(np.asarray(m, np.float32).mean())
+            total += frac * _leaf_sync_bytes(p, cfg, n_workers)
     return int(round(total))
 
 

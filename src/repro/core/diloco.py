@@ -36,7 +36,11 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
-from repro.core.collectives import measured_sync_bytes, reduce_mean
+from repro.core.collectives import (
+    measured_sync_bytes,
+    reduce_mean,
+    segment_sync_update,
+)
 from repro.core.compression import CompressionConfig, compress, error_feedback
 from repro.core.streaming import masked_update, streaming_masks
 from repro.models.api import Model
@@ -111,6 +115,7 @@ class OuterOptimizer:
         self.dcfg = dcfg
         self.state_dtype = jnp.dtype(state_dtype)
         self.has_ef = bool(ccfg.error_feedback and ccfg.kind != "none")
+        self.has_wire = ccfg.kind != "none"
         self.worker_stage = error_feedback(ccfg) if self.has_ef else compress(ccfg)
         self.terminal = make_outer_transform(
             dcfg.outer_name, dcfg.outer_lr, dcfg.outer_momentum,
@@ -140,12 +145,32 @@ class OuterOptimizer:
     def step(self, params: PyTree, deltas: PyTree, opt_state: PyTree,
              ef: PyTree | None, mask: PyTree | None = None):
         """Run the chain on (masked) deltas; returns
-        ``(new_params, new_opt_state, new_ef, psi)``."""
-        state = (ef if self.has_ef else (), (), opt_state)
-        psi, state = self.tx.update(deltas, state, params)
-        cand_params, state = self.tx.apply(params, psi, state)
-        new_ef = state[0] if self.has_ef else ef
-        new_opt = state[2]
+        ``(new_params, new_opt_state, new_ef, psi)``.
+
+        A streaming segment (``mask`` present) with wire compression routes
+        the worker+reduce stages through
+        :func:`repro.core.collectives.segment_sync_update` instead of the
+        dense chain: the concrete mask subsets the wire rows, so the
+        simulated buffers themselves shrink to the segment's share
+        (ROADMAP item); the terminal outer descent is unchanged. Masks are
+        closure constants of the jitted round — a traced mask falls back to
+        the full-size masked encode.
+        """
+        concrete_mask = mask is not None and not any(
+            isinstance(m, jax.core.Tracer) for m in jax.tree.leaves(mask))
+        if concrete_mask and self.has_wire:
+            psi, seg_ef = segment_sync_update(
+                deltas, ef if self.has_ef else None, mask,
+                self.dcfg.compression)
+            psi, opt_after = self.terminal.update(psi, opt_state, params)
+            cand_params, new_opt = self.terminal.apply(params, psi, opt_after)
+            new_ef = seg_ef if self.has_ef else ef
+        else:
+            state = (ef if self.has_ef else (), (), opt_state)
+            psi, state = self.tx.update(deltas, state, params)
+            cand_params, state = self.tx.apply(params, psi, state)
+            new_ef = state[0] if self.has_ef else ef
+            new_opt = state[2]
         if mask is None:
             return cand_params, new_opt, new_ef, psi
         new_params = masked_update(mask, cand_params, params)

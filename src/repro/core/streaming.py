@@ -17,6 +17,7 @@ from typing import Any
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.utils.tree import tree_map_with_path
 
@@ -40,6 +41,44 @@ def streaming_masks(params: PyTree, n_partitions: int, layer_prefixes: tuple[str
         return jnp.float32(1.0 if owner == j else 0.0)
 
     return [tree_map_with_path(lambda p, x: leaf_mask(p, x, j), params) for j in range(J)]
+
+
+def subset_plan(mask_leaf, leaf_shape: tuple, ccfg) -> tuple[str, np.ndarray | None]:
+    """Classify a concrete partition-mask leaf for wire-row subsetting.
+
+    Returns ``(plan, idx)`` with plan one of:
+
+    * ``'all'``    — the segment owns the whole leaf (encode it whole);
+    * ``'skip'``   — the segment owns nothing (encode nothing at all);
+    * ``'rows'``   — stacked-layer mask whose owned L-rows can be gathered
+      into a *smaller* wire buffer without changing any wire row: only when
+      the compressor quantizes per last-axis row (``kind='quant'`` +
+      ``rowwise``) and the leaf is >= 2-D, so L-subsetting keeps every wire
+      row whole and the per-segment byte totals sum exactly to the dense
+      single-sync total;
+    * ``'legacy'`` — partial ownership that would split wire rows (global
+      quant rows span the L axis; top-k's k is rounded per leaf): keep the
+      full-size masked encode, accounted at the masked-row fraction.
+
+    Masks must be concrete (they are closure constants of the jitted round);
+    a traced mask disqualifies subsetting at the caller.
+    """
+    m = np.asarray(mask_leaf)
+    if m.ndim == 0:
+        return ("all" if m > 0 else "skip"), None
+    rows = m.reshape(m.shape[0], -1)  # stacked masks broadcast (L, 1, ..)
+    assert (rows.min(axis=1) == rows.max(axis=1)).all(), (
+        "partition mask rows must be constant along non-leading axes "
+        "(streaming_masks produces (L, 1, ...) broadcasts); a mixed row "
+        "cannot be row-subset without dropping owned entries")
+    idx = np.nonzero(rows[:, 0] > 0)[0]
+    if idx.size == m.shape[0]:
+        return "all", None
+    if idx.size == 0:
+        return "skip", None
+    if ccfg.kind == "quant" and ccfg.rowwise and len(leaf_shape) >= 2:
+        return "rows", idx
+    return "legacy", None
 
 
 def masked_update(mask: PyTree, new: PyTree, old: PyTree) -> PyTree:

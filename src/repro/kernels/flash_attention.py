@@ -1,0 +1,412 @@
+"""Blocked Pallas flash-attention — the training-hot-path kernel.
+
+Every MuLoCo round runs K workers x H inner steps of transformer
+forward/backward, so attention dominates the engine's roofline at production
+sequence lengths. This kernel is the fused-SRAM answer (Dao et al., 2022,
+lowered TPU-style a la the maxtext block kernels), following the same
+pattern the repo already uses for Newton-Schulz (``kernels/matmul.py``) and
+quantization (``kernels/quantize.py``):
+
+* **GQA-native layout**: queries travel as ``[B*KV, S, G, hd]`` (G = H/KV
+  query heads per KV head), K/V as ``[B*KV, S, hd]`` — each K/V tile is
+  loaded into VMEM once per q block and shared by all G query heads, never
+  materialized H/KV times.
+* **Online softmax**: fp32 ``m``/``l``/``acc`` accumulators live in VMEM
+  scratch across the kv-block sweep; the epilogue normalizes once and also
+  emits the per-row logsumexp for the backward pass.
+* **Full-block skipping**: the grid is built from an explicit *visit
+  schedule* (:func:`attention_schedule`) carried in via scalar prefetch —
+  kv blocks entirely above the causal diagonal or outside the sliding
+  window are **never visited** (not merely masked), so the causal grid does
+  ~half the work and a sliding-window grid O(window/S) of it. The schedule
+  is plain Python over static shapes, so tests assert the visit count on
+  the grid itself, not on timing.
+* **Flash-style custom VJP**: the backward recomputes per-block
+  probabilities from the saved logsumexp (O(S) residuals: q, k, v, o, lse —
+  never an [S, S] tensor), matching the ``jax.checkpoint`` contract of the
+  XLA blockwise fallback. Two kernels: a q-major sweep for dq and a
+  kv-major sweep for dk/dv, both on the same skip schedule.
+
+Like the other kernels, this runs ``interpret=True`` off-TPU (the CPU test
+target); the XLA path (``attn_impl='xla'``) remains the default under
+GSPMD because Pallas calls carry no partitioning rules.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -2.0e38
+DEFAULT_BLOCK_Q = 512
+DEFAULT_BLOCK_KV = 1024
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+# ---------------------------------------------------------------------------
+# The visit schedule: which (q-block, kv-block) pairs the grid executes.
+# ---------------------------------------------------------------------------
+
+
+def _block_visited(qi: int, kj: int, block_q: int, block_kv: int,
+                   causal: bool, window: int) -> bool:
+    """True when block (qi, kj) contains any unmasked (row, col) pair."""
+    if causal and kj * block_kv > qi * block_q + block_q - 1:
+        return False  # entirely above the diagonal
+    if window and (qi * block_q) - (kj * block_kv + block_kv - 1) >= window:
+        return False  # entirely left of the sliding window
+    return True
+
+
+def attention_schedule(nq: int, nkv: int, block_q: int, block_kv: int,
+                       causal: bool, window: int,
+                       skip: bool = True) -> list[tuple[int, int]]:
+    """q-major list of visited (q-block, kv-block) pairs — this IS the grid.
+
+    ``skip=False`` returns the full nq x nkv sweep (the no-skip oracle the
+    block-skip tests compare against). For causal attention with
+    ``block_q <= block_kv`` the visited count is at most
+    ``nq*nkv/2 + nq`` — asserted here so every kernel launch proves its own
+    grid bound.
+    """
+    pairs = [(qi, kj) for qi in range(nq) for kj in range(nkv)
+             if not skip or _block_visited(qi, kj, block_q, block_kv, causal, window)]
+    if skip and causal and not window and block_q <= block_kv:
+        assert len(pairs) <= nq * nkv // 2 + nq, (len(pairs), nq, nkv)
+    return pairs
+
+
+def visited_kv_range(qi: int, nkv: int, block_q: int, block_kv: int,
+                     causal: bool, window: int) -> tuple[int, int]:
+    """Contiguous [lo, hi) kv-block range q-block ``qi`` must visit.
+
+    Causal masking bounds ``hi`` (diagonal), the sliding window bounds
+    ``lo``; both are static, so the XLA blockwise fallback scans exactly
+    this range per q block.
+    """
+    visited = [kj for kj in range(nkv)
+               if _block_visited(qi, kj, block_q, block_kv, causal, window)]
+    assert visited, (qi, nkv, block_q, block_kv, causal, window)
+    assert visited == list(range(visited[0], visited[-1] + 1)), "range not contiguous"
+    return visited[0], visited[-1] + 1
+
+
+def clamp_block(block: int, S: int) -> int:
+    """A divisor of S that is <= block, found by halving — terminates at
+    b=1 for any S (S % 1 == 0), so odd sequence lengths fall back to
+    unit blocks rather than failing."""
+    b = max(1, min(block, S))
+    while S % b:
+        b //= 2
+    return b
+
+
+def visited_fraction(S: int, block_q: int, block_kv: int,
+                     causal: bool, window: int) -> float:
+    """Fraction of the nq x nkv block grid the schedule visits — the
+    roofline's attention-flops discount for both attention impls."""
+    bq, bkv = clamp_block(block_q, S), clamp_block(block_kv, S)
+    nq, nkv = S // bq, S // bkv
+    return len(attention_schedule(nq, nkv, bq, bkv, causal, window)) / (nq * nkv)
+
+
+@functools.lru_cache(maxsize=None)
+def _sched_array(nq: int, nkv: int, block_q: int, block_kv: int,
+                 causal: bool, window: int, kv_major: bool,
+                 skip: bool) -> np.ndarray:
+    """int32 [n, 4] rows (qi, kj, first, last) for the scalar-prefetch grid.
+
+    q-major order for the forward/dq sweeps (first/last flag the edges of
+    each q block's kv run); kv-major for the dk/dv sweep (flags per kv
+    block's q run).
+    """
+    pairs = attention_schedule(nq, nkv, block_q, block_kv, causal, window,
+                               skip=skip)
+    group = 1 if kv_major else 0
+    if kv_major:
+        pairs = sorted(pairs, key=lambda p: (p[1], p[0]))
+    sched = np.zeros((len(pairs), 4), np.int32)
+    for g, (qi, kj) in enumerate(pairs):
+        sched[g, 0], sched[g, 1] = qi, kj
+        sched[g, 2] = 1 if (g == 0 or pairs[g][group] != pairs[g - 1][group]) else 0
+        sched[g, 3] = 1 if (g == len(pairs) - 1
+                            or pairs[g][group] != pairs[g + 1][group]) else 0
+    return sched
+
+
+# ---------------------------------------------------------------------------
+# Kernels (q [BKV, S, G, hd]; k/v [BKV, S, hd]; fp32 accumulation in VMEM)
+# ---------------------------------------------------------------------------
+
+
+def _mask_and_positions(qi, kj, bq, bkv, G, causal, window):
+    """Unmasked-entry predicate for the [bq*G, bkv] score tile."""
+    rows = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq * G, bkv), 0) // G
+    cols = kj * bkv + jax.lax.broadcasted_iota(jnp.int32, (bq * G, bkv), 1)
+    mask = jnp.ones((bq * G, bkv), bool)
+    if causal:
+        mask &= rows >= cols
+    if window:
+        mask &= rows - cols < window
+    return mask
+
+
+def _scores(q_ref, k_ref, bq, G, hd, scale):
+    q = q_ref[0].reshape(bq * G, hd).astype(jnp.float32)
+    k = k_ref[0].astype(jnp.float32)
+    return jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                               preferred_element_type=jnp.float32) * scale
+
+
+def _fwd_kernel(sched_ref, q_ref, k_ref, v_ref, o_ref, lse_ref,
+                m_scr, l_scr, acc_scr, *, bq, bkv, G, hd, causal, window, scale):
+    g = pl.program_id(1)
+    qi, kj = sched_ref[g, 0], sched_ref[g, 1]
+
+    @pl.when(sched_ref[g, 2] == 1)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    s = _scores(q_ref, k_ref, bq, G, hd, scale)
+    mask = _mask_and_positions(qi, kj, bq, bkv, G, causal, window)
+    s = jnp.where(mask, s, NEG_INF)
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    # explicit mask (not just exp of NEG_INF): keeps fully-masked blocks at
+    # exactly zero contribution, which is what makes skipped == visited
+    # bitwise (tests/test_attention.py::test_block_skipping_is_exact)
+    p = jnp.where(mask, jnp.exp(s - m_new), 0.0)
+    corr = jnp.exp(m_prev - m_new)
+    l_new = l_scr[...] * corr + jnp.sum(p, axis=-1, keepdims=True)
+    v = v_ref[0].astype(jnp.float32)
+    acc_new = acc_scr[...] * corr + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_scr[...] = m_new
+    l_scr[...] = l_new
+    acc_scr[...] = acc_new
+
+    @pl.when(sched_ref[g, 3] == 1)
+    def _epilogue():
+        l = jnp.maximum(l_new, 1e-30)
+        o_ref[0] = (acc_new / l).reshape(bq, G, hd).astype(o_ref.dtype)
+        lse_ref[0] = (m_new + jnp.log(l)).reshape(bq, G)
+
+
+def _probs(sched_ref, q_ref, k_ref, lse_ref, g, *, bq, bkv, G, hd,
+           causal, window, scale):
+    """Recompute the [bq*G, bkv] probability tile from the saved logsumexp."""
+    qi, kj = sched_ref[g, 0], sched_ref[g, 1]
+    s = _scores(q_ref, k_ref, bq, G, hd, scale)
+    mask = _mask_and_positions(qi, kj, bq, bkv, G, causal, window)
+    lse = lse_ref[0].reshape(bq * G, 1)
+    return jnp.where(mask, jnp.exp(s - lse), 0.0)
+
+
+def _dq_kernel(sched_ref, q_ref, k_ref, v_ref, do_ref, lse_ref, dl_ref,
+               dq_ref, dq_scr, *, bq, bkv, G, hd, causal, window, scale):
+    g = pl.program_id(1)
+
+    @pl.when(sched_ref[g, 2] == 1)
+    def _init():
+        dq_scr[...] = jnp.zeros_like(dq_scr)
+
+    p = _probs(sched_ref, q_ref, k_ref, lse_ref, g, bq=bq, bkv=bkv, G=G,
+               hd=hd, causal=causal, window=window, scale=scale)
+    do = do_ref[0].reshape(bq * G, hd).astype(jnp.float32)
+    v = v_ref[0].astype(jnp.float32)
+    dp = jax.lax.dot_general(do, v, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    ds = p * (dp - dl_ref[0].reshape(bq * G, 1))
+    k = k_ref[0].astype(jnp.float32)
+    dq_scr[...] += scale * jax.lax.dot_general(
+        ds, k, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+    @pl.when(sched_ref[g, 3] == 1)
+    def _epilogue():
+        dq_ref[0] = dq_scr[...].reshape(bq, G, hd).astype(dq_ref.dtype)
+
+
+def _dkv_kernel(sched_ref, q_ref, k_ref, v_ref, do_ref, lse_ref, dl_ref,
+                dk_ref, dv_ref, dk_scr, dv_scr, *, bq, bkv, G, hd,
+                causal, window, scale):
+    g = pl.program_id(1)
+
+    @pl.when(sched_ref[g, 2] == 1)
+    def _init():
+        dk_scr[...] = jnp.zeros_like(dk_scr)
+        dv_scr[...] = jnp.zeros_like(dv_scr)
+
+    p = _probs(sched_ref, q_ref, k_ref, lse_ref, g, bq=bq, bkv=bkv, G=G,
+               hd=hd, causal=causal, window=window, scale=scale)
+    do = do_ref[0].reshape(bq * G, hd).astype(jnp.float32)
+    v = v_ref[0].astype(jnp.float32)
+    dv_scr[...] += jax.lax.dot_general(p, do, (((0,), (0,)), ((), ())),
+                                       preferred_element_type=jnp.float32)
+    dp = jax.lax.dot_general(do, v, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    ds = p * (dp - dl_ref[0].reshape(bq * G, 1))
+    q = q_ref[0].reshape(bq * G, hd).astype(jnp.float32)
+    dk_scr[...] += scale * jax.lax.dot_general(
+        ds, q, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+    @pl.when(sched_ref[g, 3] == 1)
+    def _epilogue():
+        dk_ref[0] = dk_scr[...].astype(dk_ref.dtype)
+        dv_ref[0] = dv_scr[...].astype(dv_ref.dtype)
+
+
+# ---------------------------------------------------------------------------
+# pallas_call wrappers
+# ---------------------------------------------------------------------------
+
+
+def _grid_spec(sched: np.ndarray, BKV: int, bq: int, bkv: int, G: int,
+               hd: int, extra_in: list, extra_out: list, scratch: list):
+    """PrefetchScalarGridSpec shared by all three sweeps: the schedule rides
+    as scalar prefetch and the index maps read (qi, kj) off it."""
+    q_spec = pl.BlockSpec((1, bq, G, hd), lambda b, g, s: (b, s[g, 0], 0, 0))
+    kv_spec = pl.BlockSpec((1, bkv, hd), lambda b, g, s: (b, s[g, 1], 0))
+    return pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(BKV, sched.shape[0]),
+        in_specs=[q_spec, kv_spec, kv_spec, *extra_in],
+        out_specs=extra_out,
+        scratch_shapes=scratch,
+    )
+
+
+def _fwd(q, k, v, *, causal, window, bq, bkv, scale, interpret, skip):
+    BKV, S, G, hd = q.shape
+    nq, nkv = S // bq, S // bkv
+    sched = _sched_array(nq, nkv, bq, bkv, causal, window, False, skip)
+    kernel = functools.partial(_fwd_kernel, bq=bq, bkv=bkv, G=G, hd=hd,
+                               causal=causal, window=window, scale=scale)
+    q_out = pl.BlockSpec((1, bq, G, hd), lambda b, g, s: (b, s[g, 0], 0, 0))
+    lse_out = pl.BlockSpec((1, bq, G), lambda b, g, s: (b, s[g, 0], 0))
+    grid_spec = _grid_spec(
+        sched, BKV, bq, bkv, G, hd, extra_in=[],
+        extra_out=[q_out, lse_out],
+        scratch=[pltpu.VMEM((bq * G, 1), jnp.float32),
+                 pltpu.VMEM((bq * G, 1), jnp.float32),
+                 pltpu.VMEM((bq * G, hd), jnp.float32)])
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[jax.ShapeDtypeStruct((BKV, S, G, hd), q.dtype),
+                   jax.ShapeDtypeStruct((BKV, S, G), jnp.float32)],
+        interpret=interpret,
+    )(jnp.asarray(sched), q, k, v)
+
+
+def _bwd(q, k, v, o, lse, do, *, causal, window, bq, bkv, scale, interpret,
+         skip):
+    BKV, S, G, hd = q.shape
+    nq, nkv = S // bq, S // bkv
+    # dl = rowsum(do * o): the only extra residual the flash backward needs
+    dl = jnp.sum(do.astype(jnp.float32) * o.astype(jnp.float32), axis=-1)
+    do_spec = pl.BlockSpec((1, bq, G, hd), lambda b, g, s: (b, s[g, 0], 0, 0))
+    row_spec = pl.BlockSpec((1, bq, G), lambda b, g, s: (b, s[g, 0], 0))
+    kv_out = pl.BlockSpec((1, bkv, hd), lambda b, g, s: (b, s[g, 1], 0))
+    kw = dict(bq=bq, bkv=bkv, G=G, hd=hd, causal=causal, window=window,
+              scale=scale)
+
+    sched_q = _sched_array(nq, nkv, bq, bkv, causal, window, False, skip)
+    dq = pl.pallas_call(
+        functools.partial(_dq_kernel, **kw),
+        grid_spec=_grid_spec(
+            sched_q, BKV, bq, bkv, G, hd,
+            extra_in=[do_spec, row_spec, row_spec],
+            extra_out=[do_spec],
+            scratch=[pltpu.VMEM((bq * G, hd), jnp.float32)]),
+        out_shape=[jax.ShapeDtypeStruct((BKV, S, G, hd), q.dtype)],
+        interpret=interpret,
+    )(jnp.asarray(sched_q), q, k, v, do, lse, dl)[0]
+
+    sched_kv = _sched_array(nq, nkv, bq, bkv, causal, window, True, skip)
+    dk, dv = pl.pallas_call(
+        functools.partial(_dkv_kernel, **kw),
+        grid_spec=_grid_spec(
+            sched_kv, BKV, bq, bkv, G, hd,
+            extra_in=[do_spec, row_spec, row_spec],
+            extra_out=[kv_out, kv_out],
+            scratch=[pltpu.VMEM((bkv, hd), jnp.float32),
+                     pltpu.VMEM((bkv, hd), jnp.float32)]),
+        out_shape=[jax.ShapeDtypeStruct((BKV, S, hd), k.dtype),
+                   jax.ShapeDtypeStruct((BKV, S, hd), v.dtype)],
+        interpret=interpret,
+    )(jnp.asarray(sched_kv), q, k, v, do, lse, dl)
+    return dq, dk, dv
+
+
+@functools.lru_cache(maxsize=None)
+def _flash_fn(causal: bool, window: int, bq: int, bkv: int, scale: float,
+              interpret: bool, skip: bool):
+    """custom_vjp'd [BKV, S, G, hd] attention for one static config."""
+
+    @jax.custom_vjp
+    def fn(q, k, v):
+        return _fwd(q, k, v, causal=causal, window=window, bq=bq, bkv=bkv,
+                    scale=scale, interpret=interpret, skip=skip)[0]
+
+    def fwd(q, k, v):
+        o, lse = _fwd(q, k, v, causal=causal, window=window, bq=bq, bkv=bkv,
+                      scale=scale, interpret=interpret, skip=skip)
+        return o, (q, k, v, o, lse)
+
+    def bwd(res, do):
+        q, k, v, o, lse = res
+        dq, dk, dv = _bwd(q, k, v, o, lse, do, causal=causal, window=window,
+                          bq=bq, bkv=bkv, scale=scale, interpret=interpret,
+                          skip=skip)
+        return dq, dk, dv
+
+    fn.defvjp(fwd, bwd)
+    return fn
+
+
+# ---------------------------------------------------------------------------
+# Public API (model-layer layout)
+# ---------------------------------------------------------------------------
+
+
+def gqa_flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                        causal: bool = True, window: int = 0,
+                        block_q: int = DEFAULT_BLOCK_Q,
+                        block_kv: int = DEFAULT_BLOCK_KV,
+                        interpret: bool | None = None,
+                        skip_blocks: bool = True) -> jax.Array:
+    """Fused GQA flash attention.
+
+    q ``[B, S, H, hd]``, k/v ``[B, S, KV, hd]`` -> ``[B, S, H, hd]``.
+    Rows attend by absolute sequence position (the training layout, where
+    ``positions == arange(S)``); ``window`` is the sliding-window width
+    (0 = none) and only applies with ``causal=True`` in the model layer.
+    Block sizes are clamped to divide S; ``skip_blocks=False`` runs the
+    full (unskipped) grid — the oracle of the block-skip tests.
+    """
+    B, S, H, hd = q.shape
+    KV = k.shape[2]
+    assert H % KV == 0, (H, KV)
+    G = H // KV
+    bq = clamp_block(block_q, S)
+    bkv = clamp_block(block_kv, S)
+    if interpret is None:
+        interpret = _interpret()
+    scale = 1.0 / math.sqrt(hd)
+    qg = q.reshape(B, S, KV, G, hd).transpose(0, 2, 1, 3, 4).reshape(B * KV, S, G, hd)
+    kg = k.transpose(0, 2, 1, 3).reshape(B * KV, S, hd)
+    vg = v.transpose(0, 2, 1, 3).reshape(B * KV, S, hd)
+    fn = _flash_fn(bool(causal), int(window), bq, bkv, scale, bool(interpret),
+                   bool(skip_blocks))
+    o = fn(qg, kg, vg)
+    return o.reshape(B, KV, S, G, hd).transpose(0, 2, 1, 3, 4).reshape(B, S, H, hd)

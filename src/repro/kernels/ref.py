@@ -58,6 +58,32 @@ def rowwise_dequantize_ref(codes: jax.Array, lo: jax.Array, scale: jax.Array) ->
     return lo + codes.astype(jnp.float32) * scale
 
 
+def gqa_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                      causal: bool = True, window: int = 0) -> jax.Array:
+    """Dense fp32 GQA attention oracle for the flash kernel.
+
+    q [B,S,H,hd], k/v [B,S,KV,hd] -> [B,S,H,hd]; rows attend by absolute
+    position (training layout), ``window`` = sliding-window width (0=none).
+    """
+    NEG_INF = -2.0e38
+    B, S, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    qg = q.reshape(B, S, KV, G, hd).astype(jnp.float32)
+    s = jnp.einsum("bqkgh,bskh->bkgqs", qg, k.astype(jnp.float32))
+    s = s / jnp.sqrt(jnp.float32(hd))
+    i = jnp.arange(S)
+    mask = jnp.ones((S, S), bool)
+    if causal:
+        mask &= i[:, None] >= i[None, :]
+    if window:
+        mask &= i[:, None] - i[None, :] < window
+    s = jnp.where(mask[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqs,bskh->bqkgh", p, v.astype(jnp.float32))
+    return o.reshape(B, S, H, hd).astype(q.dtype)
+
+
 def nesterov_update_ref(theta, psi, u, *, lr, momentum):
     psi32 = psi.astype(jnp.float32)
     u_new = momentum * u + lr * psi32

@@ -46,11 +46,14 @@ def run_one(arch: str, shape: str, multi_pod: bool, sync_interval: int = 30,
             verbose: bool = True, plan_filter: str | None = None,
             inner_name: str = "muon", rounds_per_dispatch: int = 4,
             compression: str = "none", bits: int = 4,
-            topk_frac: float = 0.01) -> list[dict]:
+            topk_frac: float = 0.01, attn_impl: str = "xla") -> list[dict]:
     """Lower + compile all step plans for one (arch, shape, mesh) combo."""
     from repro.core.compression import CompressionConfig
 
-    cfg0 = get_config(arch)
+    # attn_impl='xla' stays the mesh default: Pallas calls carry no GSPMD
+    # partitioning rules, so 'pallas' only lowers on single-device worlds
+    # (a failing plan is recorded as status=error, not raised)
+    cfg0 = get_config(arch).replace(attn_impl=attn_impl)
     if not shape_supported(cfg0, shape):
         return [{
             "arch": arch, "shape": shape, "mesh": "2x16x16" if multi_pod else "16x16",
@@ -140,6 +143,27 @@ def run_one(arch: str, shape: str, multi_pod: bool, sync_interval: int = 30,
                 amortize=float(plan.meta["amortize"]),
                 wire_bytes=wire_total,
             )
+            if plan.meta["kind"] in ("train", "round", "superstep", "prefill"):
+                from repro.kernels.flash_attention import (
+                    clamp_block,
+                    visited_fraction,
+                )
+
+                S = INPUT_SHAPES[shape].seq_len
+                rec["attention"] = {
+                    "impl": cfg.attn_impl,
+                    "block_q": clamp_block(cfg.attn_block_q, S),
+                    "block_kv": clamp_block(cfg.attn_block_kv, S),
+                    # block-granular execution: always for pallas, above the
+                    # threshold for xla
+                    "blockwise": bool(cfg.attn_impl == "pallas"
+                                      or S >= cfg.blockwise_threshold),
+                    # fraction of the block grid the visit schedule executes
+                    # (causal diagonal + sliding window skipping)
+                    "visited_fraction": round(visited_fraction(
+                        S, cfg.attn_block_q, cfg.attn_block_kv,
+                        causal=True, window=cfg.sliding_window), 4),
+                }
             donation = None
             if plan.name in ("round_step", "superstep"):
                 donation = round_step_donation_report(plan.args[0], hlo_text,
@@ -345,6 +369,11 @@ def build_parser() -> argparse.ArgumentParser:
                          "records measured vs modeled bytes)")
     ap.add_argument("--bits", type=int, default=4)
     ap.add_argument("--topk-frac", type=float, default=0.01)
+    ap.add_argument("--attn-impl", default="xla", choices=["xla", "pallas"],
+                    help="attention backend for the lowered plans; 'xla' is "
+                         "the GSPMD default (Pallas has no partitioning "
+                         "rules — 'pallas' records per-plan errors on "
+                         "multi-device meshes)")
     ap.add_argument("--out", default="results/dryrun")
     return ap
 
@@ -373,7 +402,8 @@ def main() -> None:
                                inner_name=args.inner,
                                rounds_per_dispatch=args.rounds_per_dispatch,
                                compression=args.compression, bits=args.bits,
-                               topk_frac=args.topk_frac)
+                               topk_frac=args.topk_frac,
+                               attn_impl=args.attn_impl)
                 with open(path, "w") as f:
                     json.dump(recs, f, indent=2)
 

@@ -76,6 +76,14 @@ def _context_struct(cfg: ModelConfig, lead: tuple[int, ...]) -> jax.ShapeDtypeSt
 
 def production_model_config(cfg: ModelConfig, shape: str) -> ModelConfig:
     cfg = config_for_shape(cfg, shape)
+    # pin the attention block sizes to divisors of the plan's sequence length
+    # so every step plan (and the roofline's visited-fraction term) sees the
+    # same static blocks the attention impls will actually run with
+    from repro.kernels.flash_attention import clamp_block
+
+    S = INPUT_SHAPES[shape].seq_len
+    cfg = cfg.replace(attn_block_q=clamp_block(cfg.attn_block_q, S),
+                      attn_block_kv=clamp_block(cfg.attn_block_kv, S))
     model = build_model(cfg)
     n = tree_count_params(jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0))))
     if n > BF16_PARAM_THRESHOLD:

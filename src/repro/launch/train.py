@@ -84,11 +84,17 @@ def train(args) -> dict:
     if args.reduced:
         cfg = reduce_config(cfg)
     # plumb --seq-len into the model config (single source of truth for the
-    # data pipeline; clamps the sliding window so W never exceeds S)
+    # data pipeline; clamps the sliding window so W never exceeds S) and the
+    # attention execution knobs (--attn-impl routes the fused Pallas
+    # flash-attention kernel exactly like --ns-impl routes Newton-Schulz)
     seq_len = args.seq_len or cfg.max_seq_len or 128
     cfg = cfg.replace(
         max_seq_len=seq_len,
         sliding_window=min(cfg.sliding_window, seq_len) if cfg.sliding_window else 0,
+        attn_impl=args.attn_impl,
+        blockwise_threshold=args.blockwise_threshold,
+        attn_block_q=args.attn_block_q,
+        attn_block_kv=args.attn_block_kv,
     )
     model = build_model(cfg)
 
@@ -203,6 +209,19 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--error-feedback", action="store_true")
     ap.add_argument("--streaming", type=int, default=1, help="J partitions")
     ap.add_argument("--ns-impl", default="jnp", choices=["jnp", "pallas"])
+    ap.add_argument("--attn-impl", default="xla", choices=["xla", "pallas"],
+                    help="attention backend: 'xla' (dense/blockwise, the "
+                         "GSPMD-safe default) or 'pallas' (fused "
+                         "flash-attention kernel; interpret mode off-TPU)")
+    ap.add_argument("--blockwise-threshold", type=int, default=4096,
+                    help="seq length at which attn_impl=xla switches from "
+                         "dense softmax to blockwise online-softmax")
+    ap.add_argument("--attn-block-q", type=int, default=512,
+                    help="attention q-block rows (both impls; clamped to "
+                         "divide the sequence)")
+    ap.add_argument("--attn-block-kv", type=int, default=1024,
+                    help="attention kv-block rows (both impls; clamped to "
+                         "divide the sequence)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--out", default="results/train")
     ap.add_argument("--resume", default=None)

@@ -76,17 +76,31 @@ def _gqa_out(probs: jax.Array, v: jax.Array) -> jax.Array:
     return o.reshape(B, Sq, KV * G * hd)
 
 
-BLOCKWISE_THRESHOLD = 4096  # sequences >= this use online-softmax blockwise attention
+# default for ModelConfig.blockwise_threshold (kept as a module constant for
+# external callers; the config field is what `attend` consults)
+BLOCKWISE_THRESHOLD = 4096
 
 
 def attend(p: PyTree, cfg: ModelConfig, x: jax.Array, positions: jax.Array,
            causal: bool = True) -> jax.Array:
     """Full-sequence self-attention (training / prefill).
 
-    For long sequences the quadratic score matrix never fits HBM, so we
-    switch to a blockwise online-softmax computation (flash-attention
-    recurrence expressed in XLA via lax.scan) — the TPU-native equivalent of
-    the fused-SRAM GPU kernel. Exact, differentiable, O(S * block) memory.
+    Backend dispatch (``cfg.attn_impl``):
+
+    * ``'pallas'`` — the fused flash-attention kernel
+      (:func:`repro.kernels.flash_attention.gqa_flash_attention`): GQA-native
+      blocked online softmax with full-block skipping and a flash-style
+      custom VJP. Interpret mode off-TPU; no GSPMD partitioning rules, so
+      the production-mesh paths keep ``'xla'``.
+    * ``'xla'`` (default) — dense O(S^2) softmax below
+      ``cfg.blockwise_threshold``; above it, a blockwise online-softmax
+      recurrence (lax.scan over kv blocks) that never materializes the
+      score matrix and skips out-of-schedule blocks
+      (:func:`repro.kernels.flash_attention.visited_kv_range`). Exact,
+      differentiable, O(S * block) memory.
+
+    Both non-dense paths assume rows attend by absolute position
+    (``positions == arange(S)``, the training/prefill layout).
     """
     q, k, v = _project_qkv(p, cfg, x, x)
     q = apply_rope(q, positions, cfg.rope_theta)
@@ -95,9 +109,19 @@ def attend(p: PyTree, cfg: ModelConfig, x: jax.Array, positions: jax.Array,
     k = shard_hint(k, "attn_kv")
     v = shard_hint(v, "attn_kv")
     S = x.shape[1]
-    if S >= BLOCKWISE_THRESHOLD:
-        o = _blockwise_attention(cfg, q, k, v, causal=causal)
-        B = x.shape[0]
+    B = x.shape[0]
+    if cfg.attn_impl == "pallas":
+        from repro.kernels.flash_attention import gqa_flash_attention
+
+        o = gqa_flash_attention(
+            q, k, v, causal=causal,
+            window=cfg.sliding_window if causal else 0,
+            block_q=cfg.attn_block_q, block_kv=cfg.attn_block_kv)
+        o = o.reshape(B, S, -1)
+    elif S >= cfg.blockwise_threshold:
+        o = _blockwise_attention(cfg, q, k, v, causal=causal,
+                                 block_q=cfg.attn_block_q,
+                                 block_kv=cfg.attn_block_kv)
         o = o.reshape(B, S, -1)
     else:
         scores = _gqa_scores(q, k).astype(jnp.float32)  # [B,KV,G,S,S]
@@ -114,13 +138,23 @@ def attend(p: PyTree, cfg: ModelConfig, x: jax.Array, positions: jax.Array,
 
 
 def _blockwise_attention(cfg: ModelConfig, q: jax.Array, k: jax.Array, v: jax.Array,
-                         causal: bool, block_q: int = 512, block_kv: int = 1024) -> jax.Array:
+                         causal: bool, block_q: int = 512, block_kv: int = 1024,
+                         skip_blocks: bool = True) -> jax.Array:
     """Exact attention via the online-softmax recurrence over KV blocks.
 
     q [B,S,H,hd], k/v [B,S,KV,hd] -> o [B,S,H,hd]. Memory per step is
-    O(block_q * block_kv) instead of O(S^2). Causal + sliding-window masks
-    are applied per block pair (full-block skipping is a §Perf candidate).
+    O(block_q * block_kv) instead of O(S^2). Each q block scans only its
+    *visit schedule* — the contiguous kv-block range below the causal
+    diagonal and inside the sliding window
+    (:func:`repro.kernels.flash_attention.visited_kv_range`, the same
+    schedule the Pallas kernel grids over) — so out-of-window and
+    above-diagonal blocks are never computed. Skipping is bitwise-exact:
+    a fully-masked block contributes exactly zero to (m, l, acc)
+    (``skip_blocks=False`` forces the full sweep; pinned by
+    tests/test_attention.py).
     """
+    from repro.kernels.flash_attention import visited_kv_range
+
     B, S, H, hd = q.shape
     KV = k.shape[2]
     G = H // KV
@@ -129,47 +163,59 @@ def _blockwise_attention(cfg: ModelConfig, q: jax.Array, k: jax.Array, v: jax.Ar
     nq, nkv = S // bq, S // bkv
     assert S % bq == 0 and S % bkv == 0
     scale = 1.0 / jnp.sqrt(jnp.asarray(hd, jnp.float32))
+    window = cfg.sliding_window if causal else 0
 
     qb = q.reshape(B, nq, bq, KV, G, hd)
     kb = k.reshape(B, nkv, bkv, KV, hd)
     vb = v.reshape(B, nkv, bkv, KV, hd)
 
-    @jax.checkpoint  # backward recomputes the kv scan: O(block) residuals,
-    def q_block(qi, q_i):  # not O(S * block) saved probs per q block
-        # q_i: [B, bq, KV, G, hd]
-        q32 = q_i.astype(jnp.float32)
+    def make_q_block(qi: int, kj_lo: int, kj_hi: int):
+        # qi and the kv range are static per q block (the schedule), so the
+        # scan trip count is exactly the visited-block count.
+        @jax.checkpoint  # backward recomputes the kv scan: O(block) residuals,
+        def q_block(q_i):  # not O(S * block) saved probs per q block
+            # q_i: [B, bq, KV, G, hd]
+            q32 = q_i.astype(jnp.float32)
 
-        def kv_step(carry, kj):
-            m, l, acc = carry
-            k_j = jax.lax.dynamic_index_in_dim(kb, kj, axis=1, keepdims=False)
-            v_j = jax.lax.dynamic_index_in_dim(vb, kj, axis=1, keepdims=False)
-            s = jnp.einsum("bqkgh,bskh->bkgqs", q32, k_j.astype(jnp.float32)) * scale
-            rows = qi * bq + jnp.arange(bq)
-            cols = kj * bkv + jnp.arange(bkv)
-            mask = jnp.ones((bq, bkv), bool)
-            if causal:
-                mask &= rows[:, None] >= cols[None, :]
-            if cfg.sliding_window:
-                mask &= rows[:, None] - cols[None, :] < cfg.sliding_window
-            s = jnp.where(mask[None, None, None], s, NEG_INF)
-            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
-            p = jnp.exp(s - m_new[..., None])
-            corr = jnp.exp(m - m_new)
-            l_new = l * corr + jnp.sum(p, axis=-1)
-            acc_new = acc * corr[..., None] + jnp.einsum(
-                "bkgqs,bskh->bkgqh", p, v_j.astype(jnp.float32))
-            return (m_new, l_new, acc_new), None
+            def kv_step(carry, kj):
+                m, l, acc = carry
+                k_j = jax.lax.dynamic_index_in_dim(kb, kj, axis=1, keepdims=False)
+                v_j = jax.lax.dynamic_index_in_dim(vb, kj, axis=1, keepdims=False)
+                s = jnp.einsum("bqkgh,bskh->bkgqs", q32, k_j.astype(jnp.float32)) * scale
+                rows = qi * bq + jnp.arange(bq)
+                cols = kj * bkv + jnp.arange(bkv)
+                mask = jnp.ones((bq, bkv), bool)
+                if causal:
+                    mask &= rows[:, None] >= cols[None, :]
+                if window:  # sliding window only applies under causal,
+                    mask &= rows[:, None] - cols[None, :] < window
+                    # matching the dense and pallas paths (and the schedule)
+                s = jnp.where(mask[None, None, None], s, NEG_INF)
+                m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+                p = jnp.exp(s - m_new[..., None])
+                corr = jnp.exp(m - m_new)
+                l_new = l * corr + jnp.sum(p, axis=-1)
+                acc_new = acc * corr[..., None] + jnp.einsum(
+                    "bkgqs,bskh->bkgqh", p, v_j.astype(jnp.float32))
+                return (m_new, l_new, acc_new), None
 
-        m0 = jnp.full((B, KV, G, bq), NEG_INF, jnp.float32)
-        l0 = jnp.zeros((B, KV, G, bq), jnp.float32)
-        a0 = jnp.zeros((B, KV, G, bq, hd), jnp.float32)
-        (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0), jnp.arange(nkv))
-        out = acc / jnp.maximum(l, 1e-30)[..., None]  # [B,KV,G,bq,hd]
-        return jnp.moveaxis(out, 3, 1)  # [B,bq,KV,G,hd]
+            m0 = jnp.full((B, KV, G, bq), NEG_INF, jnp.float32)
+            l0 = jnp.zeros((B, KV, G, bq), jnp.float32)
+            a0 = jnp.zeros((B, KV, G, bq, hd), jnp.float32)
+            (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0),
+                                          jnp.arange(kj_lo, kj_hi))
+            out = acc / jnp.maximum(l, 1e-30)[..., None]  # [B,KV,G,bq,hd]
+            return jnp.moveaxis(out, 3, 1)  # [B,bq,KV,G,hd]
 
-    outs = jax.lax.map(lambda i: q_block(i, qb[:, i].reshape(B, bq, KV, G, hd)), jnp.arange(nq))
+        return q_block
+
+    outs = []
+    for qi in range(nq):
+        lo, hi = ((0, nkv) if not skip_blocks else
+                  visited_kv_range(qi, nkv, bq, bkv, causal, window))
+        outs.append(make_q_block(qi, lo, hi)(qb[:, qi]))
     # outs: [nq, B, bq, KV, G, hd] -> [B, S, H, hd]
-    o = jnp.moveaxis(outs, 0, 1).reshape(B, S, KV, G, hd).astype(q.dtype)
+    o = jnp.moveaxis(jnp.stack(outs), 0, 1).reshape(B, S, KV, G, hd).astype(q.dtype)
     return o.reshape(B, S, H, hd)
 
 

@@ -65,6 +65,14 @@ class ModelConfig:
     n_encoder_layers: int = 0
     # attention variant
     sliding_window: int = 0  # 0 = full causal attention
+    # attention execution backend: 'xla' (dense below blockwise_threshold,
+    # online-softmax blockwise above — the GSPMD-safe default) or 'pallas'
+    # (fused flash-attention kernel, interpret mode off-TPU; no GSPMD
+    # partitioning rules, single-device/per-core only)
+    attn_impl: str = "xla"
+    blockwise_threshold: int = 4096  # seqs >= this switch xla to blockwise
+    attn_block_q: int = 512  # q-block rows per attention tile
+    attn_block_kv: int = 1024  # kv-block rows per attention tile
     # training sequence length (0 = unspecified). The launchers plumb
     # --seq-len here so the model config is the single source of truth for
     # the data pipeline, and the sliding window is clamped to it.

@@ -21,7 +21,13 @@ from repro.models.common import ModelConfig
 def _attn_flops(cfg: ModelConfig, S: int, T: int, kv_len: int | None = None) -> float:
     """Forward attention flops for T query tokens (seq len S context).
 
-    kv_len overrides context length (decode: cache length; sliding window)."""
+    kv_len overrides context length (decode: cache length; sliding window).
+    Full-seq training/prefill at blockwise lengths uses the attention
+    impls' *visit schedule* (block-granular causal/sliding-window skipping,
+    shared by the Pallas flash kernel and the XLA blockwise fallback) as
+    the effective-context term, instead of the smooth ctx/2 approximation —
+    the roofline then counts exactly the score/PV blocks the kernels run.
+    """
     hd = cfg.hd
     H, KV = cfg.n_heads, cfg.n_kv_heads
     d = cfg.d_model
@@ -29,8 +35,20 @@ def _attn_flops(cfg: ModelConfig, S: int, T: int, kv_len: int | None = None) -> 
     if cfg.sliding_window:
         ctx = min(ctx, cfg.sliding_window)
     proj = 2.0 * T * d * (H * hd) + 2.0 * 2.0 * T * d * (KV * hd) + 2.0 * T * (H * hd) * d
-    # scores + weighted sum; causal averaging ~ctx/2 for full-seq fwd
-    eff_ctx = ctx / 2.0 if (T == S and not cfg.sliding_window and kv_len is None) else ctx
+    full_seq = T == S and kv_len is None
+    # the Pallas kernel runs the block schedule at every length; the XLA
+    # path only above the blockwise threshold
+    blocked = cfg.attn_impl == "pallas" or S >= cfg.blockwise_threshold
+    if full_seq and blocked:
+        from repro.kernels.flash_attention import visited_fraction
+
+        # block-granular skipping: both impls visit exactly this fraction
+        eff_ctx = S * visited_fraction(S, cfg.attn_block_q, cfg.attn_block_kv,
+                                       causal=True, window=cfg.sliding_window)
+    elif full_seq and not cfg.sliding_window:
+        eff_ctx = ctx / 2.0  # causal averaging for the dense path
+    else:
+        eff_ctx = ctx
     scores = 2.0 * T * H * hd * eff_ctx * 2.0
     return proj + scores
 

@@ -237,6 +237,146 @@ def test_measured_ratio_counts_overhead():
 
 
 # ---------------------------------------------------------------------------
+# Streaming (J>1) wire-row subsetting: segment syncs encode only their rows
+# ---------------------------------------------------------------------------
+
+
+def _stream_params():
+    return {"layers": {"w": jnp.zeros((4, 6, 8)), "b": jnp.zeros((4, 8))},
+            "embed": jnp.zeros((10, 4)), "scale": jnp.zeros((8,))}
+
+
+@pytest.mark.parametrize("cfg", [
+    CompressionConfig(kind="quant", bits=4, rowwise=True),
+    CompressionConfig(kind="quant", bits=4, rowwise=True, error_feedback=True),
+    CompressionConfig(kind="quant", bits=8),
+    CompressionConfig(kind="topk", topk_frac=0.25, collective="gather"),
+    CompressionConfig(kind="none"),
+], ids=["quant_rw", "quant_rw_ef", "quant_global", "topk", "none"])
+@pytest.mark.parametrize("J", [2, 3])
+def test_segment_sync_bytes_sum_to_dense_single_sync(cfg, J):
+    """Per-segment measured bytes must sum to the dense single-sync total —
+    the subset shapes partition the wire rows exactly."""
+    from repro.core.streaming import streaming_masks
+
+    params = _stream_params()
+    masks = streaming_masks(params, J)
+    full = measured_sync_bytes(params, cfg, 3)
+    segs = [measured_sync_bytes(params, cfg, 3, mask=m) for m in masks]
+    assert sum(segs) == full, (segs, full)
+    assert all(s < full for s in segs)  # every segment genuinely shrank
+
+
+def test_segment_sync_update_subsets_rows_exactly():
+    """For rowwise quantization the subset encode is row-independent, so the
+    segment sync must equal the legacy full-size masked encode on owned rows
+    bitwise, with psi exactly zero outside the partition and unowned EF
+    residual rows untouched."""
+    from repro.core.collectives import _leaf_wire_pipeline, segment_sync_update
+    from repro.core.streaming import streaming_masks
+
+    cfg = CompressionConfig(kind="quant", bits=4, rowwise=True,
+                            error_feedback=True)
+    K = 3
+    key = jax.random.PRNGKey(0)
+    deltas = {"layers": {"w": jax.random.normal(key, (K, 4, 6, 8))},
+              "embed": jax.random.normal(jax.random.fold_in(key, 1), (K, 10, 4))}
+    ef = jax.tree.map(
+        lambda d: jax.random.normal(jax.random.fold_in(key, 2), d.shape), deltas)
+    masks = streaming_masks({"layers": {"w": jnp.zeros((4, 6, 8))},
+                             "embed": jnp.zeros((10, 4))}, 2)
+    m = masks[0]
+    masked = jax.tree.map(lambda mm, d: mm[None] * d if mm.ndim else mm * d,
+                          m, deltas)
+
+    @jax.jit  # one program so the two pipelines CSE identically
+    def both(masked, ef):
+        psi_s, ef_s = segment_sync_update(masked, ef, m, cfg)
+        legacy = jax.tree.map(lambda d, e: _leaf_wire_pipeline(d, e, cfg),
+                              masked, ef)
+        is_pair = lambda t: isinstance(t, tuple)  # noqa: E731
+        psi_l = jax.tree.map(lambda t: t[0], legacy, is_leaf=is_pair)
+        ef_l = jax.tree.map(lambda t: t[1], legacy, is_leaf=is_pair)
+        return psi_s, ef_s, psi_l, ef_l
+
+    psi_s, ef_s, psi_l, ef_l = both(masked, ef)
+    owned = np.asarray(m["layers"]["w"]).reshape(4) > 0
+    assert owned.any() and not owned.all()
+    np.testing.assert_array_equal(np.asarray(psi_s["layers"]["w"])[owned],
+                                  np.asarray(psi_l["layers"]["w"])[owned])
+    np.testing.assert_array_equal(np.asarray(ef_s["layers"]["w"])[:, owned],
+                                  np.asarray(ef_l["layers"]["w"])[:, owned])
+    assert bool(np.all(np.asarray(psi_s["layers"]["w"])[~owned] == 0))
+    np.testing.assert_array_equal(  # unowned residual rows stay put
+        np.asarray(ef_s["layers"]["w"])[:, ~owned],
+        np.asarray(ef["layers"]["w"])[:, ~owned].astype(np.float32))
+
+
+@pytest.mark.parametrize("cfg", [
+    CompressionConfig(kind="quant", bits=4, rowwise=True, error_feedback=True),
+    CompressionConfig(kind="quant", bits=4, rowwise=True),
+    CompressionConfig(kind="topk", topk_frac=0.25, collective="gather",
+                      error_feedback=True),
+], ids=["quant_ef", "quant", "topk_ef"])
+def test_leaf_wire_pipeline_matches_stage_chain(cfg):
+    """segment_sync_update's per-leaf pipeline must stay bitwise-identical
+    to the production worker_stage + reduce chain — if the chain's EF
+    formula or Q2 condition ever changes in one place only, this breaks."""
+    from repro.core.collectives import _leaf_wire_pipeline
+
+    K = 3
+    deltas = {"w": jax.random.normal(jax.random.PRNGKey(0), (K, 6, 8))}
+    residuals = {"w": jax.random.normal(jax.random.PRNGKey(1), (K, 6, 8))}
+    stage = (error_feedback(cfg) if cfg.error_feedback else compress(cfg))
+
+    @jax.jit  # one program so both paths CSE identically
+    def both(deltas, residuals):
+        if cfg.error_feedback:
+            comm, new_res = stage.update(deltas, residuals, None)
+        else:
+            comm, _ = stage.update(deltas, stage.init(deltas), None)
+            new_res = None
+        psi_chain = reduce_pseudogradients(comm, cfg)
+        psi_leaf, res_leaf = _leaf_wire_pipeline(
+            deltas["w"], residuals["w"] if cfg.error_feedback else None, cfg)
+        return psi_chain["w"], new_res, psi_leaf, res_leaf
+
+    psi_c, res_c, psi_l, res_l = both(deltas, residuals)
+    np.testing.assert_array_equal(np.asarray(psi_c), np.asarray(psi_l))
+    if cfg.error_feedback:
+        np.testing.assert_array_equal(np.asarray(res_c["w"]),
+                                      np.asarray(res_l))
+
+
+def test_streaming_engine_round_comm_bytes_sum_to_dense():
+    """A J=2 round through the engine: the summed per-segment comm_bytes in
+    the round metric equal the dense single-sync bytes, and training runs."""
+    from repro.data import DataConfig, MarkovStream, batches_for_round
+    from repro.engine import TrainEngine
+    from repro.models import ModelConfig, build_model
+    from repro.optim import OptimizerConfig
+
+    cfg = ModelConfig(arch_type="dense", n_layers=2, d_model=32, n_heads=2,
+                      n_kv_heads=2, d_ff=64, vocab=64, remat=False,
+                      dtype="float32", qk_norm=True)
+    model = build_model(cfg)
+    comp = CompressionConfig(kind="quant", bits=4, rowwise=True,
+                             error_feedback=True)
+    dcfg = DiLoCoConfig(n_workers=2, sync_interval=2, inner_name="adamw",
+                        compression=comp, streaming_partitions=2)
+    engine = TrainEngine(model, dcfg, OptimizerConfig(lr=1e-2, weight_decay=0.0))
+    state = engine.init(jax.random.PRNGKey(0))
+    params_abs = jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+    dense_total = measured_sync_bytes(params_abs, comp, 2)
+
+    stream = MarkovStream(DataConfig(vocab=64, seq_len=16, batch_per_worker=2,
+                                     n_workers=2, seed=3))
+    state, info = engine.step(state, batches_for_round(stream, 0, 2))
+    assert float(info["comm_bytes"]) == dense_total
+    assert np.isfinite(float(info["loss"].mean()))
+
+
+# ---------------------------------------------------------------------------
 # Engine integration: per-round comm_bytes lands in the metrics/history
 # ---------------------------------------------------------------------------
 
