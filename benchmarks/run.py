@@ -29,6 +29,7 @@ def all_benchmarks():
         "fig5": pf.bench_fig5_frobenius,
         "prop42": pf.bench_prop42_identity,
         "train_throughput": sy.bench_train_throughput,
+        "serve_bench": sy.bench_serve_throughput,
         "optimizer_bench": sy.bench_optimizer_sweep,
         "compression_bench": sy.bench_compression_sweep,
         "tab10": sy.bench_tab10_wallclock,

@@ -1,13 +1,16 @@
-"""Serve a small model with batched requests through the decode path
-(prefill + sampled generation against a shared KV cache).
+"""Serve small models through both engines: the paged-KV continuous-batching
+engine (dense attention families) and the dense-cache baseline (recurrent
+families, which keep per-step state instead of a KV cache).
 
     PYTHONPATH=src python examples/serve_batched.py
 """
 import jax
+import numpy as np
 
 from repro.configs import get_config, reduce_config
 from repro.launch.serve import generate
 from repro.models import build_model
+from repro.serving import PagedEngine, Request
 
 for arch in ("smollm-135m", "mamba2-370m", "zamba2-2.7b"):
     cfg = reduce_config(get_config(arch))
@@ -15,6 +18,18 @@ for arch in ("smollm-135m", "mamba2-370m", "zamba2-2.7b"):
     rng = jax.random.PRNGKey(0)
     params = model.init(rng)
     prompts = jax.random.randint(rng, (4, 8), 0, cfg.vocab)  # 4 concurrent requests
-    toks = generate(model, params, prompts, max_new=16, temperature=0.8, rng=rng)
-    print(f"{arch:14s} ({cfg.arch_type}): generated {toks.shape}, "
-          f"sample={toks[0, 8:16].tolist()}")
+
+    if model.supports_paged_decode:
+        engine = PagedEngine(model, params, slots=2, page_size=8, max_pages=32,
+                             decode_steps_per_dispatch=4, temperature=0.8, rng=rng)
+        # stagger arrivals: two requests join mid-flight (continuous batching)
+        reqs = [Request(f"r{i}", tuple(int(t) for t in row), 16, arrival=i)
+                for i, row in enumerate(np.asarray(prompts))]
+        out = engine.run(reqs)
+        print(f"{arch:14s} ({cfg.arch_type}, paged): "
+              f"{ {r: len(t) for r, t in out.items()} } tokens, "
+              f"sample={out['r0'][:8].tolist()}")
+    else:
+        toks = generate(model, params, prompts, max_new=16, temperature=0.8, rng=rng)
+        print(f"{arch:14s} ({cfg.arch_type}, naive): generated {toks.shape}, "
+              f"sample={toks[0, 8:16].tolist()}")

@@ -375,6 +375,146 @@ def _flash_fn(causal: bool, window: int, bq: int, bkv: int, scale: float,
 
 
 # ---------------------------------------------------------------------------
+# Paged decode attention (the serving hot path)
+# ---------------------------------------------------------------------------
+#
+# Serving keeps KV in a fixed pool of fixed-size pages
+# (``src/repro/serving/paging.py``); a sequence owns an ordered page list and
+# the decode step attends one q token against its own pages only. The page
+# table plays exactly the role the visit schedule plays in training: it is a
+# host-built int32 array, carried in via scalar prefetch, whose entries the
+# index maps read to decide which KV tile each grid step loads — pages are
+# the visit schedule one level up. Page 0 is the reserved *null page*
+# (garbage scratch): table rows are 0-padded past a sequence's allocation,
+# and every slot the mask rules out contributes exactly zero (the same
+# explicit p-masking trick that makes block skipping bitwise inert).
+
+
+def _paged_kernel(tbl_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
+                  m_scr, l_scr, acc_scr, *, ps, G, hd, window, scale, npages):
+    b, j = pl.program_id(0), pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0].astype(jnp.float32)  # [G, hd]
+    k = k_ref[0, 0].astype(jnp.float32)  # [ps, hd]
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    # positions stored in page j of this sequence; the current token (at
+    # position length-1) is already written, so valid = pos < length, plus
+    # the sliding window lower bound when set
+    pos = j * ps + jax.lax.broadcasted_iota(jnp.int32, (1, ps), 1)
+    length = len_ref[b]
+    mask = pos < length
+    if window:
+        mask &= pos > length - 1 - window
+    s = jnp.where(mask, s, NEG_INF)
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    p = jnp.where(mask, jnp.exp(s - m_new), 0.0)
+    corr = jnp.exp(m_prev - m_new)
+    l_new = l_scr[...] * corr + jnp.sum(p, axis=-1, keepdims=True)
+    v = v_ref[0, 0].astype(jnp.float32)
+    acc_new = acc_scr[...] * corr + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_scr[...] = m_new
+    l_scr[...] = l_new
+    acc_scr[...] = acc_new
+
+    @pl.when(j == npages - 1)
+    def _epilogue():
+        o_ref[0, 0] = (acc_new / jnp.maximum(l_new, 1e-30)).astype(o_ref.dtype)
+
+
+def _paged_decode_pallas(q, k_pages, v_pages, page_table, lengths, *,
+                         window, interpret):
+    B, KV, G, hd = q.shape
+    ps = k_pages.shape[1]
+    npages = page_table.shape[1]
+    scale = 1.0 / math.sqrt(hd)
+    # kernel layout: pages travel [n_pages, KV, ps, hd] so the (page, head)
+    # tile is contiguous per grid step
+    kp = k_pages.transpose(0, 2, 1, 3)
+    vp = v_pages.transpose(0, 2, 1, 3)
+    q_spec = pl.BlockSpec((1, 1, G, hd), lambda b, h, j, tbl, lens: (b, h, 0, 0))
+    kv_spec = pl.BlockSpec((1, 1, ps, hd),
+                           lambda b, h, j, tbl, lens: (tbl[b, j], h, 0, 0))
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, KV, npages),
+        in_specs=[q_spec, kv_spec, kv_spec],
+        out_specs=[q_spec],
+        scratch_shapes=[pltpu.VMEM((G, 1), jnp.float32),
+                        pltpu.VMEM((G, 1), jnp.float32),
+                        pltpu.VMEM((G, hd), jnp.float32)])
+    kernel = functools.partial(_paged_kernel, ps=ps, G=G, hd=hd,
+                               window=window, scale=scale, npages=npages)
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[jax.ShapeDtypeStruct((B, KV, G, hd), q.dtype)],
+        interpret=interpret,
+    )(page_table.astype(jnp.int32), lengths.astype(jnp.int32), q, kp, vp)
+    return out[0]
+
+
+def _paged_decode_xla(q, k_pages, v_pages, page_table, lengths, *, window):
+    """Gather fallback: dense jnp ops only, so GSPMD plans still lower."""
+    B, KV, G, hd = q.shape
+    ps = k_pages.shape[1]
+    npages = page_table.shape[1]
+    # [B, npages, ps, KV, hd] -> [B, npages*ps, KV, hd]
+    kg = k_pages[page_table].reshape(B, npages * ps, KV, hd)
+    vg = v_pages[page_table].reshape(B, npages * ps, KV, hd)
+    s = jnp.einsum("bkgh,bskh->bkgs", q.astype(jnp.float32),
+                   kg.astype(jnp.float32)) / math.sqrt(hd)
+    pos = jnp.arange(npages * ps)[None, :]
+    mask = pos < lengths[:, None]
+    if window:
+        mask &= pos > (lengths[:, None] - 1 - window)
+    s = jnp.where(mask[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1).astype(q.dtype)
+    return jnp.einsum("bkgs,bskh->bkgh", p, vg)
+
+
+def paged_decode_attention(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
+                           page_table: jax.Array, lengths: jax.Array, *,
+                           window: int = 0, impl: str = "xla",
+                           interpret: bool | None = None) -> jax.Array:
+    """One-token GQA attention against a paged KV cache.
+
+    q ``[B, H, hd]`` (the new token per sequence slot, RoPE applied);
+    k/v pages ``[n_pool_pages, page_size, KV, hd]``; ``page_table``
+    ``[B, max_pages]`` int32 page ids per slot (0 = the reserved null page,
+    padding past the allocation); ``lengths`` ``[B]`` int32 sequence lengths
+    *including* the current token (already written to its page).
+    Returns ``[B, H, hd]``.
+
+    ``impl='pallas'`` grids over (B, KV, max_pages) with the page table as
+    scalar prefetch — each grid step DMAs exactly one owned page;
+    ``impl='xla'`` is the dense-gather fallback that lowers under GSPMD.
+    """
+    B, H, hd = q.shape
+    KV = k_pages.shape[2]
+    assert H % KV == 0, (H, KV)
+    G = H // KV
+    qg = q.reshape(B, KV, G, hd)
+    if impl == "pallas":
+        if interpret is None:
+            interpret = _interpret()
+        o = _paged_decode_pallas(qg, k_pages, v_pages, page_table, lengths,
+                                 window=window, interpret=interpret)
+    else:
+        o = _paged_decode_xla(qg, k_pages, v_pages, page_table, lengths,
+                              window=window)
+    return o.reshape(B, H, hd)
+
+
+# ---------------------------------------------------------------------------
 # Public API (model-layer layout)
 # ---------------------------------------------------------------------------
 

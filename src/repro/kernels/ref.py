@@ -84,6 +84,38 @@ def gqa_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
     return o.reshape(B, S, H, hd).astype(q.dtype)
 
 
+def paged_attention_ref(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
+                        page_table: jax.Array, lengths: jax.Array, *,
+                        window: int = 0) -> jax.Array:
+    """Dense fp32 oracle for the paged decode kernel.
+
+    q [B,H,hd] (one new token per slot); k/v pages [P, ps, KV, hd];
+    page_table [B, max_pages] int32; lengths [B] int32 include the current
+    token. Gathers each slot's pages into a contiguous [len, KV, hd] view
+    and runs plain masked GQA attention per slot.
+    """
+    NEG_INF = -2.0e38
+    B, H, hd = q.shape
+    ps = k_pages.shape[1]
+    KV = k_pages.shape[2]
+    G = H // KV
+    npages = page_table.shape[1]
+    outs = []
+    for b in range(B):
+        kg = k_pages[page_table[b]].reshape(npages * ps, KV, hd).astype(jnp.float32)
+        vg = v_pages[page_table[b]].reshape(npages * ps, KV, hd).astype(jnp.float32)
+        qb = q[b].reshape(KV, G, hd).astype(jnp.float32)
+        s = jnp.einsum("kgh,skh->kgs", qb, kg) / jnp.sqrt(jnp.float32(hd))
+        pos = jnp.arange(npages * ps)
+        mask = pos < lengths[b]
+        if window:
+            mask &= pos > lengths[b] - 1 - window
+        s = jnp.where(mask[None, None, :], s, NEG_INF)
+        p = jax.nn.softmax(s, axis=-1)
+        outs.append(jnp.einsum("kgs,skh->kgh", p, vg).reshape(H, hd))
+    return jnp.stack(outs).astype(q.dtype)
+
+
 def nesterov_update_ref(theta, psi, u, *, lr, momentum):
     psi32 = psi.astype(jnp.float32)
     u_new = momentum * u + lr * psi32

@@ -1,9 +1,19 @@
-"""Serving driver: batched prefill + decode with continuous token streaming.
+"""Serving driver: paged-KV continuous batching or the dense-cache baseline.
+
+Two engines (``--engine``):
+
+* ``paged`` — ``repro.serving.PagedEngine``: fixed pool of KV pages
+  (``--max-pages`` x ``--page-size``), continuous batching over
+  ``--slots`` batch slots, single-dispatch batched prefill, and decode
+  spans of ``--decode-steps-per-dispatch`` tokens per donated jitted
+  call. Dense/MoE attention families only.
+* ``naive`` — the seed's lockstep dense-cache loop (kept as the
+  benchmark baseline), upgraded with batched prefill and with request
+  ``context`` threaded into the cache. Serves every family, including
+  recurrent-state (ssm/hybrid) and cross-attention (audio/vlm) models.
 
 On CPU this serves reduced configs (examples/serve_batched.py); the same
-driver lowers to the production mesh for the real deployment. Demonstrates
-the full request lifecycle: prefill a batch of prompts, then step the decode
-loop with greedy/temperature sampling against the shared KV cache.
+driver lowers to the production mesh for the real deployment.
 """
 from __future__ import annotations
 
@@ -15,42 +25,49 @@ import jax.numpy as jnp
 
 from repro.configs import get_config, reduce_config
 from repro.models import build_model
+from repro.serving import PagedEngine, Request, naive_generate
 
 
 def generate(model, params, prompts: jax.Array, max_new: int, temperature: float = 0.0,
-             context: jax.Array | None = None, rng: jax.Array | None = None):
-    """prompts: [B, P] int32 -> tokens [B, P + max_new]."""
-    B, P = prompts.shape
-    cache = model.init_cache(params, B, P + max_new)
-    step = jax.jit(model.decode_step)
+             context: jax.Array | None = None, rng: jax.Array | None = None,
+             batched_prefill: bool = True):
+    """prompts: [B, P] int32 -> tokens [B, P + max_new] (dense-cache path).
 
-    # prefill by stepping the decode path (exactly the serving hot loop;
-    # exercises cache writes at every position)
-    tok = prompts[:, 0]
-    out = [tok]
-    for t in range(P + max_new - 1):
-        logits, cache = step(params, cache, tok, jnp.int32(t))
-        if t + 1 < P:
-            tok = prompts[:, t + 1]
-        else:
-            if temperature > 0:
-                rng, k = jax.random.split(rng)
-                tok = jax.random.categorical(k, logits / temperature, axis=-1).astype(jnp.int32)
-            else:
-                tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-        out.append(tok)
-    return jnp.stack(out, axis=1)
+    Kept as the stable entry point; now delegates to
+    :func:`repro.serving.naive_generate`, which threads ``context`` into
+    the cache (the previous version dropped it — audio/VLM decode ran
+    unconditioned) and prefills attention families in one dispatch.
+    """
+    return naive_generate(model, params, prompts, max_new,
+                          temperature=temperature, context=context, rng=rng,
+                          batched_prefill=batched_prefill)
 
 
-def main() -> None:
-    ap = argparse.ArgumentParser()
+def build_parser() -> argparse.ArgumentParser:
+    ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--arch", default="smollm-135m")
     ap.add_argument("--reduced", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--batch", type=int, default=4,
+                    help="number of requests (paged: admitted across --slots)")
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--max-new", type=int, default=32)
     ap.add_argument("--temperature", type=float, default=0.0)
-    args = ap.parse_args()
+    ap.add_argument("--engine", choices=["naive", "paged"], default="paged",
+                    help="paged: continuous batching over the KV page pool; "
+                         "naive: lockstep dense-cache baseline")
+    ap.add_argument("--page-size", type=int, default=16,
+                    help="KV slots per page (paged engine)")
+    ap.add_argument("--max-pages", type=int, default=128,
+                    help="total pages in the pool, incl. reserved null page 0")
+    ap.add_argument("--decode-steps-per-dispatch", type=int, default=8,
+                    help="tokens decoded per jitted dispatch (lax.scan span)")
+    ap.add_argument("--slots", type=int, default=4,
+                    help="concurrent batch slots of the paged engine")
+    return ap
+
+
+def main() -> None:
+    args = build_parser().parse_args()
 
     cfg = get_config(args.arch)
     if args.reduced:
@@ -66,12 +83,26 @@ def main() -> None:
         ctx = jnp.zeros((args.batch, cfg.n_image_tokens, cfg.d_model))
 
     t0 = time.time()
-    toks = generate(model, params, prompts, args.max_new,
-                    temperature=args.temperature, context=ctx, rng=rng)
-    dt = time.time() - t0
+    if args.engine == "paged":
+        engine = PagedEngine(
+            model, params, slots=args.slots, page_size=args.page_size,
+            max_pages=args.max_pages,
+            decode_steps_per_dispatch=args.decode_steps_per_dispatch,
+            temperature=args.temperature, rng=rng)
+        reqs = [Request(f"req{i}", tuple(int(t) for t in row), args.max_new)
+                for i, row in enumerate(jax.device_get(prompts))]
+        results = engine.run(reqs)
+        dt = time.time() - t0
+        sample = results["req0"][:8].tolist()
+    else:
+        toks = generate(model, params, prompts, args.max_new,
+                        temperature=args.temperature, context=ctx, rng=rng)
+        dt = time.time() - t0
+        sample = toks[0, args.prompt_len: args.prompt_len + 8].tolist()
     n_new = args.batch * args.max_new
-    print(f"generated {toks.shape} in {dt:.2f}s ({n_new/dt:.1f} tok/s)")
-    print("sample:", toks[0, : args.prompt_len + 8].tolist())
+    print(f"[{args.engine}] generated {n_new} tokens in {dt:.2f}s "
+          f"({n_new/dt:.1f} tok/s)")
+    print("sample:", sample)
 
 
 if __name__ == "__main__":

@@ -27,10 +27,14 @@ _FAMILIES: dict[str, dict[str, Callable]] = {
     "dense": {
         "init": lm.init_lm, "forward": lm.forward_lm,
         "init_cache": lm.init_cache_lm, "decode_step": lm.decode_step_lm,
+        "prefill_cache": lm.prefill_with_cache_lm,
+        "paged_prefill": lm.paged_prefill_lm, "paged_decode": lm.paged_decode_step_lm,
     },
     "moe": {
         "init": lm.init_lm, "forward": lm.forward_lm,
         "init_cache": lm.init_cache_lm, "decode_step": lm.decode_step_lm,
+        "prefill_cache": lm.prefill_with_cache_lm,
+        "paged_prefill": lm.paged_prefill_lm, "paged_decode": lm.paged_decode_step_lm,
     },
     "ssm": {
         "init": ssm_lm.init_ssm_lm, "forward": ssm_lm.forward_ssm_lm,
@@ -43,10 +47,12 @@ _FAMILIES: dict[str, dict[str, Callable]] = {
     "audio": {
         "init": whisper.init_whisper, "forward": whisper.forward_whisper,
         "init_cache": whisper.init_cache_whisper, "decode_step": whisper.decode_step_whisper,
+        "fill_context": whisper.fill_context_whisper,
     },
     "vlm": {
         "init": vlm.init_vlm, "forward": vlm.forward_vlm,
         "init_cache": vlm.init_cache_vlm, "decode_step": vlm.decode_step_vlm,
+        "fill_context": vlm.fill_context_vlm,
     },
 }
 
@@ -101,6 +107,46 @@ class Model:
 
     def decode_step(self, params: PyTree, cache: PyTree, token: jax.Array, pos: jax.Array):
         return self._fam["decode_step"](self.cfg, params, cache, token, pos)
+
+    def fill_context(self, params: PyTree, cache: PyTree, context: jax.Array) -> PyTree:
+        """Condition a decode cache on the request context (audio frames /
+        image patches). Families without cross-attention return the cache
+        unchanged, so serving paths can call this unconditionally."""
+        fn = self._fam.get("fill_context")
+        return fn(self.cfg, params, cache, context) if fn is not None else cache
+
+    @property
+    def supports_batched_prefill(self) -> bool:
+        """True when the family can fill a dense cache at every prompt
+        position in ONE forward dispatch (attention-cache families);
+        recurrent-state families prefill by stepping."""
+        return "prefill_cache" in self._fam
+
+    def prefill_with_cache(self, params: PyTree, cache: PyTree, tokens: jax.Array):
+        """Batched prefill: (per-position logits [B, P, V], filled cache)."""
+        return self._fam["prefill_cache"](self.cfg, params, cache, tokens)
+
+    # --- paged serving (repro.serving; dense/moe families) ---
+    @property
+    def supports_paged_decode(self) -> bool:
+        return "paged_decode" in self._fam
+
+    def init_paged_cache(self, n_pages: int, page_size: int) -> PyTree:
+        from repro.models import attention
+
+        return attention.init_paged_cache(self.cfg, n_pages, page_size,
+                                          self.cfg.n_layers)
+
+    def paged_prefill(self, params: PyTree, cache: PyTree, tokens: jax.Array,
+                      page_table: jax.Array, lengths: jax.Array):
+        return self._fam["paged_prefill"](self.cfg, params, cache, tokens,
+                                          page_table, lengths)
+
+    def paged_decode_step(self, params: PyTree, cache: PyTree, token: jax.Array,
+                          page_table: jax.Array, lengths: jax.Array,
+                          impl: str = "xla"):
+        return self._fam["paged_decode"](self.cfg, params, cache, token,
+                                         page_table, lengths, impl=impl)
 
     def prefill(self, params: PyTree, tokens: jax.Array, context: jax.Array | None = None):
         """Full-sequence forward returning last-position logits only (the

@@ -82,7 +82,7 @@ BLOCKWISE_THRESHOLD = 4096
 
 
 def attend(p: PyTree, cfg: ModelConfig, x: jax.Array, positions: jax.Array,
-           causal: bool = True) -> jax.Array:
+           causal: bool = True, return_kv: bool = False):
     """Full-sequence self-attention (training / prefill).
 
     Backend dispatch (``cfg.attn_impl``):
@@ -101,6 +101,12 @@ def attend(p: PyTree, cfg: ModelConfig, x: jax.Array, positions: jax.Array,
 
     Both non-dense paths assume rows attend by absolute position
     (``positions == arange(S)``, the training/prefill layout).
+
+    ``return_kv=True`` additionally returns the post-RoPE ``(k, v)``
+    projections ([B, S, KV, hd] each) — exactly what ``attend_decode``
+    writes into its cache per token, so a single batched prefill forward
+    can populate a KV cache at every prompt position at once (the serving
+    prefill path).
     """
     q, k, v = _project_qkv(p, cfg, x, x)
     q = apply_rope(q, positions, cfg.rope_theta)
@@ -134,7 +140,10 @@ def attend(p: PyTree, cfg: ModelConfig, x: jax.Array, positions: jax.Array,
         probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
         probs = shard_hint(probs, "attn_probs")
         o = _gqa_out(probs, v)
-    return o @ p["wo"].astype(cfg.compute_dtype)
+    out = o @ p["wo"].astype(cfg.compute_dtype)
+    if return_kv:
+        return out, (k, v)
+    return out
 
 
 def _blockwise_attention(cfg: ModelConfig, q: jax.Array, k: jax.Array, v: jax.Array,
@@ -269,6 +278,84 @@ def attend_decode(p: PyTree, cfg: ModelConfig, x: jax.Array, cache_layer: PyTree
     o = _gqa_out(probs, cv)
     out = o @ p["wo"].astype(cfg.compute_dtype)
     return out, {"k": ck, "v": cv}
+
+
+def init_paged_cache(cfg: ModelConfig, n_pages: int, page_size: int,
+                     n_layers: int, dtype=None) -> PyTree:
+    """Paged KV pool: ``n_pages`` fixed-size pages shared by all sequences.
+
+    Layout ``[L, n_pages, page_size, KV, hd]`` — the layer axis leads so the
+    decode scan threads one ``[n_pages, page_size, KV, hd]`` pool per layer,
+    mirroring :func:`init_cache`'s ``[L, B, S, KV, hd]``. Page 0 is reserved
+    as the null/garbage page (see ``repro.serving.paging``).
+    """
+    dt = dtype or cfg.compute_dtype
+    KV, hd = cfg.n_kv_heads, cfg.hd
+    return {
+        "k": jnp.zeros((n_layers, n_pages, page_size, KV, hd), dt),
+        "v": jnp.zeros((n_layers, n_pages, page_size, KV, hd), dt),
+    }
+
+
+def paged_attend_decode(p: PyTree, cfg: ModelConfig, x: jax.Array,
+                        cache_layer: PyTree, page_table: jax.Array,
+                        lengths: jax.Array, impl: str = "xla") -> tuple[jax.Array, PyTree]:
+    """Decode one token per slot against a paged KV cache (one layer).
+
+    x ``[B, 1, d]``; cache k/v ``[n_pages, page_size, KV, hd]``;
+    ``page_table`` ``[B, max_pages]`` int32 (0-padded; page 0 is the null
+    page); ``lengths`` ``[B]`` int32 — slot b's new token sits at position
+    ``lengths[b]`` (so, unlike :func:`attend_decode`, every slot has its own
+    position: continuous batching never runs in lockstep). Writes the new
+    K/V into each slot's current page, then attends over the slot's own
+    pages via :func:`repro.kernels.flash_attention.paged_decode_attention`.
+    """
+    B = x.shape[0]
+    ps = cache_layer["k"].shape[1]
+    max_pages = page_table.shape[1]
+    q, k_new, v_new = _project_qkv(p, cfg, x, x)
+    posb = lengths[:, None].astype(jnp.int32)  # [B, 1] per-slot positions
+    q = apply_rope(q, posb, cfg.rope_theta)
+    k_new = apply_rope(k_new, posb, cfg.rope_theta)
+
+    # page/slot of the new token; the min() clamp keeps slots that decode
+    # past their allocation (finished requests padding out a span) writing
+    # into the null page instead of reading out of bounds
+    page_of = jnp.minimum(lengths // ps, max_pages - 1)
+    page_ids = jnp.take_along_axis(page_table, page_of[:, None], axis=1)[:, 0]
+    slot = lengths % ps
+    ck = cache_layer["k"].at[page_ids, slot].set(k_new[:, 0])
+    cv = cache_layer["v"].at[page_ids, slot].set(v_new[:, 0])
+
+    from repro.kernels.flash_attention import paged_decode_attention
+
+    o = paged_decode_attention(q[:, 0], ck, cv, page_table, lengths + 1,
+                               window=cfg.sliding_window, impl=impl)
+    out = o.reshape(B, 1, -1) @ p["wo"].astype(cfg.compute_dtype)
+    return out, {"k": ck, "v": cv}
+
+
+def fill_paged_cache(cache_layer: PyTree, k: jax.Array, v: jax.Array,
+                     page_table: jax.Array, lengths: jax.Array) -> PyTree:
+    """Scatter batched-prefill K/V ([B, P, KV, hd]) into pages.
+
+    Position t of slot b lands in page ``page_table[b, t // ps]`` at slot
+    ``t % ps``; positions at or past ``lengths[b]`` (prompt padding) are
+    redirected to the null page 0.
+    """
+    B, P = k.shape[:2]
+    ps = cache_layer["k"].shape[1]
+    max_pages = page_table.shape[1]
+    pos = jnp.arange(P)[None, :]  # [1, P]
+    page_of = jnp.minimum(pos // ps, max_pages - 1)
+    page_ids = jnp.take_along_axis(page_table, page_of.repeat(B, 0), axis=1)
+    page_ids = jnp.where(pos < lengths[:, None], page_ids, 0)  # [B, P]
+    slot = (pos % ps).repeat(B, 0)
+    ck = cache_layer["k"].at[page_ids.reshape(-1), slot.reshape(-1)].set(
+        k.reshape(B * P, *k.shape[2:]))
+    cv = cache_layer["v"].at[page_ids.reshape(-1), slot.reshape(-1)].set(
+        v.reshape(B * P, *v.shape[2:]))
+    return {"k": ck, "v": cv}
 
 
 def cross_attend(p: PyTree, cfg: ModelConfig, x: jax.Array, kv: jax.Array | tuple,

@@ -45,9 +45,15 @@ def init_lm(key, cfg: ModelConfig) -> PyTree:
     return params
 
 
-def _block(cfg: ModelConfig, x: jax.Array, lp: PyTree, positions: jax.Array) -> tuple[jax.Array, jax.Array]:
-    """One transformer block. Returns (x, moe_aux)."""
-    h = attn.attend(lp["attn"], cfg, rms_norm(x, lp["ln1_scale"]), positions)
+def _block(cfg: ModelConfig, x: jax.Array, lp: PyTree, positions: jax.Array,
+           return_kv: bool = False):
+    """One transformer block. Returns (x, moe_aux) (+ the block's post-RoPE
+    (k, v) when ``return_kv``, for cache-filling prefill)."""
+    h = attn.attend(lp["attn"], cfg, rms_norm(x, lp["ln1_scale"]), positions,
+                    return_kv=return_kv)
+    kv = None
+    if return_kv:
+        h, kv = h
     if cfg.post_norm:
         h = rms_norm(h, lp["ln1_post_scale"])
     x = x + h
@@ -59,6 +65,8 @@ def _block(cfg: ModelConfig, x: jax.Array, lp: PyTree, positions: jax.Array) -> 
         h, aux = mlp(lp["mlp"], cfg, hin), jnp.float32(0.0)
     if cfg.post_norm:
         h = rms_norm(h, lp["ln2_post_scale"])
+    if return_kv:
+        return x + h, aux, kv
     return x + h, aux
 
 
@@ -100,6 +108,104 @@ def forward_lm(cfg: ModelConfig, params: PyTree, tokens: jax.Array, last_only: b
     if hidden_only:
         return rms_norm(x, params["final_norm_scale"]), aux
     return _logits(cfg, params, x), aux
+
+
+def prefill_lm(cfg: ModelConfig, params: PyTree, tokens: jax.Array
+               ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Batched prefill: ONE forward pass over the whole prompt that also
+    emits every layer's post-RoPE K/V — the single-dispatch replacement for
+    stepping ``decode_step`` token by token through the prompt.
+
+    tokens [B, P] -> (logits [B, P, V], k [L, B, P, KV, hd], v [...]).
+    """
+    x = _embed(cfg, params, tokens)
+    x = shard_hint(x, "residual")
+    positions = jnp.arange(tokens.shape[1])
+
+    def body(carry, lp):
+        x, aux = carry
+        x, a, kv = _block(cfg, x, lp, positions, return_kv=True)
+        return (x, aux + a), kv
+
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+    (x, _), (k, v) = jax.lax.scan(body_fn, (x, jnp.float32(0.0)), params["layers"])
+    return _logits(cfg, params, x), k, v
+
+
+def prefill_with_cache_lm(cfg: ModelConfig, params: PyTree, cache: PyTree,
+                          tokens: jax.Array) -> tuple[jax.Array, PyTree]:
+    """Single-dispatch prefill into a dense (``init_cache_lm``) cache.
+
+    Returns (per-position logits [B, P, V], filled cache). With a sliding
+    window the cache is the W-slot ring buffer, so only the last W prompt
+    positions are written (at slot ``pos % W``) — exactly the state the
+    token-stepping prefill would have left.
+    """
+    logits, k, v = prefill_lm(cfg, params, tokens)
+    P = tokens.shape[1]
+    W = cache["k"].shape[2]
+    if cfg.sliding_window and W < P:
+        pos = jnp.arange(P - W, P)
+        ck = cache["k"].at[:, :, pos % W].set(k[:, :, P - W:])
+        cv = cache["v"].at[:, :, pos % W].set(v[:, :, P - W:])
+    else:
+        ck = jax.lax.dynamic_update_slice(cache["k"], k, (0, 0, 0, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cache["v"], v, (0, 0, 0, 0, 0))
+    return logits, {"k": ck, "v": cv}
+
+
+def paged_decode_step_lm(cfg: ModelConfig, params: PyTree, cache: PyTree,
+                         token: jax.Array, page_table: jax.Array,
+                         lengths: jax.Array, impl: str = "xla"
+                         ) -> tuple[jax.Array, PyTree]:
+    """One decode step against the paged KV pool (continuous batching).
+
+    token [B] int32; cache from ``attention.init_paged_cache``; page_table
+    [B, max_pages] int32; lengths [B] int32 (per-slot position of the new
+    token). The layer scan mirrors :func:`decode_step_lm` with
+    ``paged_attend_decode`` in place of ``attend_decode``.
+    """
+    x = _embed(cfg, params, token[:, None])
+
+    def body(x, inp):
+        lp, cl = inp
+        h_in = rms_norm(x, lp["ln1_scale"])
+        h, new_cl = attn.paged_attend_decode(lp["attn"], cfg, h_in, cl,
+                                             page_table, lengths, impl=impl)
+        if cfg.post_norm:
+            h = rms_norm(h, lp["ln1_post_scale"])
+        x = x + h
+        hin = rms_norm(x, lp["ln2_scale"])
+        if cfg.n_experts:
+            h, _ = moe(lp["moe"], cfg, hin)
+        else:
+            h = mlp(lp["mlp"], cfg, hin)
+        if cfg.post_norm:
+            h = rms_norm(h, lp["ln2_post_scale"])
+        return x + h, new_cl
+
+    x, new_cache = jax.lax.scan(body, x, (params["layers"], cache))
+    return _logits(cfg, params, x)[:, 0], new_cache
+
+
+def paged_prefill_lm(cfg: ModelConfig, params: PyTree, cache: PyTree,
+                     tokens: jax.Array, page_table: jax.Array,
+                     lengths: jax.Array) -> tuple[jax.Array, PyTree]:
+    """Single-dispatch batched prefill into the paged pool.
+
+    tokens [B, P] (right-padded to the admitted group's max prompt length;
+    ``lengths`` holds each row's true prompt length) -> (logits [B, P, V],
+    cache with every valid prompt position written to its page).
+    """
+    logits, k, v = prefill_lm(cfg, params, tokens)
+
+    # scan over layers to keep memory flat (matches the decode-step scan)
+    def body(_, inp):
+        cl, k_l, v_l = inp
+        return None, attn.fill_paged_cache(cl, k_l, v_l, page_table, lengths)
+
+    _, new_cache = jax.lax.scan(body, None, (cache, k, v))
+    return logits, new_cache
 
 
 def init_cache_lm(cfg: ModelConfig, params: PyTree, batch: int, cache_len: int) -> PyTree:

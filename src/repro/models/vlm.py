@@ -122,6 +122,18 @@ def init_cache_vlm(cfg: ModelConfig, params: PyTree, batch: int, cache_len: int)
     }
 
 
+def fill_context_vlm(cfg: ModelConfig, params: PyTree, cache: PyTree,
+                     context: jax.Array) -> PyTree:
+    """Condition a decode cache on the image context: project the patch
+    embeddings and precompute every cross-attention superblock's K/V (the
+    VLM analogue of ``fill_context_whisper``)."""
+    dt = cfg.compute_dtype
+    img = context.astype(dt) @ params["image_proj"].astype(dt)
+    ca = params["cross_layers"]["attn"]
+    k, v = jax.vmap(lambda lp: attn.cross_kv(lp, cfg, img))(ca)
+    return {**cache, "cross_k": k, "cross_v": v}
+
+
 def decode_step_vlm(cfg: ModelConfig, params: PyTree, cache: PyTree, token: jax.Array,
                     pos: jax.Array, **_):
     x = _embed(cfg, params, token[:, None])

@@ -118,6 +118,21 @@ def init_cache_whisper(cfg: ModelConfig, params: PyTree, batch: int, cache_len: 
     }
 
 
+def fill_context_whisper(cfg: ModelConfig, params: PyTree, cache: PyTree,
+                         context: jax.Array) -> PyTree:
+    """Condition a decode cache on the audio context: run the encoder once
+    and precompute every decoder layer's cross-attention K/V.
+
+    Without this the cross K/V buffers stay zero and decode silently runs
+    unconditioned — the serving paths must call it (via
+    ``Model.fill_context``) before the first decode step.
+    """
+    enc = encode(cfg, params, context)
+    ca = params["decoder"]["layers"]["cross_attn"]
+    k, v = jax.vmap(lambda lp: attn.cross_kv(lp, cfg, enc))(ca)
+    return {**cache, "cross_k": k, "cross_v": v}
+
+
 def decode_step_whisper(cfg: ModelConfig, params: PyTree, cache: PyTree, token: jax.Array,
                         pos: jax.Array, **_):
     x = _dec_embed(cfg, params, token[:, None])

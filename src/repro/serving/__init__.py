@@ -1,0 +1,13 @@
+"""Paged-KV continuous-batching serving engine (docs/architecture.md:
+"Serving engine").
+
+    from repro.serving import PagedEngine, Request, naive_generate
+"""
+from repro.serving.engine import (DecodeState, PagedEngine, Request,
+                                  Scheduler, naive_generate)
+from repro.serving.paging import OutOfPages, PageAllocator, pages_needed
+
+__all__ = [
+    "DecodeState", "OutOfPages", "PageAllocator", "PagedEngine", "Request",
+    "Scheduler", "naive_generate", "pages_needed",
+]

@@ -1,0 +1,68 @@
+"""Jitted device programs for the serving engine.
+
+Two dispatches cover the whole request lifecycle:
+
+* :func:`build_prefill_fn` — ONE forward pass over an admitted group's
+  (padded) prompts that writes the paged KV pool at every prompt position
+  and samples each request's first token. This replaces the seed's
+  token-by-token prefill loop with a single dispatch.
+* :func:`build_span_fn` — ``lax.scan`` over N decode steps per dispatch
+  (``--decode-steps-per-dispatch``), the decode-side analogue of the
+  training superstep: the per-token host loop collapses to one donated
+  jitted program that emits ``[span, B]`` tokens per call, so the host
+  dispatches (and syncs) once per span instead of once per token.
+
+Both donate the paged cache, so XLA updates the pool in place.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+
+def sample_tokens(logits: jax.Array, rng: jax.Array, temperature: float) -> jax.Array:
+    """Greedy (temperature 0) or temperature sampling. logits [B, V] -> [B]."""
+    if temperature > 0:
+        return jax.random.categorical(rng, logits / temperature, axis=-1).astype(jnp.int32)
+    return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+
+def build_prefill_fn(model, temperature: float) -> Callable:
+    """jit: (params, cache, tokens [N,P], table [N,max_pages], lengths [N],
+    rng) -> (cache, first_token [N]). Cache donated."""
+
+    def prefill(params, cache, tokens, page_table, lengths, rng):
+        logits, cache = model.paged_prefill(params, cache, tokens,
+                                            page_table, lengths)
+        n = tokens.shape[0]
+        last = logits[jnp.arange(n), lengths - 1]  # each row's true last position
+        return cache, sample_tokens(last, rng, temperature)
+
+    return jax.jit(prefill, donate_argnums=(1,))
+
+
+def build_span_fn(model, span: int, temperature: float, impl: str = "xla") -> Callable:
+    """jit: (params, cache, tok [B], lengths [B], table [B,max_pages], rng)
+    -> (cache, tokens [span, B]). Cache donated.
+
+    Step t consumes the carry token (written at its slot's current
+    position), samples the next, and advances every slot's length; slots
+    without a live request decode into the null page and their outputs are
+    discarded by the host.
+    """
+
+    def span_fn(params, cache, tok, lengths, page_table, rng):
+        def step(carry, step_rng):
+            cache, tok, lens = carry
+            logits, cache = model.paged_decode_step(params, cache, tok,
+                                                    page_table, lens, impl=impl)
+            nxt = sample_tokens(logits, step_rng, temperature)
+            return (cache, nxt, lens + 1), nxt
+
+        (cache, _, _), toks = jax.lax.scan(
+            step, (cache, tok, lengths), jax.random.split(rng, span))
+        return cache, toks
+
+    return jax.jit(span_fn, donate_argnums=(1,))

@@ -26,11 +26,12 @@ _COLLECT = r"""
 import json
 from repro.launch.train import build_parser as train_parser
 from repro.launch.dryrun import build_parser as dryrun_parser
+from repro.launch.serve import build_parser as serve_parser
 from benchmarks.run import build_parser as bench_parser
 
 out = {}
 for name, build in [("train", train_parser), ("dryrun", dryrun_parser),
-                    ("benchmarks", bench_parser)]:
+                    ("serve", serve_parser), ("benchmarks", bench_parser)]:
     flags = set()
     for action in build()._actions:
         flags.update(o for o in action.option_strings if o.startswith("--"))
@@ -75,8 +76,8 @@ def test_every_documented_flag_exists(parser_flags):
 
 
 def test_every_user_facing_flag_is_documented(parser_flags):
-    """Every flag of the three user-facing CLIs (train / dryrun / benchmark
-    runner) must appear in README or docs/."""
+    """Every flag of the user-facing CLIs (train / dryrun / serve /
+    benchmark runner) must appear in README or docs/."""
     documented = set().union(*_doc_flags().values())
     for cli, flags in parser_flags.items():
         missing = flags - documented
