@@ -37,6 +37,7 @@ def all_benchmarks():
         "tab2": sy.bench_tab2_scaling_forms,
         "kernels": sy.bench_kernel_micro,
         "attention_bench": sy.bench_attention_sweep,
+        "mesh_kernel_bench": sy.bench_mesh_kernels,
         "roofline": sy.bench_roofline_table,
     }
 

@@ -44,8 +44,8 @@ class CompressionConfig:
     collective: str = "a2a_rs_ag"
     # wire-buffer backend for linear quantization: 'pallas' routes encode /
     # decode through the fused rowwise kernels (bit-identical to 'jnp' under
-    # jit); 'jnp' is used where Pallas cannot lower (multi-device GSPMD
-    # dry-runs). Statistical quantization and top-k are always jnp.
+    # jit; on a mesh the rows shard_map over ('pod','data') via the kernel
+    # routing). Statistical quantization and top-k are always jnp.
     wire_impl: str = "pallas"
 
     def compression_ratio(self) -> float:

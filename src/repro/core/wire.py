@@ -7,8 +7,9 @@ were sent. This module materializes what actually crosses the wire:
 * **linear quantization** -> :class:`QuantWire`: bit-packed uint8 codes
   (8/bits codes per byte, :func:`repro.kernels.quantize.pack_codes`) plus
   per-row fp32 ``lo``/``scale`` metadata, produced by the fused Pallas
-  ``rowwise_quantize`` kernel (``wire_impl='pallas'``) or an elementwise-
-  identical jnp path (``'jnp'``, used under multi-device GSPMD lowering);
+  ``rowwise_quantize`` kernel (``wire_impl='pallas'``; on a mesh its rows
+  shard_map over ('pod','data') via the kernel-partitioning routing) or an
+  elementwise-identical jnp path (``'jnp'``);
 * **statistical quantization** -> :class:`CodebookWire`: bit-packed codes
   plus the per-row quantile codebook (2^bits fp32 levels);
 * **top-k** -> :class:`TopKWire`: explicit (int32 index, fp32 value) pairs

@@ -53,22 +53,26 @@ def build_round_fn(model: Model, dcfg: DiLoCoConfig, opt,
                    masks: list[PyTree] | None = None,
                    rules: dict | None = None,
                    spmd_axis: str | None = None,
-                   outer=None) -> Callable:
+                   outer=None, kernel_parts=None) -> Callable:
     """The un-jitted round callable shared by the engine and the dry-run
     StepPlans: H inner steps + sync(s) in one traceable program, with the
-    activation-sharding rules (if any) installed around the whole round.
-    ``outer`` is the declared pseudogradient chain (built from ``dcfg`` when
-    omitted)."""
+    activation-sharding rules (if any) and the kernel shard_map routing
+    (``kernel_parts``, see :func:`repro.launch.sharding.kernel_specs`)
+    installed around the whole round — both are trace-time contexts, so one
+    installation covers every inner step, the wire stages, and the outer
+    sync. ``outer`` is the declared pseudogradient chain (built from
+    ``dcfg`` when omitted)."""
 
     def round_fn(state: PyTree, batches: PyTree) -> tuple[PyTree, dict]:
-        if rules is not None:
-            from repro.models.common import activation_sharding
+        from contextlib import nullcontext
 
-            with activation_sharding(rules):
-                return diloco_round(model, dcfg, opt, state, batches,
-                                    masks=masks, spmd_axis=spmd_axis, outer=outer)
-        return diloco_round(model, dcfg, opt, state, batches,
-                            masks=masks, spmd_axis=spmd_axis, outer=outer)
+        from repro.kernels.partition import kernel_partitioning
+        from repro.models.common import activation_sharding
+
+        act = activation_sharding(rules) if rules is not None else nullcontext()
+        with act, kernel_partitioning(kernel_parts):
+            return diloco_round(model, dcfg, opt, state, batches,
+                                masks=masks, spmd_axis=spmd_axis, outer=outer)
 
     return round_fn
 
@@ -93,7 +97,8 @@ class TrainEngine:
 
     def __init__(self, model: Model, dcfg: DiLoCoConfig, icfg: OptimizerConfig,
                  *, mesh=None, donate: bool = True,
-                 rules: dict | None = None, spmd_axis: str | None = None):
+                 rules: dict | None = None, spmd_axis: str | None = None,
+                 kernel_parts=None):
         self.model = model
         self.dcfg = dcfg
         self.icfg = icfg
@@ -103,13 +108,28 @@ class TrainEngine:
         self.donate = donate
         self._rules = rules
         self._spmd_axis = spmd_axis
+        if kernel_parts is None and mesh is not None:
+            # default routing: shard_map the Pallas call sites on the
+            # engine's mesh (None on single-device worlds)
+            from repro.launch.sharding import kernel_specs
+
+            kernel_parts = kernel_specs(mesh, getattr(model, "cfg", None))
+        self.kernel_parts = kernel_parts
         self._masks = self._build_masks()
         self.round_fn = build_round_fn(model, dcfg, self.opt, masks=self._masks,
                                        rules=rules, spmd_axis=spmd_axis,
-                                       outer=self.outer)
+                                       outer=self.outer,
+                                       kernel_parts=kernel_parts)
         # ONE eval closure serves both the in-superstep folded eval and the
-        # standalone eval_loss jit — they must stay bitwise-identical
-        eval_loss_fn = lambda params, batch: model.loss(params, batch)[0]  # noqa: E731
+        # standalone eval_loss jit — they must stay bitwise-identical (the
+        # kernel routing context applies here too: folded eval runs outside
+        # round_fn's context, and an un-shard_mapped pallas call would fail
+        # to lower on the mesh)
+        from repro.kernels.partition import kernel_partitioning
+
+        def eval_loss_fn(params, batch):
+            with kernel_partitioning(self.kernel_parts):
+                return model.loss(params, batch)[0]
         self.superstep_fn = build_superstep_fn(self.round_fn,
                                                eval_loss_fn=eval_loss_fn)
         self._jitted: Callable | None = None

@@ -28,8 +28,15 @@ quantization (``kernels/quantize.py``):
   kv-major sweep for dk/dv, both on the same skip schedule.
 
 Like the other kernels, this runs ``interpret=True`` off-TPU (the CPU test
-target); the XLA path (``attn_impl='xla'``) remains the default under
-GSPMD because Pallas calls carry no partitioning rules.
+target). On multi-device meshes the call sites consult the kernel
+partitioning context (:mod:`repro.kernels.partition`): when the StepPlan
+machinery routes a mesh, the custom-VJP call — forward and both backward
+sweeps — is wrapped in ``shard_map`` over the fused [B*KV, ...] batch-head
+axis (:func:`flash_specs`), so ``attn_impl='pallas'`` lowers under GSPMD
+with bitwise-identical outputs. The visit schedule stays a closed-over
+trace constant (replicated); the paged decode kernel co-shards the page
+table with its batch-slot axis against a replicated KV pool
+(:func:`paged_specs`).
 """
 from __future__ import annotations
 
@@ -41,6 +48,14 @@ import jax.numpy as jnp
 import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+from jax.sharding import PartitionSpec as P
+
+from repro.kernels.partition import (
+    KernelPartitioning,
+    active_partitioning,
+    axes_for,
+    shard_wrap,
+)
 
 NEG_INF = -2.0e38
 DEFAULT_BLOCK_Q = 512
@@ -375,6 +390,37 @@ def _flash_fn(causal: bool, window: int, bq: int, bkv: int, scale: float,
 
 
 # ---------------------------------------------------------------------------
+# shard_map specs (consulted when the StepPlan machinery routes a mesh)
+# ---------------------------------------------------------------------------
+
+
+def flash_specs(part: KernelPartitioning, lead: int) -> tuple[P, P]:
+    """(q_spec [lead, S, G, hd], kv_spec [lead, S, hd]) for the fused
+    batch-head axis. ``lead = B*KV`` is B-major, so the ('data', 'model')
+    preference aligns batch with 'data' and kv-heads with 'model'; S stays
+    whole per device (the visit schedule is global over S). The specs serve
+    forward and both backward sweeps — dq shards like q, dk/dv like k/v."""
+    axes = axes_for(part, lead, part.flash_axes)
+    a = axes or None
+    return P(a, None, None, None), P(a, None, None)
+
+
+def paged_specs(part: KernelPartitioning, batch: int) -> tuple[P, P, P, P]:
+    """(q, page_table, lengths, pool) specs for paged decode.
+
+    The batch-slot axis shards q [B, KV, G, hd], the page table
+    [B, max_pages], and lengths [B] *together* — each device looks up its
+    own slots' rows — while the KV pool stays replicated so any page id
+    resolves locally. (Replicating the table against a sharded B would
+    index the wrong rows; replicating the pool is what keeps the scalar-
+    prefetched indices valid everywhere.)"""
+    axes = axes_for(part, batch, part.paged_axes)
+    b = axes or None
+    return (P(b, None, None, None), P(b, None), P(b),
+            P(None, None, None, None))
+
+
+# ---------------------------------------------------------------------------
 # Paged decode attention (the serving hot path)
 # ---------------------------------------------------------------------------
 #
@@ -506,8 +552,16 @@ def paged_decode_attention(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
     if impl == "pallas":
         if interpret is None:
             interpret = _interpret()
-        o = _paged_decode_pallas(qg, k_pages, v_pages, page_table, lengths,
-                                 window=window, interpret=interpret)
+        local = functools.partial(_paged_decode_pallas, window=window,
+                                  interpret=interpret)
+        part = active_partitioning()
+        if part is not None:
+            q_spec, tbl_spec, len_spec, pool_spec = paged_specs(part, B)
+            local = shard_wrap(
+                local, part,
+                in_specs=(q_spec, pool_spec, pool_spec, tbl_spec, len_spec),
+                out_specs=q_spec)
+        o = local(qg, k_pages, v_pages, page_table, lengths)
     else:
         o = _paged_decode_xla(qg, k_pages, v_pages, page_table, lengths,
                               window=window)
@@ -548,5 +602,13 @@ def gqa_flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
     vg = v.transpose(0, 2, 1, 3).reshape(B * KV, S, hd)
     fn = _flash_fn(bool(causal), int(window), bq, bkv, scale, bool(interpret),
                    bool(skip_blocks))
+    part = active_partitioning()
+    if part is not None:
+        # shard_map OUTSIDE the custom_vjp: jax differentiates through the
+        # mapped region, so the dq/dk/dv sweeps run under the same specs as
+        # the forward (batch-local -> bitwise vs the single-device call)
+        q_spec, kv_spec = flash_specs(part, B * KV)
+        fn = shard_wrap(fn, part, in_specs=(q_spec, kv_spec, kv_spec),
+                        out_specs=q_spec)
     o = fn(qg, kg, vg)
     return o.reshape(B, KV, S, G, hd).transpose(0, 2, 1, 3, 4).reshape(B, S, H, hd)

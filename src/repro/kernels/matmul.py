@@ -26,6 +26,24 @@ from jax.experimental.pallas import tpu as pltpu
 _COMPILER_PARAMS = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
 
 
+def ns_stack_spec(part, bsz: int):
+    """shard_map spec for a [bsz, m, n] Newton-Schulz matrix stack.
+
+    Whole matrices stay device-local (the three chained matmuls of one NS
+    iteration reduce over full rows/columns — exactly the layout the refuted
+    'ns_matrix' GSPMD resharding hints tried and failed to get; shard_map
+    makes it explicit instead). Only the stacked-matrix batch axis shards,
+    and only when it divides — the common replicated fallback also lowers,
+    which is what turns ``--ns-impl pallas`` legal on the production mesh.
+    """
+    from jax.sharding import PartitionSpec as P
+
+    from repro.kernels.partition import axes_for
+
+    axes = axes_for(part, bsz, part.ns_axes)
+    return P(axes or None, None, None)
+
+
 def _matmul_epilogue_kernel(a_ref, b_ref, d_ref, o_ref, acc_ref, *, alpha, beta, k_steps):
     @pl.when(pl.program_id(2) == 0)
     def _init():

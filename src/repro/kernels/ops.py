@@ -1,5 +1,22 @@
-"""Jit'd public wrappers around the Pallas kernels: padding to block
-multiples, batching, and backend selection (interpret=True off-TPU)."""
+"""Public wrappers around the Pallas kernels: padding to block multiples,
+batching, backend selection (interpret=True off-TPU), and mesh routing.
+
+Each wrapper consults the kernel-partitioning context
+(:mod:`repro.kernels.partition`) *outside* any jit cache: with no mesh
+routed (the CPU/test default) it dispatches to the same jitted single-device
+implementation as before; with a mesh routed by the StepPlan machinery it
+shard_maps the kernel body over the specs the kernel module declares
+(``rowwise_specs`` / ``ns_stack_spec`` / ``outer_update_spec``). Pad-to-block
+happens inside the mapped region on local shapes, so sharding never changes
+any element's arithmetic — the shard_mapped results are bitwise-identical
+to the single-device calls (tests/test_shard_map.py).
+
+The context read cannot live inside ``@jax.jit``: a cached trace would pin
+whichever routing was active at first call. The public functions are plain
+Python that pick the jitted or shard_mapped path per call; inside an outer
+jit (every production call site) both paths are inlined into the enclosing
+trace anyway.
+"""
 from __future__ import annotations
 
 from functools import partial
@@ -7,9 +24,10 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.matmul import matmul_epilogue
-from repro.kernels.outer_update import fused_nesterov_update
-from repro.kernels.quantize import rowwise_dequantize, rowwise_quantize
+from repro.kernels.matmul import matmul_epilogue, ns_stack_spec
+from repro.kernels.outer_update import fused_nesterov_update, outer_update_spec
+from repro.kernels.partition import active_partitioning, shard_wrap
+from repro.kernels.quantize import rowwise_dequantize, rowwise_quantize, rowwise_specs
 from repro.kernels.topk_pack import pack_topk, unpack_topk  # noqa: F401 (re-export)
 from repro.optim.muon import NS_COEFFS
 
@@ -31,7 +49,10 @@ def _pad_to(x: jax.Array, mults: tuple[int, ...]) -> jax.Array:
 @partial(jax.jit, static_argnames=("alpha", "beta", "block"))
 def matmul(a: jax.Array, b: jax.Array, d: jax.Array | None = None, *,
            alpha: float = 1.0, beta: float = 0.0, block: int = 128) -> jax.Array:
-    """C = alpha * a@b + beta * d with automatic padding."""
+    """C = alpha * a@b + beta * d with automatic padding.
+
+    Whole-matrix (device-local) by construction: on a mesh this runs inside
+    the shard_mapped NS stack, never partitioned on its own."""
     m, k = a.shape
     _, n = b.shape
     ap = _pad_to(a, (block, block))
@@ -50,13 +71,11 @@ def _ns_iteration_pallas(x: jax.Array, block: int) -> jax.Array:
     return matmul(B, x, d=x, alpha=1.0, beta=a, block=block)  # B@X + a*X (fused epilogue)
 
 
-@partial(jax.jit, static_argnames=("iters", "block"))
-def ns_orthogonalize(g: jax.Array, iters: int = 5, eps: float = 1e-7, block: int = 128) -> jax.Array:
-    """Newton–Schulz orthogonalization of the trailing 2 dims via the Pallas
-    matmul-epilogue kernel. Batched leading dims are vmapped."""
-    orig_dtype = g.dtype
-    *batch, m, n = g.shape
-    x = g.reshape((-1, m, n)).astype(jnp.float32)
+def _ns_stack(g3: jax.Array, *, iters: int, eps: float, block: int) -> jax.Array:
+    """[bsz, m, n] -> orthogonalized [bsz, m, n]; matrix-local, so safe to
+    shard_map over the stack axis."""
+    m, n = g3.shape[-2:]
+    x = g3.astype(jnp.float32)
     transpose = m > n
     if transpose:
         x = jnp.swapaxes(x, -1, -2)
@@ -70,24 +89,64 @@ def ns_orthogonalize(g: jax.Array, iters: int = 5, eps: float = 1e-7, block: int
     x = jax.vmap(one)(x) if x.shape[0] > 1 else one(x[0])[None]
     if transpose:
         x = jnp.swapaxes(x, -1, -2)
-    return x.reshape((*batch, m, n)).astype(orig_dtype)
+    return x.astype(g3.dtype)
 
 
-@partial(jax.jit, static_argnames=("bits", "block_rows"))
-def quantize_rowwise(x: jax.Array, bits: int = 4, block_rows: int = 8):
-    """Fused row-wise linear quant->dequant. Returns (dequantized, codes, lo, scale)."""
-    m, n = x.shape
+@partial(jax.jit, static_argnames=("iters", "block"))
+def _ns_orthogonalize_jit(g, iters, eps, block):
+    orig_dtype = g.dtype
+    *batch, m, n = g.shape
+    out = _ns_stack(g.reshape((-1, m, n)), iters=iters, eps=eps, block=block)
+    return out.reshape((*batch, m, n)).astype(orig_dtype)
+
+
+def ns_orthogonalize(g: jax.Array, iters: int = 5, eps: float = 1e-7,
+                     block: int = 128) -> jax.Array:
+    """Newton–Schulz orthogonalization of the trailing 2 dims via the Pallas
+    matmul-epilogue kernel. Batched leading dims are folded into the matrix
+    stack — vmapped on one device, shard_mapped over the stack axis when a
+    mesh is routed (whole matrices always stay device-local)."""
+    part = active_partitioning()
+    if part is None:
+        return _ns_orthogonalize_jit(g, iters, eps, block)
+    *batch, m, n = g.shape
+    g3 = g.reshape((-1, m, n))
+    spec = ns_stack_spec(part, g3.shape[0])
+    fn = shard_wrap(partial(_ns_stack, iters=iters, eps=eps, block=block),
+                    part, in_specs=(spec,), out_specs=spec)
+    return fn(g3).reshape(g.shape)
+
+
+def _quantize_body(x: jax.Array, *, bits: int, block_rows: int):
+    m, _ = x.shape
     xp = _pad_to(x, (block_rows, 1))
     deq, codes, lo, scale = rowwise_quantize(xp, bits, block_rows=block_rows,
                                              interpret=_interpret())
     return deq[:m], codes[:m], lo[:m], scale[:m]
 
 
-@partial(jax.jit, static_argnames=("block_rows",))
-def dequantize_rowwise(codes: jax.Array, lo: jax.Array, scale: jax.Array,
-                       block_rows: int = 8) -> jax.Array:
-    """Fused receiver-side reconstruction: (codes u8 [m, n], lo, scale) -> f32."""
-    m, n = codes.shape
+@partial(jax.jit, static_argnames=("bits", "block_rows"))
+def _quantize_rowwise_jit(x, bits, block_rows):
+    return _quantize_body(x, bits=bits, block_rows=block_rows)
+
+
+def quantize_rowwise(x: jax.Array, bits: int = 4, block_rows: int = 8):
+    """Fused row-wise linear quant->dequant. Returns (dequantized, codes, lo, scale).
+
+    On a routed mesh the row axis is shard_mapped per ``rowwise_specs``
+    (rows are independent — each carries its own lo/scale)."""
+    part = active_partitioning()
+    if part is None:
+        return _quantize_rowwise_jit(x, bits, block_rows)
+    mat, meta = rowwise_specs(part, x.shape[0])
+    fn = shard_wrap(partial(_quantize_body, bits=bits, block_rows=block_rows),
+                    part, in_specs=(mat,), out_specs=(mat, mat, meta, meta))
+    return fn(x)
+
+
+def _dequantize_body(codes: jax.Array, lo: jax.Array, scale: jax.Array, *,
+                     block_rows: int) -> jax.Array:
+    m, _ = codes.shape
     cp = _pad_to(codes, (block_rows, 1))
     lp = _pad_to(lo, (block_rows, 1))
     sp = _pad_to(scale, (block_rows, 1))
@@ -96,15 +155,64 @@ def dequantize_rowwise(codes: jax.Array, lo: jax.Array, scale: jax.Array,
     return out[:m]
 
 
+@partial(jax.jit, static_argnames=("block_rows",))
+def _dequantize_rowwise_jit(codes, lo, scale, block_rows):
+    return _dequantize_body(codes, lo, scale, block_rows=block_rows)
+
+
+def dequantize_rowwise(codes: jax.Array, lo: jax.Array, scale: jax.Array,
+                       block_rows: int = 8) -> jax.Array:
+    """Fused receiver-side reconstruction: (codes u8 [m, n], lo, scale) -> f32."""
+    part = active_partitioning()
+    if part is None:
+        return _dequantize_rowwise_jit(codes, lo, scale, block_rows)
+    mat, meta = rowwise_specs(part, codes.shape[0])
+    fn = shard_wrap(partial(_dequantize_body, block_rows=block_rows),
+                    part, in_specs=(mat, meta, meta), out_specs=mat)
+    return fn(codes, lo, scale)
+
+
+def _nesterov_flat(t: jax.Array, p: jax.Array, uu: jax.Array, *,
+                   lr: float, momentum: float, block: int):
+    n = t.shape[0]
+    t2, u2 = fused_nesterov_update(
+        _pad_to(t, (block,)), _pad_to(p, (block,)), _pad_to(uu, (block,)),
+        lr=lr, momentum=momentum, block=block, interpret=_interpret())
+    return t2[:n], u2[:n]
+
+
 @partial(jax.jit, static_argnames=("lr", "momentum", "block"))
+def _nesterov_update_jit(theta, psi, u, lr, momentum, block):
+    shape = theta.shape
+    t2, u2 = _nesterov_flat(
+        theta.reshape(-1), psi.reshape(-1).astype(jnp.float32),
+        u.reshape(-1).astype(jnp.float32), lr=lr, momentum=momentum, block=block)
+    return t2.reshape(shape), u2.reshape(shape)
+
+
+def _nesterov_block(t: jax.Array, p: jax.Array, uu: jax.Array, *,
+                    lr: float, momentum: float, block: int):
+    """Shape-preserving mapped body: flatten the *local* block, run the
+    elementwise kernel, restore the local shape."""
+    shape = t.shape
+    t2, u2 = _nesterov_flat(t.reshape(-1), p.reshape(-1), uu.reshape(-1),
+                            lr=lr, momentum=momentum, block=block)
+    return t2.reshape(shape), u2.reshape(shape)
+
+
 def nesterov_update(theta: jax.Array, psi: jax.Array, u: jax.Array, *,
                     lr: float, momentum: float, block: int = 1024):
-    """Fused outer Nesterov update on arbitrary-shaped tensors."""
-    shape = theta.shape
-    t = _pad_to(theta.reshape(-1), (block,))
-    p = _pad_to(psi.reshape(-1).astype(jnp.float32), (block,))
-    uu = _pad_to(u.reshape(-1).astype(jnp.float32), (block,))
-    n = theta.size
-    t2, u2 = fused_nesterov_update(t, p, uu, lr=lr, momentum=momentum,
-                                   block=block, interpret=_interpret())
-    return t2[:n].reshape(shape), u2[:n].reshape(shape)
+    """Fused outer Nesterov update on arbitrary-shaped tensors.
+
+    On a routed mesh the operands are shard_mapped in the outer state's own
+    ZeRO layout (``outer_update_spec`` — shape-preserving, flatten happens
+    per shard), which keeps the donated TrainState aliased through the
+    round/superstep programs; the update is elementwise, so every split is
+    bitwise-exact."""
+    part = active_partitioning()
+    if part is None:
+        return _nesterov_update_jit(theta, psi, u, lr, momentum, block)
+    spec = outer_update_spec(part, theta.shape)
+    fn = shard_wrap(partial(_nesterov_block, lr=lr, momentum=momentum, block=block),
+                    part, in_specs=(spec, spec, spec), out_specs=(spec, spec))
+    return fn(theta, psi.astype(jnp.float32), u.astype(jnp.float32))

@@ -21,6 +21,40 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 
+def outer_update_spec(part, shape: tuple[int, ...]):
+    """Shape-preserving shard_map spec for one outer-update operand.
+
+    Mirrors the outer-state ZeRO layout of
+    :func:`repro.launch.sharding.param_spec` (``outer=True``) exactly:
+    matrices shard dim -2 over ('pod','data') (falling back to 'data', then
+    replicated, on non-divisible dims) and dim -1 over 'model' when the
+    partitioning says the arch is TP-friendly; vectors/scalars replicate.
+    Matching the committed sharding is what keeps the donated TrainState
+    aliased through the round/superstep programs — a flat global reshape
+    would force a reshard and lose the ``input_output_alias`` entries (the
+    update is elementwise, so flattening happens per-shard inside the
+    mapped region instead)."""
+    from jax.sharding import PartitionSpec as P
+
+    sizes = part.axis_sizes()
+    nd = len(shape)
+    if nd <= 1:
+        return P(*([None] * nd))
+
+    def div(dim: int, k: int) -> bool:
+        return k > 0 and dim % k == 0 and dim >= k
+
+    pod, data = sizes.get("pod", 0), sizes.get("data", 0)
+    spec: list = [None] * nd
+    if pod and div(shape[-2], pod * data):
+        spec[-2] = ("pod", "data")
+    elif div(shape[-2], data):
+        spec[-2] = "data"
+    if part.outer_tp and div(shape[-1], sizes.get("model", 0)):
+        spec[-1] = "model"
+    return P(*spec)
+
+
 def _nesterov_kernel(theta_ref, psi_ref, u_ref, theta_out_ref, u_out_ref, *, lr, momentum):
     psi = psi_ref[...].astype(jnp.float32)
     u_new = momentum * u_ref[...] + lr * psi

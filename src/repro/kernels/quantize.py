@@ -19,6 +19,22 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.sharding import PartitionSpec as P
+
+from repro.kernels.partition import KernelPartitioning, axes_for
+
+
+def rowwise_specs(part: KernelPartitioning, rows: int) -> tuple[P, P]:
+    """(matrix_spec [rows, n], meta_spec [rows, 1]) for the shard_mapped
+    encode/decode: rows are independent (each carries its own lo/scale), so
+    the row axis shards over the preference — worker-stacked leaves fold K
+    into rows before the kernel, hence ('pod', 'data'). Columns stay whole
+    (the per-row min/max reduction spans them). Padding to block_rows
+    multiples happens inside the mapped region, so per-row arithmetic is
+    unchanged by the split."""
+    axes = axes_for(part, rows, part.quantize_axes)
+    r = axes or None
+    return P(r, None), P(r, None)
 
 
 def _rowwise_quant_kernel(x_ref, deq_ref, code_ref, lo_ref, scale_ref, *, bits):

@@ -46,13 +46,17 @@ def run_one(arch: str, shape: str, multi_pod: bool, sync_interval: int = 30,
             verbose: bool = True, plan_filter: str | None = None,
             inner_name: str = "muon", rounds_per_dispatch: int = 4,
             compression: str = "none", bits: int = 4,
-            topk_frac: float = 0.01, attn_impl: str = "xla") -> list[dict]:
+            topk_frac: float = 0.01, attn_impl: str = "xla",
+            ns_impl: str = "jnp", outer_kernel: bool = False,
+            wire_impl: str = "jnp") -> list[dict]:
     """Lower + compile all step plans for one (arch, shape, mesh) combo."""
     from repro.core.compression import CompressionConfig
 
-    # attn_impl='xla' stays the mesh default: Pallas calls carry no GSPMD
-    # partitioning rules, so 'pallas' only lowers on single-device worlds
-    # (a failing plan is recorded as status=error, not raised)
+    # Pallas calls carry no GSPMD partitioning rules of their own, but the
+    # StepPlan machinery routes every call site through shard_map on the
+    # plan's mesh (launch/sharding.kernel_specs), so 'pallas' backends lower
+    # on the 512-device world too — a plan that still fails is recorded as
+    # status=error with an error_path classifying which route broke
     cfg0 = get_config(arch).replace(attn_impl=attn_impl)
     if not shape_supported(cfg0, shape):
         return [{
@@ -63,11 +67,10 @@ def run_one(arch: str, shape: str, multi_pod: bool, sync_interval: int = 30,
     chips = mesh.devices.size
     records = []
     kw = {}
-    # wire_impl='jnp': Pallas has no GSPMD partitioning rules, so the wire
-    # stages lower through the elementwise-identical jnp path on the
-    # placeholder-device mesh
+    # wire_impl='pallas' shard_maps the quantize/dequantize rows over
+    # ('pod','data') — the same K-folded layout the wire buffers carry
     ccfg = CompressionConfig(
-        kind=compression, bits=bits, topk_frac=topk_frac, wire_impl="jnp",
+        kind=compression, bits=bits, topk_frac=topk_frac, wire_impl=wire_impl,
         collective="gather" if compression == "topk" else "a2a_rs_ag")
     dcfg = None
     if INPUT_SHAPES[shape].kind == "train":
@@ -75,10 +78,30 @@ def run_one(arch: str, shape: str, multi_pod: bool, sync_interval: int = 30,
 
         n_pods = 2 if multi_pod else 1
         dcfg = DiLoCoConfig(n_workers=n_pods, sync_interval=sync_interval,
-                            inner_name=inner_name, compression=ccfg)
+                            inner_name=inner_name, compression=ccfg,
+                            ns_impl=ns_impl, outer_kernel=outer_kernel)
         kw["dcfg"] = dcfg
         kw["rounds_per_dispatch"] = rounds_per_dispatch
     plans = build_plans(cfg0, shape, mesh, **kw)
+    # kernel-routing evidence shared by every record of this combo: which
+    # backends were requested and which mesh axes each kernel shards over
+    from repro.launch.sharding import kernel_specs
+
+    kparts = kernel_specs(mesh, cfg0)
+    uses_pallas = (attn_impl == "pallas" or ns_impl == "pallas"
+                   or outer_kernel or wire_impl == "pallas")
+    kernels_evidence = {
+        "attn_impl": attn_impl, "ns_impl": ns_impl,
+        "outer_kernel": outer_kernel, "wire_impl": wire_impl,
+        "shard_map": kparts is not None,
+        "partitioning": None if kparts is None else {
+            "flash_axes": list(kparts.flash_axes),
+            "quantize_axes": list(kparts.quantize_axes),
+            "ns_axes": list(kparts.ns_axes),
+            "paged_axes": list(kparts.paged_axes),
+            "outer_tp": kparts.outer_tp,
+        },
+    }
     for plan in plans:
         if plan_filter and plan.name != plan_filter:
             continue
@@ -87,6 +110,7 @@ def run_one(arch: str, shape: str, multi_pod: bool, sync_interval: int = 30,
             "mesh": "2x16x16" if multi_pod else "16x16", "chips": chips,
             "inner": inner_name if plan.meta["kind"] in
             ("train", "sync", "round", "superstep") else None,
+            "kernels": kernels_evidence,
         }
         t0 = time.time()
         try:
@@ -203,7 +227,16 @@ def run_one(arch: str, shape: str, multi_pod: bool, sync_interval: int = 30,
                 "roofline": terms.as_dict(),
             })
         except Exception as e:  # noqa: BLE001 — record the failure verbatim
+            # classify where the lowering broke: a pallas backend under
+            # shard_map routing, a pallas backend with NO routing installed
+            # (single-device-only legacy path), or plain GSPMD
+            if uses_pallas:
+                error_path = ("pallas-shard-map" if kparts is not None
+                              else "pallas-unpartitioned")
+            else:
+                error_path = "gspmd"
             rec.update({"status": "error", "error": f"{type(e).__name__}: {e}",
+                        "error_path": error_path,
                         "traceback": traceback.format_exc()[-2000:]})
         if verbose:
             _print_record(rec)
@@ -370,10 +403,21 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--bits", type=int, default=4)
     ap.add_argument("--topk-frac", type=float, default=0.01)
     ap.add_argument("--attn-impl", default="xla", choices=["xla", "pallas"],
-                    help="attention backend for the lowered plans; 'xla' is "
-                         "the GSPMD default (Pallas has no partitioning "
-                         "rules — 'pallas' records per-plan errors on "
-                         "multi-device meshes)")
+                    help="attention backend for the lowered plans; 'pallas' "
+                         "shard_maps the fused kernel over the mesh "
+                         "(batch x kv-heads -> 'data' x 'model'), so it "
+                         "lowers on the 512-device world too")
+    ap.add_argument("--ns-impl", default="jnp", choices=["jnp", "pallas"],
+                    help="Newton-Schulz backend for the Muon inner steps; "
+                         "'pallas' shard_maps the matrix stack over 'data'")
+    ap.add_argument("--outer-kernel", action="store_true",
+                    help="route the outer Nesterov descent through the fused "
+                         "Pallas update kernel, shard_mapped over the flat "
+                         "('pod','data','model') element axis")
+    ap.add_argument("--wire-impl", default="jnp", choices=["jnp", "pallas"],
+                    help="quantize/dequantize backend for the wire stages; "
+                         "'pallas' shard_maps the row axis over "
+                         "('pod','data')")
     ap.add_argument("--out", default="results/dryrun")
     return ap
 
@@ -394,6 +438,17 @@ def main() -> None:
                     tag += f"__quant{args.bits}"
                 elif args.compression == "topk":
                     tag += f"__topk{args.topk_frac}"
+                kern_bits = []
+                if args.attn_impl != "xla":
+                    kern_bits.append(f"attn-{args.attn_impl}")
+                if args.ns_impl != "jnp":
+                    kern_bits.append(f"ns-{args.ns_impl}")
+                if args.outer_kernel:
+                    kern_bits.append("outerk")
+                if args.wire_impl != "jnp":
+                    kern_bits.append(f"wire-{args.wire_impl}")
+                if kern_bits:
+                    tag += "__" + "-".join(kern_bits)
                 path = os.path.join(args.out, tag + ".json")
                 if os.path.exists(path):
                     print(f"[CACHED] {tag}")
@@ -403,7 +458,9 @@ def main() -> None:
                                rounds_per_dispatch=args.rounds_per_dispatch,
                                compression=args.compression, bits=args.bits,
                                topk_frac=args.topk_frac,
-                               attn_impl=args.attn_impl)
+                               attn_impl=args.attn_impl, ns_impl=args.ns_impl,
+                               outer_kernel=args.outer_kernel,
+                               wire_impl=args.wire_impl)
                 with open(path, "w") as f:
                     json.dump(recs, f, indent=2)
 

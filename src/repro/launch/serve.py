@@ -63,6 +63,10 @@ def build_parser() -> argparse.ArgumentParser:
                     help="tokens decoded per jitted dispatch (lax.scan span)")
     ap.add_argument("--slots", type=int, default=4,
                     help="concurrent batch slots of the paged engine")
+    ap.add_argument("--attn-impl", default="xla", choices=["xla", "pallas"],
+                    help="decode attention backend: 'xla' or 'pallas' (fused "
+                         "paged-decode kernel; shard_mapped over the mesh "
+                         "when the engine is built with one)")
     return ap
 
 
@@ -72,6 +76,7 @@ def main() -> None:
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = reduce_config(cfg)
+    cfg = cfg.replace(attn_impl=args.attn_impl)
     model = build_model(cfg)
     rng = jax.random.PRNGKey(0)
     params = model.init(rng)
@@ -88,7 +93,7 @@ def main() -> None:
             model, params, slots=args.slots, page_size=args.page_size,
             max_pages=args.max_pages,
             decode_steps_per_dispatch=args.decode_steps_per_dispatch,
-            temperature=args.temperature, rng=rng)
+            temperature=args.temperature, attn_impl=args.attn_impl, rng=rng)
         reqs = [Request(f"req{i}", tuple(int(t) for t in row), args.max_new)
                 for i, row in enumerate(jax.device_get(prompts))]
         results = engine.run(reqs)

@@ -179,3 +179,58 @@ def cache_shardings(mesh: Mesh, cache: PyTree, batch: int) -> PyTree:
 
 def replicated(mesh: Mesh, tree: PyTree) -> PyTree:
     return jax.tree.map(lambda x: NamedSharding(mesh, P()), tree)
+
+
+# ---------------------------------------------------------------------------
+# Kernel partitioning (shard_map routing for the Pallas call sites)
+# ---------------------------------------------------------------------------
+
+
+def kernel_specs(mesh: Mesh | None, cfg=None):
+    """The per-kernel shard_map routing for a plan's mesh — ONE place maps
+    the plan-level layout (``diloco_state_shardings`` / ``batch_shardings``
+    above) onto the block-local axes each kernel shards:
+
+    * flash attention: the fused [B*KV, ...] batch-head axis over
+      ('data', 'model') — B rides 'data' exactly like ``batch_shardings``
+      puts it there, KV-heads ride 'model' like ``param_spec`` puts head
+      projections there; the worker axis K arrives via
+      ``vmap(spmd_axis_name='pod')`` on top. TP-unfriendly archs (heads
+      don't divide the model axis — the same test ``tp_friendly`` applies
+      to the activation rules) drop 'model' and shard batch only.
+    * wire quantize/dequantize: K-folded rows over ('pod', 'data').
+    * Newton–Schulz: the stacked-matrix axis over ('data',),
+      replicated-or-rowwise per label (stacks that don't divide lower
+      replicated).
+    * outer update: shape-preserving specs mirroring the outer-state ZeRO
+      layout itself (``outer_update_spec``), with dim -1 on 'model' only
+      for TP-friendly archs (``outer_tp``) — matching the committed
+      sharding is what keeps the donated TrainState aliased.
+    * paged decode: batch slots (plus their page-table rows) over ('data',),
+      KV pool and visit schedules replicated.
+
+    Returns None on single-device worlds (kernels keep their plain
+    single-device pallas_call path).
+    """
+    if mesh is None or mesh.devices.size <= 1:
+        return None
+    from repro.kernels.partition import KernelPartitioning
+
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    flash: tuple[str, ...] = ("data", "model")
+    outer_tp = True
+    if cfg is not None and sizes.get("model", 1) > 1:
+        heads = getattr(cfg, "n_kv_heads", 0) or getattr(cfg, "n_heads", 0)
+        if heads % sizes["model"]:
+            # TP-unfriendly: keep attention replicated over 'model' so the
+            # (unavoidable) gather happens at the layer boundary, not per
+            # kernel call — same reasoning as activation_rules' attn_kv pin
+            flash = ("data",)
+        # outer_tp must track the STATE layout, not the kernel preference:
+        # diloco_state_shardings drops 'model' for TP-unfriendly archs
+        # (tp_friendly), and the outer-update specs must match the committed
+        # sharding exactly or donation loses the aliased state buffers
+        from repro.launch.steps import tp_friendly
+
+        outer_tp = tp_friendly(cfg, mesh)
+    return KernelPartitioning(mesh=mesh, flash_axes=flash, outer_tp=outer_tp)

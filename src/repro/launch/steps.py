@@ -36,10 +36,12 @@ from repro.core.diloco import (
     make_outer,
     outer_step,
 )
+from repro.kernels.partition import kernel_partitioning
 from repro.launch.sharding import (
     batch_shardings,
     cache_shardings,
     diloco_state_shardings,
+    kernel_specs,
     params_shardings,
     replicated,
 )
@@ -182,20 +184,26 @@ def build_train_plans(arch_cfg: ModelConfig, shape: str, mesh: Mesh,
     rules = activation_rules(mesh, B, cfg, train=True)
     n_pods_mesh = dict(zip(mesh.axis_names, mesh.devices.shape)).get("pod", 0)
     spmd_axis = "pod" if n_pods_mesh else None
+    # ONE routing object per plan set: every Pallas call site below
+    # (attention inside the inner step, NS in the optimizer, wire
+    # quantize + fused outer update in the sync) shard_maps itself from it
+    kparts = kernel_specs(mesh, cfg)
 
     def train_step(state, batch):
-        with activation_sharding(rules):
+        with activation_sharding(rules), kernel_partitioning(kparts):
             return inner_step(model, opt, state, batch, spmd_axis=spmd_axis)
 
     def sync_step(state):
-        new_state, _psi = outer_step(dcfg, state, outer=outer)
+        with kernel_partitioning(kparts):
+            new_state, _psi = outer_step(dcfg, state, outer=outer)
         return new_state
 
     # the fused round executor — same builder the TrainEngine compiles
     from repro.engine import build_round_fn, build_superstep_fn
 
     round_fn = build_round_fn(model, dcfg, opt, masks=None, rules=rules,
-                              spmd_axis=spmd_axis, outer=outer)
+                              spmd_axis=spmd_axis, outer=outer,
+                              kernel_parts=kparts)
     H = dcfg.sync_interval
     round_batch_abs = jax.tree.map(
         lambda b: jax.ShapeDtypeStruct((H, *b.shape), b.dtype), batch_abs)
@@ -272,6 +280,7 @@ def build_serve_plan(arch_cfg: ModelConfig, shape: str, mesh: Mesh) -> StepPlan:
     params_sh = params_shardings(mesh, params_abs, tensor_parallel=tp,
                                  expert_parallel=ep)
 
+    kparts = kernel_specs(mesh, cfg)
     if spec.kind == "prefill":
         tokens = jax.ShapeDtypeStruct((B, spec.seq_len), jnp.int32)
         args: tuple = (params_abs, tokens)
@@ -283,12 +292,12 @@ def build_serve_plan(arch_cfg: ModelConfig, shape: str, mesh: Mesh) -> StepPlan:
             shards = shards + (batch_shardings(mesh, ctx, k_stacked=False),)
 
             def prefill_step(params, tokens, context):
-                with activation_sharding(rules):
+                with activation_sharding(rules), kernel_partitioning(kparts):
                     return model.prefill(params, tokens, context=context)
         else:
 
             def prefill_step(params, tokens):
-                with activation_sharding(rules):
+                with activation_sharding(rules), kernel_partitioning(kparts):
                     return model.prefill(params, tokens)
 
         return StepPlan(
@@ -313,7 +322,7 @@ def build_serve_plan(arch_cfg: ModelConfig, shape: str, mesh: Mesh) -> StepPlan:
         rules["moe_buffer"] = P(None, None, "model")
 
     def serve_step(params, cache, token, pos):
-        with activation_sharding(rules):
+        with activation_sharding(rules), kernel_partitioning(kparts):
             return model.decode_step(params, cache, token, pos)
 
     return StepPlan(

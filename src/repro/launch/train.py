@@ -79,6 +79,18 @@ def make_diloco_cfg(args) -> DiLoCoConfig:
     )
 
 
+def parse_mesh(spec: str):
+    """'DxM' or 'PxDxM' -> a debug mesh over the host devices (P -> 'pod')."""
+    from repro.launch.mesh import make_debug_mesh
+
+    dims = [int(d) for d in spec.lower().split("x")]
+    if len(dims) == 2:
+        return make_debug_mesh(dims[0], dims[1])
+    if len(dims) == 3:
+        return make_debug_mesh(dims[1], dims[2], pod=dims[0])
+    raise SystemExit(f"--mesh {spec!r}: expected DxM or PxDxM")
+
+
 def train(args) -> dict:
     cfg = get_config(args.arch)
     if args.reduced:
@@ -106,9 +118,27 @@ def train(args) -> dict:
         ns_period=args.ns_period,
     )
 
-    engine = TrainEngine(model, dcfg, icfg)
+    # --mesh runs the SAME driver under the StepPlan layout: state and
+    # batches committed to the mesh shardings, the worker axis vmapped over
+    # 'pod', and every Pallas call site shard_mapped via the engine's
+    # kernel_specs routing (so --attn-impl/--ns-impl/--outer-kernel pallas
+    # are legal on multi-device worlds)
+    mesh = parse_mesh(args.mesh) if args.mesh else None
+    ekw: dict = {}
+    if mesh is not None:
+        from repro.launch.mesh import mesh_axis_sizes
+        from repro.launch.steps import activation_rules, tp_friendly
+
+        ekw = {"mesh": mesh,
+               "rules": activation_rules(mesh, args.batch_per_worker, cfg,
+                                         train=True),
+               "spmd_axis": ("pod" if mesh_axis_sizes(mesh).get("pod", 0) > 1
+                             else None)}
+    engine = TrainEngine(model, dcfg, icfg, **ekw)
     rng = jax.random.PRNGKey(args.seed)
     state = engine.init(rng)
+    if mesh is not None:
+        state = engine.place_state(state, tensor_parallel=tp_friendly(cfg, mesh))
 
     start_round = 0
     if args.resume and os.path.exists(args.resume):
@@ -210,9 +240,17 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--streaming", type=int, default=1, help="J partitions")
     ap.add_argument("--ns-impl", default="jnp", choices=["jnp", "pallas"])
     ap.add_argument("--attn-impl", default="xla", choices=["xla", "pallas"],
-                    help="attention backend: 'xla' (dense/blockwise, the "
-                         "GSPMD-safe default) or 'pallas' (fused "
-                         "flash-attention kernel; interpret mode off-TPU)")
+                    help="attention backend: 'xla' (dense/blockwise) or "
+                         "'pallas' (fused flash-attention kernel; interpret "
+                         "mode off-TPU). Both run on a --mesh: pallas is "
+                         "shard_mapped over the mesh by the engine's kernel "
+                         "routing")
+    ap.add_argument("--mesh", default=None,
+                    help="run sharded on a DxM or PxDxM debug mesh over the "
+                         "host devices (e.g. 2x2x2 with "
+                         "XLA_FLAGS=--xla_force_host_platform_device_count=8); "
+                         "P is the 'pod' worker axis and must divide "
+                         "--workers")
     ap.add_argument("--blockwise-threshold", type=int, default=4096,
                     help="seq length at which attn_impl=xla switches from "
                          "dense softmax to blockwise online-softmax")

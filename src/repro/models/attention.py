@@ -90,8 +90,10 @@ def attend(p: PyTree, cfg: ModelConfig, x: jax.Array, positions: jax.Array,
     * ``'pallas'`` — the fused flash-attention kernel
       (:func:`repro.kernels.flash_attention.gqa_flash_attention`): GQA-native
       blocked online softmax with full-block skipping and a flash-style
-      custom VJP. Interpret mode off-TPU; no GSPMD partitioning rules, so
-      the production-mesh paths keep ``'xla'``.
+      custom VJP. Interpret mode off-TPU. On a mesh the StepPlan machinery
+      routes the call through shard_map (batch x kv-heads over
+      'data' x 'model', see :func:`repro.launch.sharding.kernel_specs`), so
+      'pallas' lowers on multi-device worlds too.
     * ``'xla'`` (default) — dense O(S^2) softmax below
       ``cfg.blockwise_threshold``; above it, a blockwise online-softmax
       recurrence (lax.scan over kv blocks) that never materializes the

@@ -12,7 +12,10 @@ Two dispatches cover the whole request lifecycle:
   jitted program that emits ``[span, B]`` tokens per call, so the host
   dispatches (and syncs) once per span instead of once per token.
 
-Both donate the paged cache, so XLA updates the pool in place.
+Both donate the paged cache, so XLA updates the pool in place. On a mesh,
+``kernel_parts`` (see :func:`repro.launch.sharding.kernel_specs`) is
+installed around the traced bodies so the Pallas paged-decode kernel
+shard_maps its batch slots over 'data' instead of failing to partition.
 """
 from __future__ import annotations
 
@@ -20,6 +23,8 @@ from typing import Callable
 
 import jax
 import jax.numpy as jnp
+
+from repro.kernels.partition import kernel_partitioning
 
 
 def sample_tokens(logits: jax.Array, rng: jax.Array, temperature: float) -> jax.Array:
@@ -29,13 +34,14 @@ def sample_tokens(logits: jax.Array, rng: jax.Array, temperature: float) -> jax.
     return jnp.argmax(logits, axis=-1).astype(jnp.int32)
 
 
-def build_prefill_fn(model, temperature: float) -> Callable:
+def build_prefill_fn(model, temperature: float, kernel_parts=None) -> Callable:
     """jit: (params, cache, tokens [N,P], table [N,max_pages], lengths [N],
     rng) -> (cache, first_token [N]). Cache donated."""
 
     def prefill(params, cache, tokens, page_table, lengths, rng):
-        logits, cache = model.paged_prefill(params, cache, tokens,
-                                            page_table, lengths)
+        with kernel_partitioning(kernel_parts):
+            logits, cache = model.paged_prefill(params, cache, tokens,
+                                                page_table, lengths)
         n = tokens.shape[0]
         last = logits[jnp.arange(n), lengths - 1]  # each row's true last position
         return cache, sample_tokens(last, rng, temperature)
@@ -43,7 +49,8 @@ def build_prefill_fn(model, temperature: float) -> Callable:
     return jax.jit(prefill, donate_argnums=(1,))
 
 
-def build_span_fn(model, span: int, temperature: float, impl: str = "xla") -> Callable:
+def build_span_fn(model, span: int, temperature: float, impl: str = "xla",
+                  kernel_parts=None) -> Callable:
     """jit: (params, cache, tok [B], lengths [B], table [B,max_pages], rng)
     -> (cache, tokens [span, B]). Cache donated.
 
@@ -61,8 +68,9 @@ def build_span_fn(model, span: int, temperature: float, impl: str = "xla") -> Ca
             nxt = sample_tokens(logits, step_rng, temperature)
             return (cache, nxt, lens + 1), nxt
 
-        (cache, _, _), toks = jax.lax.scan(
-            step, (cache, tok, lengths), jax.random.split(rng, span))
+        with kernel_partitioning(kernel_parts):
+            (cache, _, _), toks = jax.lax.scan(
+                step, (cache, tok, lengths), jax.random.split(rng, span))
         return cache, toks
 
     return jax.jit(span_fn, donate_argnums=(1,))

@@ -141,7 +141,7 @@ class PagedEngine:
     def __init__(self, model, params, *, slots: int = 4, page_size: int = 16,
                  max_pages: int = 64, decode_steps_per_dispatch: int = 8,
                  temperature: float = 0.0, attn_impl: str = "xla",
-                 rng: jax.Array | None = None):
+                 mesh=None, rng: jax.Array | None = None):
         if not model.supports_paged_decode:
             raise ValueError(
                 f"arch_type {model.cfg.arch_type!r} has no paged decode path; "
@@ -152,9 +152,23 @@ class PagedEngine:
         self.max_pages = max_pages
         self.span = decode_steps_per_dispatch
         self.rng = rng if rng is not None else jax.random.PRNGKey(0)
-        self._prefill = _decode.build_prefill_fn(model, temperature)
+        # mesh routing: the paged-decode Pallas kernel shard_maps its batch
+        # slots over 'data' (KV pool replicated — page ids stay valid on
+        # every device); None on single-device worlds
+        self.mesh = mesh
+        from repro.launch.sharding import kernel_specs
+
+        kparts = kernel_specs(mesh, model.cfg) if mesh is not None else None
+        self._prefill = _decode.build_prefill_fn(model, temperature,
+                                                 kernel_parts=kparts)
         self._span_fn = _decode.build_span_fn(model, self.span, temperature,
-                                              impl=attn_impl)
+                                              impl=attn_impl,
+                                              kernel_parts=kparts)
+
+    def _mesh_ctx(self):
+        from contextlib import nullcontext
+
+        return self.mesh if self.mesh is not None else nullcontext()
 
     def _init_state(self) -> DecodeState:
         return DecodeState(
@@ -197,9 +211,10 @@ class PagedEngine:
                     lens[i] = len(r.tokens)
                 rows = np.stack([sched.alloc.page_table_row(r.rid, table_w)
                                  for _, r in admitted])
-                state.cache, first = self._prefill(
-                    self.params, state.cache, toks, rows, lens,
-                    jax.random.fold_in(self.rng, 2 * step))
+                with self._mesh_ctx():
+                    state.cache, first = self._prefill(
+                        self.params, state.cache, toks, rows, lens,
+                        jax.random.fold_in(self.rng, 2 * step))
                 first = np.asarray(first)
                 for i, (slot, r) in enumerate(admitted):
                     state.tok[slot] = first[i]
@@ -215,10 +230,11 @@ class PagedEngine:
                 table = sched.alloc.page_table(
                     [o.rid if o is not None else None for o in state.owners],
                     table_w)
-                state.cache, toks = self._span_fn(
-                    self.params, state.cache, state.tok,
-                    state.lengths.astype(np.int32), table,
-                    jax.random.fold_in(self.rng, 2 * step + 1))
+                with self._mesh_ctx():
+                    state.cache, toks = self._span_fn(
+                        self.params, state.cache, state.tok,
+                        state.lengths.astype(np.int32), table,
+                        jax.random.fold_in(self.rng, 2 * step + 1))
                 toks = np.asarray(toks)  # [span, B]
                 for i in active:
                     emitted[state.owners[i].rid].extend(toks[:, i].tolist())

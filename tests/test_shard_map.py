@@ -1,0 +1,55 @@
+"""shard_map kernel partitioning: multi-device == single-device, bitwise.
+
+Every Pallas call site routes through ``kernel_partitioning`` /
+``kernel_specs`` on a mesh (the PR's tentpole). These tests assert the
+contract that makes the routing deployable: for every kernel, the
+shard_mapped multi-device output is **bitwise identical** to the
+single-device Pallas path (and allclose to the jnp oracle), including the
+flash custom VJP under the production composition
+``vmap(spmd_axis_name='pod')`` + ``lax.scan`` + ``remat``, and the paged
+decode kernel over a ragged page table.
+
+The device world is forced to 8 host devices in a child process
+(``tests/_shard_map_harness.py``) because XLA pins the device count at
+first initialization — the main pytest process must keep its single CPU
+device. The harness runs ALL kernels in one child (one jax init, not
+seven) and prints a JSON verdict per kernel.
+"""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+HARNESS = os.path.join(REPO, "tests", "_shard_map_harness.py")
+
+
+@pytest.fixture(scope="module")
+def verdicts() -> dict:
+    env = dict(os.environ, PYTHONPATH="src")
+    res = subprocess.run([sys.executable, HARNESS], capture_output=True,
+                         text=True, env=env, cwd=REPO, timeout=900)
+    assert res.returncode == 0, res.stderr[-3000:]
+    return json.loads(res.stdout.strip().splitlines()[-1])
+
+
+def test_harness_world(verdicts):
+    assert verdicts["devices"] == 8
+    assert verdicts["mesh"] == {"pod": 2, "data": 2, "model": 2}
+
+
+@pytest.mark.parametrize("kernel", [
+    "flash_fwd", "quantize", "dequantize", "ns_orthogonalize",
+    "outer_update", "paged_decode",
+])
+def test_shard_mapped_bitwise_and_close_to_ref(verdicts, kernel):
+    rec = verdicts[kernel]
+    assert rec["bitwise"], f"{kernel}: shard_mapped != single-device: {rec}"
+    assert rec["vs_ref"], f"{kernel}: pallas path diverged from oracle: {rec}"
+
+
+def test_flash_vjp_bitwise_under_vmap_scan_remat(verdicts):
+    rec = verdicts["flash_vjp"]
+    assert rec["bitwise"], f"flash VJP grads not bitwise: {rec}"
