@@ -32,6 +32,7 @@ def all_benchmarks():
         "serve_bench": sy.bench_serve_throughput,
         "optimizer_bench": sy.bench_optimizer_sweep,
         "compression_bench": sy.bench_compression_sweep,
+        "fault_bench": sy.bench_fault_bench,
         "tab10": sy.bench_tab10_wallclock,
         "fig16": sy.bench_fig16_utilization,
         "tab2": sy.bench_tab2_scaling_forms,

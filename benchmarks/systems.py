@@ -343,6 +343,71 @@ def bench_serve_throughput(reps: int = 2) -> list[dict]:
     return rows
 
 
+def bench_fault_bench(rounds: int = 5) -> list[dict]:
+    """fault_bench: elastic-DiLoCo degradation curves on the toy model.
+
+    Two curve families per worker count K in {2, 4}, both through the real
+    engine (donated fused round, participation mask / pending FIFO in the
+    program — not a host-side simulation):
+
+      * ``staleness``  — final eval loss vs ``sync_delay`` d in {0, 1, 2}
+        (delayed outer sync, full participation): how much convergence the
+        overlap window costs when the pseudogradient lands d rounds late;
+      * ``drop``       — final eval loss vs i.i.d. per-round drop
+        probability p in {0, 0.25, 0.5} (lockstep sync): how much worker
+        churn costs when dropped workers freeze and the reduce averages the
+        survivors. ``derived`` carries the realized mean active-worker
+        count and the mean per-round wire fraction, which the elastic
+        comm_bytes metric scales by construction.
+
+    The d=0 / p=0 anchors of the two families are the same dense run, so
+    the curves share a baseline by construction.
+    """
+    from benchmarks.common import LR, TOY, eval_loss, make_stream
+    from repro.core import DiLoCoConfig
+    from repro.core.faults import FaultPlan
+    from repro.data import batches_for_round
+    from repro.engine import TrainEngine, run_rounds
+    from repro.models import build_model
+    from repro.optim import OptimizerConfig
+
+    H = 4
+
+    def run(K: int, sync_delay: int = 0, drop_prob: float = 0.0):
+        dcfg = DiLoCoConfig(n_workers=K, sync_interval=H, inner_name="muon",
+                            elastic=drop_prob > 0, sync_delay=sync_delay)
+        model = build_model(TOY)
+        icfg = OptimizerConfig(lr=LR["muon"], weight_decay=1e-4,
+                               schedule="cosine", total_steps=rounds * H)
+        engine = TrainEngine(model, dcfg, icfg)
+        state = engine.init(jax.random.PRNGKey(0))
+        stream = make_stream(K)
+        plan = FaultPlan(n_workers=K, drop_prob=drop_prob, seed=7)
+        state, hist = run_rounds(
+            engine, state,
+            lambda r: batches_for_round(stream, r, H), rounds,
+            participation_for=plan.masks if drop_prob > 0 else None)
+        active = [h.get("active_workers", float(K)) for h in hist]
+        return (eval_loss(model, state["outer_params"]),
+                float(np.mean(active)) if active else float(K))
+
+    rows = []
+    for K in (2, 4):
+        for d in (0, 1, 2):
+            loss, _ = run(K, sync_delay=d)
+            rows.append({"name": f"fault_bench/staleness/K{K}/d{d}",
+                         "value": round(loss, 4),
+                         "derived": f"loss;sync_delay={d}"})
+        for p in (0.0, 0.25, 0.5):
+            loss, mean_active = run(K, drop_prob=p)
+            rows.append({"name": f"fault_bench/drop/K{K}/p{p}",
+                         "value": round(loss, 4),
+                         "derived": (f"loss;drop_prob={p};"
+                                     f"mean_active={mean_active:.2f};"
+                                     f"wire_frac={mean_active / K:.3f}")})
+    return rows
+
+
 def bench_tab10_wallclock() -> list[dict]:
     """Tab. 10: idealized 15B training hours across bandwidths."""
     rows = []

@@ -45,7 +45,25 @@ from repro.core.wire import (
 PyTree = Any
 
 
-def reduce_pseudogradients(worker_comm: PyTree, cfg: CompressionConfig) -> PyTree:
+def participation_mean(vals: jax.Array, participation: jax.Array | None) -> jax.Array:
+    """Mean over the leading K axis restricted to participating workers.
+
+    ``participation`` is a [K] float32 {0,1} mask (``None`` = everyone).
+    Computed as ``sum(p * vals) * (1 / max(sum(p), 1))`` — the reciprocal
+    form is what makes the all-ones mask **bitwise identical** to
+    ``jnp.mean`` at every K (``jnp.mean`` multiplies by the reciprocal of
+    the count; a plain division differs in the last ulp whenever 1/K is
+    inexact, e.g. K=3).
+    """
+    if participation is None:
+        return jnp.mean(vals, axis=0)
+    p = participation.astype(jnp.float32)
+    pb = p.reshape((p.shape[0],) + (1,) * (vals.ndim - 1))
+    return jnp.sum(pb * vals, axis=0) * (1.0 / jnp.maximum(jnp.sum(p), 1.0))
+
+
+def reduce_pseudogradients(worker_comm: PyTree, cfg: CompressionConfig,
+                           participation: jax.Array | None = None) -> PyTree:
     """Reduce per-worker wire buffers into the pseudogradient Psi.
 
     ``worker_comm`` leaves are the worker stage's output: dense [K, ...]
@@ -54,14 +72,22 @@ def reduce_pseudogradients(worker_comm: PyTree, cfg: CompressionConfig) -> PyTre
     the 'a2a_rs_ag' quantized collective the reduced shard is re-encoded
     through a second wire buffer (Q2) and decoded (D2) before the
     all-gather, exactly the paper's two quantization points.
+
+    With an elastic ``participation`` mask ([K] float32 {0,1}) the mean runs
+    over the surviving subset only (:func:`participation_mean`) — a dropped
+    worker's rows are decoded but carry weight 0, matching a collective that
+    never received its packet. Wire row layouts fold K into the leading row
+    axis with per-worker metadata, so a dropped worker's (stale) buffer
+    never contaminates the survivors' encodings.
     """
     if cfg.kind == "none":
         return jax.tree.map(
-            lambda d: jnp.mean(d.astype(jnp.float32), axis=0), worker_comm)
+            lambda d: participation_mean(d.astype(jnp.float32), participation),
+            worker_comm)
 
     def per_leaf(w):
         vals = decode_leaf(w, impl=cfg.wire_impl)  # D1: [K, ...] f32
-        psi = jnp.mean(vals, axis=0)
+        psi = participation_mean(vals, participation)
         if cfg.kind == "quant" and cfg.collective == "a2a_rs_ag":
             w2 = encode_leaf(psi, cfg, batch_ndim=0)  # Q2: re-quantize shard
             psi = decode_leaf(w2, impl=cfg.wire_impl)  # D2: after all-gather
@@ -71,11 +97,13 @@ def reduce_pseudogradients(worker_comm: PyTree, cfg: CompressionConfig) -> PyTre
 
 
 def _leaf_wire_pipeline(d: jax.Array, e: jax.Array | None,
-                        cfg: CompressionConfig):
+                        cfg: CompressionConfig,
+                        participation: jax.Array | None = None):
     """The full per-leaf wire path on a [K, ...] delta leaf: (EF accumulate
     ->) Q1 encode -> D1 decode -> mean over K (-> Q2/D2 for a2a_rs_ag).
     Mirrors ``compress``/``error_feedback`` + :func:`reduce_pseudogradients`
-    leafwise. Returns ``(psi f32, new_residual f32 | None)``."""
+    leafwise; ``participation`` restricts the mean to surviving workers.
+    Returns ``(psi f32, new_residual f32 | None)``."""
     if e is not None:
         acc = cfg.ef_decay * e.astype(jnp.float32) + d.astype(jnp.float32)
         w = encode_leaf(acc, cfg, batch_ndim=1)
@@ -84,7 +112,7 @@ def _leaf_wire_pipeline(d: jax.Array, e: jax.Array | None,
         w = encode_leaf(d, cfg, batch_ndim=1)
     vals = decode_leaf(w, impl=cfg.wire_impl)  # D1: the true reconstruction
     new_e = acc - vals if acc is not None else None
-    psi = jnp.mean(vals, axis=0)
+    psi = participation_mean(vals, participation)
     if cfg.kind == "quant" and cfg.collective == "a2a_rs_ag":
         w2 = encode_leaf(psi, cfg, batch_ndim=0)
         psi = decode_leaf(w2, impl=cfg.wire_impl)
@@ -92,7 +120,8 @@ def _leaf_wire_pipeline(d: jax.Array, e: jax.Array | None,
 
 
 def segment_sync_update(deltas: PyTree, residuals: PyTree | None,
-                        mask: PyTree, cfg: CompressionConfig):
+                        mask: PyTree, cfg: CompressionConfig,
+                        participation: jax.Array | None = None):
     """One streaming segment's worker+reduce stages with **wire-row
     subsetting** (ROADMAP item): the concrete partition mask decides, per
     leaf, whether to encode the whole leaf, nothing, only its owned L-rows
@@ -118,12 +147,14 @@ def segment_sync_update(deltas: PyTree, residuals: PyTree | None,
             return jnp.zeros(d.shape[1:], jnp.float32), e
         if plan == "rows":
             e_in = e[:, idx] if e is not None else None
-            psi_sub, new_e_sub = _leaf_wire_pipeline(d[:, idx], e_in, cfg)
+            psi_sub, new_e_sub = _leaf_wire_pipeline(
+                d[:, idx], e_in, cfg, participation=participation)
             psi = jnp.zeros(d.shape[1:], jnp.float32).at[idx].set(psi_sub)
             new_e = (e.astype(jnp.float32).at[:, idx].set(new_e_sub)
                      if e is not None else None)
             return psi, new_e
-        return _leaf_wire_pipeline(d, e, cfg)  # 'all' / 'legacy'
+        # 'all' / 'legacy'
+        return _leaf_wire_pipeline(d, e, cfg, participation=participation)
 
     if residuals is None:
         out = jax.tree.map(lambda d, m: per_leaf(d, None, m), deltas, mask)
@@ -136,13 +167,20 @@ def segment_sync_update(deltas: PyTree, residuals: PyTree | None,
     return psi, jax.tree.map(lambda t: t[1], out, is_leaf=is_pair)
 
 
-def reduce_mean(cfg: CompressionConfig):
+def reduce_mean(cfg: CompressionConfig,
+                participation: jax.Array | None = None):
     """The pseudogradient all-reduce as a stateless transform stage:
     [K, ...]-stacked wire buffers (or dense deltas for kind='none') -> Psi
-    (mean over K, + Q2/D2 for the a2a_rs_ag quantized collective)."""
+    (mean over K, + Q2/D2 for the a2a_rs_ag quantized collective).
+
+    ``participation`` (a traced [K] {0,1} mask, closed over at trace time by
+    :class:`repro.core.diloco.OuterOptimizer`) restricts the mean to the
+    round's surviving workers; ``None`` emits the exact dense program.
+    """
     from repro.optim.transform import stateless
 
-    return stateless(lambda comm, _params: reduce_pseudogradients(comm, cfg))
+    return stateless(lambda comm, _params: reduce_pseudogradients(
+        comm, cfg, participation=participation))
 
 
 # ---------------------------------------------------------------------------

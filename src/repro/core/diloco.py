@@ -73,6 +73,19 @@ class DiLoCoConfig:
     # K=1, H=1 this IS the plain inner optimizer — DP AdamW / DP Muon run
     # through the exact same round function as DiLoCo/MuLoCo.
     outer_enabled: bool = True
+    # Elastic execution: allocate a [K] participation mask in the TrainState
+    # (all-ones at init; the driver overwrites it per round). A dropped
+    # worker (mask 0) freezes in place for the round — no inner steps, no
+    # wire packet, EF residual untouched — and the pseudogradient mean runs
+    # over the surviving subset. False keeps the legacy state leaf set and
+    # the bit-exact dense program.
+    elastic: bool = False
+    # Delayed/overlapped outer sync: round r computes its pseudogradient
+    # Psi_r (communication + EF happen at r) but the outer descent applies
+    # Psi_{r-d} from the TrainState's `pending` FIFO — round r+1's inner
+    # steps start from params that have not yet seen Psi_r, masking sync
+    # latency (SNOO-style staleness). 0 = lockstep (bit-exact legacy path).
+    sync_delay: int = 0
 
     @property
     def is_muloco(self) -> bool:
@@ -142,35 +155,70 @@ class OuterOptimizer:
 
     # -- the sync ------------------------------------------------------------
 
-    def step(self, params: PyTree, deltas: PyTree, opt_state: PyTree,
-             ef: PyTree | None, mask: PyTree | None = None):
-        """Run the chain on (masked) deltas; returns
-        ``(new_params, new_opt_state, new_ef, psi)``.
+    def reduce(self, params: PyTree, deltas: PyTree, ef: PyTree | None,
+               mask: PyTree | None = None,
+               participation: jax.Array | None = None):
+        """The communication half of the sync: worker stage (compress/EF) +
+        the pseudogradient all-reduce, NO outer descent. Returns
+        ``(psi, new_ef)``.
 
         A streaming segment (``mask`` present) with wire compression routes
-        the worker+reduce stages through
-        :func:`repro.core.collectives.segment_sync_update` instead of the
-        dense chain: the concrete mask subsets the wire rows, so the
-        simulated buffers themselves shrink to the segment's share
-        (ROADMAP item); the terminal outer descent is unchanged. Masks are
-        closure constants of the jitted round — a traced mask falls back to
-        the full-size masked encode.
+        through :func:`repro.core.collectives.segment_sync_update` instead
+        of the dense stages: the concrete mask subsets the wire rows, so the
+        simulated buffers themselves shrink to the segment's share. Masks
+        are closure constants of the jitted round — a traced mask falls back
+        to the full-size masked encode.
+
+        An elastic ``participation`` mask ([K] {0,1}, traced) restricts the
+        reduce to surviving workers (threaded into
+        :func:`repro.core.collectives.reduce_mean`) and **freezes** dropped
+        workers' EF residuals: their packets were never sent, so their
+        residuals must come back bit-identical, not EF-decayed.
         """
+        ccfg = self.dcfg.compression
         concrete_mask = mask is not None and not any(
             isinstance(m, jax.core.Tracer) for m in jax.tree.leaves(mask))
         if concrete_mask and self.has_wire:
             psi, seg_ef = segment_sync_update(
-                deltas, ef if self.has_ef else None, mask,
-                self.dcfg.compression)
-            psi, opt_after = self.terminal.update(psi, opt_state, params)
-            cand_params, new_opt = self.terminal.apply(params, psi, opt_after)
+                deltas, ef if self.has_ef else None, mask, ccfg,
+                participation=participation)
             new_ef = seg_ef if self.has_ef else ef
         else:
-            state = (ef if self.has_ef else (), (), opt_state)
-            psi, state = self.tx.update(deltas, state, params)
-            cand_params, state = self.tx.apply(params, psi, state)
-            new_ef = state[0] if self.has_ef else ef
-            new_opt = state[2]
+            sub = chain(self.worker_stage, reduce_mean(ccfg, participation))
+            psi, sub_state = sub.update(
+                deltas, (ef if self.has_ef else (), ()), params)
+            new_ef = sub_state[0] if self.has_ef else ef
+        if participation is not None and self.has_ef and ef is not None:
+            pk = participation.astype(jnp.float32)
+            new_ef = jax.tree.map(
+                lambda ne, oe: jnp.where(
+                    pk.reshape((pk.shape[0],) + (1,) * (ne.ndim - 1)) > 0,
+                    ne, oe.astype(ne.dtype)),
+                new_ef, ef)
+        return psi, new_ef
+
+    def descend(self, params: PyTree, psi: PyTree, opt_state: PyTree):
+        """The terminal half: outer transform update + parameter descent on
+        an already-reduced pseudogradient. Returns ``(new_params, new_opt)``.
+        Split from :meth:`reduce` so the delayed-sync mode can apply a
+        *stale* psi while the fresh one enters the pending FIFO."""
+        psi, opt_after = self.terminal.update(psi, opt_state, params)
+        return self.terminal.apply(params, psi, opt_after)
+
+    def step(self, params: PyTree, deltas: PyTree, opt_state: PyTree,
+             ef: PyTree | None, mask: PyTree | None = None,
+             participation: jax.Array | None = None):
+        """Run the full chain on (masked) deltas; returns
+        ``(new_params, new_opt_state, new_ef, psi)``. Exactly
+        :meth:`reduce` followed by :meth:`descend` — the same op sequence
+        the one-shot ``self.tx`` chain produced — plus the streaming-mask
+        merge semantics, which are stage-specific: candidate params and
+        outer momentum merge under the partition mask, untouched partitions
+        keep their EF residuals.
+        """
+        psi, new_ef = self.reduce(params, deltas, ef, mask=mask,
+                                  participation=participation)
+        cand_params, new_opt = self.descend(params, psi, opt_state)
         if mask is None:
             return cand_params, new_opt, new_ef, psi
         new_params = masked_update(mask, cand_params, params)
@@ -196,12 +244,25 @@ def diloco_init(model: Model, dcfg: DiLoCoConfig, inner_cfg: OptimizerConfig, rn
     # imported lazily: repro.engine builds on repro.core, not the reverse
     from repro.engine.state import TrainState
 
+    if dcfg.sync_delay:
+        if not dcfg.outer_enabled:
+            raise ValueError("sync_delay requires the outer optimizer "
+                             "(outer_enabled=False has no pseudogradient to delay)")
+        if dcfg.streaming_partitions > 1:
+            raise ValueError("sync_delay cannot be combined with streaming "
+                             "(J>1) segment syncs")
     params = model.init(rng)
     K = dcfg.n_workers
     worker_params = jax.tree.map(lambda p: jnp.broadcast_to(p[None], (K, *p.shape)), params)
     opt = make_optimizer(dcfg, inner_cfg)
     inner_state = jax.vmap(opt.init)(worker_params)
     outer = make_outer(dcfg, state_dtype=inner_cfg.state_dtype)
+    # the pending FIFO starts as zeros: the first sync_delay rounds apply a
+    # zero pseudogradient (the outer params hold still while the pipeline
+    # fills), exactly the cold-start a delayed production sync would see
+    pending = (jax.tree.map(
+        lambda p: jnp.zeros((dcfg.sync_delay, *p.shape), jnp.float32), params)
+        if dcfg.sync_delay else None)
     return TrainState(
         outer_params=params,
         outer_opt=outer.init_opt(params),
@@ -209,6 +270,8 @@ def diloco_init(model: Model, dcfg: DiLoCoConfig, inner_cfg: OptimizerConfig, rn
         inner_state=inner_state,
         round=jnp.zeros((), jnp.int32),
         ef=outer.init_ef(params, K),
+        participation=(jnp.ones((K,), jnp.float32) if dcfg.elastic else None),
+        pending=pending,
     )
 
 
@@ -227,12 +290,19 @@ def _updated(state: PyTree, **kw) -> PyTree:
 
 
 def inner_step(model: Model, opt, state: PyTree, batch: PyTree,
-               spmd_axis: str | None = None) -> tuple[PyTree, dict]:
+               spmd_axis: str | None = None,
+               participation: jax.Array | None = None) -> tuple[PyTree, dict]:
     """One local optimizer step on every worker. batch leaves: [K, B/K, ...].
 
     ``spmd_axis='pod'`` tells GSPMD the vmapped worker axis lives on the pod
     mesh axis, so activation sharding constraints inside the model compose
-    with the worker dimension on the production mesh."""
+    with the worker dimension on the production mesh.
+
+    An elastic ``participation`` mask ([K] {0,1}) freezes dropped workers in
+    place: their params and inner-optimizer state come back bit-identical
+    (``where`` on the mask) and the reported loss is the mean over the
+    surviving workers only. The all-ones mask selects every new value
+    elementwise, so it is bitwise-equal to the maskless program."""
 
     def one(params_k, inner_k, batch_k):
         (loss, metrics), grads = jax.value_and_grad(model.loss, has_aux=True)(params_k, batch_k)
@@ -241,8 +311,21 @@ def inner_step(model: Model, opt, state: PyTree, batch: PyTree,
 
     new_wp, new_is, losses = jax.vmap(one, spmd_axis_name=spmd_axis)(
         state["worker_params"], state["inner_state"], batch)
+    if participation is None:
+        loss = jnp.mean(losses)
+    else:
+        pk = participation.astype(jnp.float32)
+
+        def freeze(new, old):
+            pb = pk.reshape((pk.shape[0],) + (1,) * (new.ndim - 1))
+            return jnp.where(pb > 0, new, old)
+
+        new_wp = jax.tree.map(freeze, new_wp, state["worker_params"])
+        new_is = jax.tree.map(freeze, new_is, state["inner_state"])
+        # reciprocal form: bitwise == jnp.mean for the all-ones mask
+        loss = jnp.sum(pk * losses) * (1.0 / jnp.maximum(jnp.sum(pk), 1.0))
     new_state = _updated(state, worker_params=new_wp, inner_state=new_is)
-    return new_state, {"loss": jnp.mean(losses), "loss_per_worker": losses}
+    return new_state, {"loss": loss, "loss_per_worker": losses}
 
 
 # ---------------------------------------------------------------------------
@@ -258,31 +341,65 @@ def compute_deltas(state: PyTree) -> PyTree:
     )
 
 
+_FROM_STATE = object()  # sentinel: outer_step reads participation off the state
+
+
 def outer_step(dcfg: DiLoCoConfig, state: PyTree, mask: PyTree | None = None,
-               outer: OuterOptimizer | None = None) -> tuple[PyTree, PyTree]:
+               outer: OuterOptimizer | None = None,
+               participation: jax.Array | None = _FROM_STATE) -> tuple[PyTree, PyTree]:
     """Communicate + outer update (+ worker reset). Returns (state, Ψ).
 
     The pseudogradient path Δ -> compress/EF -> reduce -> outer descent runs
     through the declared :class:`OuterOptimizer` chain (built from ``dcfg``
     when not supplied — the engine builds it once and threads it through).
 
+    Elastic execution reads the [K] participation mask from the TrainState
+    (pass ``participation=None`` explicitly to force the dense program — the
+    all-ones branch of :func:`diloco_round`'s runtime cond does this so the
+    full-participation round is the *literal* maskless computation, bitwise):
+    dropped workers' deltas are excluded from the reduce, their EF residuals
+    come back frozen, and every worker — dropped ones included — resets to
+    the new outer params (rejoin IS the broadcast; a dropped worker did no
+    inner steps, so overwriting its frozen replica is unobservable).
+
+    With ``dcfg.sync_delay = d > 0`` the fresh pseudogradient Ψ_r enters the
+    ``pending`` FIFO while the descent applies ``pending[0]`` = Ψ_{r-d}:
+    round r+1 starts from params that have not yet absorbed Ψ_r, which is
+    what lets a real deployment overlap the sync with the next round's
+    compute. Communication, EF accumulation, and byte accounting all happen
+    at round r — only the *application* is late.
+
     With ``dcfg.outer_enabled=False`` (the DP degenerate config) the synced
     params are simply the K-mean of the worker params: no outer transform, no
     compression, no worker reset — at K=1 this is exactly the plain inner
     optimizer, through the same code path as DiLoCo/MuLoCo.
     """
+    from repro.core.collectives import participation_mean
+
+    if participation is _FROM_STATE:
+        participation = state.get("participation")
     deltas = compute_deltas(state)
     if not dcfg.outer_enabled:
         if mask is not None:
             raise ValueError(
                 "streaming (partitioned) sync requires the outer optimizer; "
                 "outer_enabled=False cannot be combined with streaming_partitions > 1")
-        psi = jax.tree.map(lambda d: jnp.mean(d, axis=0), deltas)
-        new_outer = jax.tree.map(
-            lambda o, w: jnp.mean(w.astype(jnp.float32), axis=0).astype(o.dtype)
-            if w.shape[0] > 1 else w[0],
-            state["outer_params"], state["worker_params"],
-        )
+        if participation is None or dcfg.n_workers == 1:
+            # legacy dense program (a K=1 elastic mask is always all-ones)
+            psi = jax.tree.map(lambda d: jnp.mean(d, axis=0), deltas)
+            new_outer = jax.tree.map(
+                lambda o, w: jnp.mean(w.astype(jnp.float32), axis=0).astype(o.dtype)
+                if w.shape[0] > 1 else w[0],
+                state["outer_params"], state["worker_params"],
+            )
+        else:
+            psi = jax.tree.map(
+                lambda d: participation_mean(d, participation), deltas)
+            new_outer = jax.tree.map(
+                lambda o, w: participation_mean(
+                    w.astype(jnp.float32), participation).astype(o.dtype),
+                state["outer_params"], state["worker_params"],
+            )
         # broadcast the averaged params back so workers stay synced (at K=1
         # this is the identity; at K>1 it is every-H parameter averaging —
         # without it the replicas would silently drift apart forever)
@@ -296,9 +413,30 @@ def outer_step(dcfg: DiLoCoConfig, state: PyTree, mask: PyTree | None = None,
         deltas = jax.tree.map(lambda m, d: m[None] * d if m.ndim else m * d, mask, deltas)
 
     outer = outer or make_outer(dcfg)
-    new_outer, new_opt, new_ef, psi = outer.step(
-        state["outer_params"], deltas, state["outer_opt"], state.get("ef"),
-        mask=mask)
+    if dcfg.sync_delay:
+        if mask is not None:
+            raise ValueError("sync_delay cannot be combined with streaming "
+                             "(J>1) segment syncs")
+        pending = state.get("pending")
+        if pending is None:
+            raise ValueError("sync_delay > 0 needs the pending FIFO in the "
+                             "TrainState; build it with diloco_init on a "
+                             "config with the same sync_delay")
+        psi, new_ef = outer.reduce(state["outer_params"], deltas,
+                                   state.get("ef"),
+                                   participation=participation)
+        stale_psi = jax.tree.map(lambda q: q[0], pending)
+        new_outer, new_opt = outer.descend(state["outer_params"], stale_psi,
+                                           state["outer_opt"])
+        new_pending = jax.tree.map(
+            lambda q, pn: jnp.concatenate(
+                [q[1:], pn[None].astype(q.dtype)], axis=0),
+            pending, psi)
+    else:
+        new_pending = None
+        new_outer, new_opt, new_ef, psi = outer.step(
+            state["outer_params"], deltas, state["outer_opt"], state.get("ef"),
+            mask=mask, participation=participation)
 
     # broadcast synced params back to workers (masked portions only)
     def reset(o, w, m=None):
@@ -317,6 +455,8 @@ def outer_step(dcfg: DiLoCoConfig, state: PyTree, mask: PyTree | None = None,
                          worker_params=new_workers)
     if new_ef is not None:
         updates["ef"] = new_ef
+    if new_pending is not None:
+        updates["pending"] = new_pending
     updates["round"] = state["round"] + 1
     return _updated(state, **updates), psi
 
@@ -348,31 +488,59 @@ def diloco_round(model: Model, dcfg: DiLoCoConfig, opt, state: PyTree, batches: 
     bandwidth drops by J while the sync period per partition stays H.
 
     Returns ``(state, {"loss": f32[H], "psi": pseudogradient_tree,
-    "comm_bytes": f32[]})`` for every J; with J>1 the ``psi`` leaves are the
-    mask-combined per-segment pseudogradients (each parameter's entry comes
-    from the segment that synced it), so the signature is identical to the
-    J==1 path. ``comm_bytes`` is the round's measured per-worker wire
-    traffic — read off the actual wire buffer shapes/dtypes the sync(s)
-    move (:func:`repro.core.collectives.measured_sync_bytes`), summed over
-    the J segment syncs (each segment ships its partition's share). The
-    metric travels as f32 (x64 is disabled), so above ~16.7 MB/round it
-    carries ~7 significant digits; exact integers come from calling
-    ``measured_sync_bytes`` directly.
+    "comm_bytes": f32[], "active_workers": f32[], "staleness": f32[]})`` for
+    every J; with J>1 the ``psi`` leaves are the mask-combined per-segment
+    pseudogradients (each parameter's entry comes from the segment that
+    synced it), so the signature is identical to the J==1 path.
+    ``comm_bytes`` is the round's measured per-worker wire traffic — read
+    off the actual wire buffer shapes/dtypes the sync(s) move
+    (:func:`repro.core.collectives.measured_sync_bytes`), summed over the J
+    segment syncs (each segment ships its partition's share). On an elastic
+    round the dense total is scaled by the surviving-worker fraction
+    ``sum(p)/K`` — dropped workers' packets are never encoded, so they are
+    not charged. The metric travels as f32 (x64 is disabled), so above
+    ~16.7 MB/round it carries ~7 significant digits; exact integers come
+    from calling ``measured_sync_bytes`` directly. ``active_workers`` is
+    the round's surviving-worker count (== K on non-elastic rounds) and
+    ``staleness`` the config's ``sync_delay``, threaded out so the driver
+    can log them per round.
     """
     H, J = dcfg.sync_interval, dcfg.streaming_partitions
+    participation = state.get("participation")
+    if dcfg.sync_delay and J > 1:
+        raise ValueError("sync_delay cannot be combined with streaming "
+                         "(J>1) segment syncs")
 
     def sync_bytes(mask=None) -> int:
         return measured_sync_bytes(state["outer_params"], dcfg.compression,
                                    dcfg.n_workers, mask=mask,
                                    outer_enabled=dcfg.outer_enabled)
 
-    def scan_inner(state, seg_batches):
+    def comm_metric(dense_bytes: int) -> jax.Array:
+        """Dense per-worker wire bytes, fraction-scaled on elastic rounds.
+
+        The ``c * (sum(p)/K)`` op order matters: ``sum(p)/K`` is exactly 1.0
+        for the all-ones mask at any K, so the dense program's
+        ``asarray(bytes)`` value comes back bit-identical."""
+        c = jnp.asarray(dense_bytes, jnp.float32)
+        if participation is None:
+            return c
+        p = participation.astype(jnp.float32)
+        return c * (jnp.sum(p) / jnp.float32(dcfg.n_workers))
+
+    active = (jnp.sum(participation.astype(jnp.float32))
+              if participation is not None
+              else jnp.asarray(float(dcfg.n_workers), jnp.float32))
+    staleness = jnp.asarray(float(dcfg.sync_delay), jnp.float32)
+
+    def scan_inner(state, seg_batches, part):
         # carry only what the inner steps mutate: outer params/opt, EF
         # residuals and the round counter are loop-invariant and stay out of
         # the while-loop state.
         def body(carry, b):
             sub = {"worker_params": carry[0], "inner_state": carry[1]}
-            sub, m = inner_step(model, opt, sub, b, spmd_axis=spmd_axis)
+            sub, m = inner_step(model, opt, sub, b, spmd_axis=spmd_axis,
+                                participation=part)
             return (sub["worker_params"], sub["inner_state"]), m["loss"]
 
         (wp, ins), losses = jax.lax.scan(
@@ -381,10 +549,30 @@ def diloco_round(model: Model, dcfg: DiLoCoConfig, opt, state: PyTree, batches: 
 
     if J <= 1:
         comm = sync_bytes()
-        state, losses = scan_inner(state, batches)
-        state, psi = outer_step(dcfg, state, outer=outer)
+
+        def run_round(state, part):
+            state, losses = scan_inner(state, batches, part)
+            state, psi = outer_step(dcfg, state, outer=outer,
+                                    participation=part)
+            return state, losses, psi
+
+        if participation is None:
+            state, losses, psi = run_round(state, None)
+        else:
+            # Runtime two-way dispatch: the full-participation round executes
+            # the LITERAL dense program (same ops, same fusions — the masked
+            # program's extra selects perturb XLA fusion by 1 ulp even under
+            # an all-ones mask), so elastic configs stay bitwise-equal to the
+            # maskless path whenever nobody dropped. Only genuinely degraded
+            # rounds pay for the masked computation.
+            state, losses, psi = jax.lax.cond(
+                jnp.all(participation > 0),
+                lambda st: run_round(st, None),
+                lambda st: run_round(st, participation),
+                state)
         return state, {"loss": losses, "psi": psi,
-                       "comm_bytes": jnp.asarray(comm, jnp.float32)}
+                       "comm_bytes": comm_metric(comm),
+                       "active_workers": active, "staleness": staleness}
 
     if H % J:
         raise ValueError(
@@ -395,20 +583,35 @@ def diloco_round(model: Model, dcfg: DiLoCoConfig, opt, state: PyTree, batches: 
             "streaming (J>1) requires partition masks; build them with "
             "make_streaming_masks(state, dcfg)")
     seg = H // J
-    all_losses = []
-    psi_acc = None
-    comm = 0
-    for j in range(J):
-        seg_batches = jax.tree.map(lambda b: b[j * seg : (j + 1) * seg], batches)
-        state, losses = scan_inner(state, seg_batches)
-        comm += sync_bytes(mask=masks[j])
-        state, psi_j = outer_step(dcfg, state, mask=masks[j], outer=outer)
-        # psi leaves are un-stacked (no K axis): the masks broadcast directly
-        masked_j = jax.tree.map(lambda m, p: m * p, masks[j], psi_j)
-        psi_acc = masked_j if psi_acc is None else jax.tree.map(jnp.add, psi_acc, masked_j)
-        all_losses.append(losses)
-    return state, {"loss": jnp.concatenate(all_losses), "psi": psi_acc,
-                   "comm_bytes": jnp.asarray(comm, jnp.float32)}
+    comm = sum(sync_bytes(mask=masks[j]) for j in range(J))
+
+    def run_segments(state, part):
+        all_losses = []
+        psi_acc = None
+        for j in range(J):
+            seg_batches = jax.tree.map(lambda b: b[j * seg : (j + 1) * seg], batches)
+            state, losses = scan_inner(state, seg_batches, part)
+            state, psi_j = outer_step(dcfg, state, mask=masks[j], outer=outer,
+                                      participation=part)
+            # psi leaves are un-stacked (no K axis): the masks broadcast directly
+            masked_j = jax.tree.map(lambda m, p: m * p, masks[j], psi_j)
+            psi_acc = masked_j if psi_acc is None else jax.tree.map(jnp.add, psi_acc, masked_j)
+            all_losses.append(losses)
+        return state, jnp.concatenate(all_losses), psi_acc
+
+    if participation is None:
+        state, losses, psi = run_segments(state, None)
+    else:
+        # same two-way dispatch as J==1: all-ones -> the literal dense
+        # J-segment program, any drop -> the masked program
+        state, losses, psi = jax.lax.cond(
+            jnp.all(participation > 0),
+            lambda st: run_segments(st, None),
+            lambda st: run_segments(st, participation),
+            state)
+    return state, {"loss": losses, "psi": psi,
+                   "comm_bytes": comm_metric(comm),
+                   "active_workers": active, "staleness": staleness}
 
 
 def make_streaming_masks(state: PyTree, dcfg: DiLoCoConfig) -> list[PyTree] | None:

@@ -1,0 +1,90 @@
+"""Fault injection: per-round worker participation for elastic DiLoCo.
+
+Production runs at the paper's K=16 scale lose workers — preemptions,
+hardware faults, stragglers cut off at the round barrier. Elastic DiLoCo
+models that as a per-round **participation mask**: a float32 {0,1} vector of
+length K carried in ``TrainState.participation`` and consumed by
+:func:`repro.core.diloco.diloco_round`. A dropped worker freezes in place
+(no inner steps, no wire packet, EF residual untouched) and its delta is
+excluded from the pseudogradient mean; on rejoin it resets to the current
+outer params exactly like every other worker at the sync, so rejoining IS
+the normal DiLoCo broadcast.
+
+This module is the host side: it turns a fault specification — a scripted
+drop schedule and/or an i.i.d. drop probability — into the ``[R, K]`` mask
+stacks the superstep scans over. Masks are a pure function of
+``(seed, absolute round)``, so any rounds-per-dispatch chunking of the same
+run sees identical masks (the same property that makes R a pure scheduling
+knob for batches).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+def parse_drop_schedule(spec: str) -> dict[int, tuple[int, ...]]:
+    """Parse ``'round:worker[;round:worker...]'`` into {round: (workers,)}.
+
+    Example: ``'1:2;1:3;4:0'`` drops workers 2 and 3 in round 1 and worker 0
+    in round 4 (rounds and workers are 0-indexed; a worker is dropped only
+    for the rounds listed — it rejoins automatically afterwards). Both ``;``
+    and ``,`` separate entries.
+    """
+    sched: dict[int, list[int]] = {}
+    for entry in spec.replace(",", ";").split(";"):
+        entry = entry.strip()
+        if not entry:
+            continue
+        try:
+            r_s, w_s = entry.split(":")
+            r, w = int(r_s), int(w_s)
+        except ValueError as e:
+            raise ValueError(
+                f"bad --drop-schedule entry {entry!r}: expected 'round:worker'") from e
+        if r < 0 or w < 0:
+            raise ValueError(f"--drop-schedule entry {entry!r}: negative index")
+        sched.setdefault(r, []).append(w)
+    return {r: tuple(sorted(set(ws))) for r, ws in sched.items()}
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultPlan:
+    """Host-side participation-mask generator for an elastic run.
+
+    ``drop_prob`` drops each worker independently per round; ``schedule``
+    (see :func:`parse_drop_schedule`) forces specific (round, worker) drops
+    on top. At least one worker always survives: if a round would drop
+    everyone, the worker with the largest random draw — the last one any
+    drop rate would evict — is kept (the same tie-break as
+    :class:`repro.core.wallclock.StragglerModel`, where it makes round
+    times monotone in the drop rate).
+    """
+
+    n_workers: int
+    drop_prob: float = 0.0
+    schedule: dict[int, tuple[int, ...]] | None = None
+    seed: int = 0
+
+    def mask_for_round(self, r: int) -> np.ndarray:
+        """[K] float32 {0,1} participation for absolute round ``r``."""
+        K = self.n_workers
+        # per-(seed, round) generator: masks are chunking-invariant
+        rng = np.random.default_rng(np.random.SeedSequence([self.seed, r]))
+        u = rng.random(K)
+        active = np.ones(K, bool) if self.drop_prob <= 0 else (u >= self.drop_prob)
+        for w in (self.schedule or {}).get(r, ()):
+            if w < K:
+                active[w] = False
+        if not active.any():
+            active[int(np.argmax(u))] = True
+        return active.astype(np.float32)
+
+    def masks(self, r0: int, n: int) -> np.ndarray:
+        """[n, K] float32 masks for rounds ``r0 .. r0+n-1``."""
+        return np.stack([self.mask_for_round(r0 + i) for i in range(n)])
+
+    @property
+    def is_trivial(self) -> bool:
+        return self.drop_prob <= 0 and not self.schedule

@@ -5,10 +5,19 @@ communicates 2*P*bytes every step (ring all-reduce) and DiLoCo/MuLoCo
 communicate the (optionally compressed) pseudogradient every H steps.
 Mirrors the paper's estimates built from measured step times; here the
 compute term comes from the roofline model instead of H100 measurements.
+
+:class:`StragglerModel` extends the deterministic estimate with per-worker
+latency variation: each round every worker draws a lognormal latency
+multiplier and (independently) a drop coin, the sync waits for the slowest
+*surviving* worker, and the per-round wall-clock distribution answers
+"what does p99 worker latency cost at K=16?" — the question elastic DiLoCo
+(worker churn + delayed sync) exists to improve on.
 """
 from __future__ import annotations
 
 import dataclasses
+
+import numpy as np
 
 
 @dataclasses.dataclass(frozen=True)
@@ -71,3 +80,87 @@ def compute_utilization(spec: RunSpec, bandwidth_bps: float, hw: HardwareModel =
     t_step = step_compute_time(spec, hw)
     t_sync_per_step = sync_comm_time(spec, bandwidth_bps) / spec.sync_interval
     return t_step / (t_step + t_sync_per_step)
+
+
+# ---------------------------------------------------------------------------
+# Straggler / churn extension: per-round wall-clock as a distribution
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class StragglerModel:
+    """Per-worker latency + drop model layered over the deterministic estimate.
+
+    Every round, worker k draws a lognormal latency multiplier
+    ``L_k = exp(sigma*z - sigma^2/2)`` (mean exactly 1, so sigma only widens
+    the distribution without inflating the average) and an independent drop
+    coin. The lockstep sync waits for the *slowest surviving* worker:
+    ``t_round = H * t_step * (1 + overhead) * max_k(L_k) + t_sync`` over the
+    active set. Dropped workers leave the max — elastic DiLoCo's whole wager
+    is that excluding them buys back the tail.
+
+    The drop coins use common random numbers (one uniform per worker-round,
+    dropped iff ``u < drop_prob``), so raising ``drop_prob`` only ever
+    *removes* workers from the max — p50/p99 round times are monotonically
+    non-increasing in the drop rate, sampling noise included. At least one
+    worker always survives: the largest draw — the last worker any drop
+    rate would evict — is kept, so the fallback survivor is a member of
+    every lower-drop active set and monotonicity holds through the
+    all-drop regime too (matching :class:`repro.core.faults.FaultPlan`). With ``sigma == 0`` every
+    multiplier is exactly 1.0 and with ``drop_prob == 0`` the active set is
+    everyone, so the sampled distribution collapses, bit-for-bit, to the
+    deterministic per-round estimate of :func:`training_time_hours`.
+    """
+
+    sigma: float = 0.0  # lognormal sigma of the per-worker latency multiplier
+    drop_prob: float = 0.0  # per-(round, worker) drop probability
+    seed: int = 0
+    n_rounds: int = 2048  # Monte-Carlo rounds sampled
+
+    @property
+    def is_trivial(self) -> bool:
+        return self.sigma == 0.0 and self.drop_prob == 0.0
+
+    def sample(self, n_workers: int) -> tuple[np.ndarray, np.ndarray]:
+        """(latency multipliers [n_rounds, K], active mask [n_rounds, K])."""
+        rng = np.random.default_rng(np.random.SeedSequence([self.seed, n_workers]))
+        u = rng.random((self.n_rounds, n_workers))
+        z = rng.standard_normal((self.n_rounds, n_workers))
+        lat = np.exp(self.sigma * z - 0.5 * self.sigma * self.sigma)
+        active = u >= self.drop_prob
+        all_drop = ~active.any(axis=1)
+        if all_drop.any():
+            rows = np.nonzero(all_drop)[0]
+            active[rows, np.argmax(u[rows], axis=1)] = True
+        return lat, active
+
+
+def straggler_round_times(spec: RunSpec, bandwidth_bps: float,
+                          model: StragglerModel,
+                          hw: HardwareModel = HardwareModel()) -> np.ndarray:
+    """Sampled per-round wall-clock seconds ([model.n_rounds])."""
+    t_step = step_compute_time(spec, hw) * (1.0 + spec.optimizer_overhead)
+    t_sync = sync_comm_time(spec, bandwidth_bps)
+    lat, active = model.sample(spec.n_workers)
+    slowest = np.where(active, lat, 0.0).max(axis=1)
+    return spec.sync_interval * t_step * slowest + t_sync
+
+
+def straggler_stats(spec: RunSpec, bandwidth_bps: float,
+                    model: StragglerModel,
+                    hw: HardwareModel = HardwareModel()) -> dict:
+    """p50/p99/mean round wall-clock under the straggler model.
+
+    ``deterministic`` is the no-variance lockstep round time; ``p99_over_det``
+    is the tail tax a lockstep sync pays at this sigma/drop rate.
+    """
+    times = straggler_round_times(spec, bandwidth_bps, model, hw)
+    t_step = step_compute_time(spec, hw) * (1.0 + spec.optimizer_overhead)
+    det = spec.sync_interval * t_step + sync_comm_time(spec, bandwidth_bps)
+    return {
+        "p50_round_s": float(np.percentile(times, 50)),
+        "p99_round_s": float(np.percentile(times, 99)),
+        "mean_round_s": float(times.mean()),
+        "deterministic_round_s": float(det),
+        "p99_over_det": float(np.percentile(times, 99) / det),
+    }

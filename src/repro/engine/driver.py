@@ -39,6 +39,7 @@ def run_rounds(engine, state, batches_for: Callable[[int], PyTree],
                span_batches_for: Callable[[int, int], PyTree] | None = None,
                eval_batches_for: Callable[[int, int], PyTree] | None = None,
                eval_fn: Callable[[Any, int], jax.Array] | None = None,
+               participation_for: Callable[[int, int], Any] | None = None,
                on_round: Callable[[dict], None] | None = None,
                on_state: Callable[[int, Any], None] | None = None,
                on_state_every: int = 1,
@@ -54,6 +55,11 @@ def run_rounds(engine, state, batches_for: Callable[[int], PyTree],
     *inside* the superstep program. ``eval_fn(state, r)`` is the legacy
     host-side alternative (a separately-jitted device scalar per round); it
     needs the state between rounds, so it pins the dispatch width to R=1.
+
+    ``participation_for(r0, n)`` (elastic runs) supplies the [n, K] float32
+    worker masks for rounds ``r0..r0+n-1``; the driver threads them into
+    every dispatch and drains the per-round ``active_workers`` /
+    ``staleness`` metric buffers into the records alongside the losses.
 
     ``on_round(metrics)`` fires per round when a superstep's metrics are
     drained to host floats. ``on_state(r, state)`` fires every
@@ -73,10 +79,12 @@ def run_rounds(engine, state, batches_for: Callable[[int], PyTree],
     H = engine.dcfg.sync_interval
 
     def drain_one() -> None:
-        r0, n, loss, ev, cb = pending.popleft()
+        r0, n, loss, ev, cb, aw, st = pending.popleft()
         losses = np.atleast_2d(np.asarray(jax.device_get(loss)))  # [n, H]
         evs = None if ev is None else np.atleast_1d(np.asarray(jax.device_get(ev)))
         cbs = np.atleast_1d(np.asarray(jax.device_get(cb)))  # [n]
+        aws = None if aw is None else np.atleast_1d(np.asarray(jax.device_get(aw)))
+        sts = None if st is None else np.atleast_1d(np.asarray(jax.device_get(st)))
         for i in range(n):
             rec = {
                 "round": r0 + i,
@@ -85,6 +93,10 @@ def run_rounds(engine, state, batches_for: Callable[[int], PyTree],
                 "train_loss_last": float(losses[i, -1]),
                 "comm_bytes": float(cbs[i]),
             }
+            if aws is not None:
+                rec["active_workers"] = float(aws[i])
+            if sts is not None:
+                rec["staleness"] = float(sts[i])
             if evs is not None:
                 rec["eval_loss"] = float(evs[i])
             history.append(rec)
@@ -92,11 +104,16 @@ def run_rounds(engine, state, batches_for: Callable[[int], PyTree],
                 on_round(rec)
 
     for r0 in range(start, rounds, R):
+        masks = (np.asarray(participation_for(r0, R), np.float32)
+                 if participation_for is not None else None)
         if R == 1 and eval_batches_for is None:
             # classic path: single-round dispatch + optional host-side eval
-            state, info = engine.step(state, batches_for(r0))
+            state, info = engine.step(
+                state, batches_for(r0),
+                participation=None if masks is None else masks[0])
             ev = eval_fn(state, r0) if eval_fn is not None else None
             loss, cb = info["loss"], info["comm_bytes"]
+            aw, st = info.get("active_workers"), info.get("staleness")
         else:
             if span_batches_for is not None:
                 batches = span_batches_for(r0, R)
@@ -105,13 +122,15 @@ def run_rounds(engine, state, batches_for: Callable[[int], PyTree],
                     lambda *bs: np.stack([np.asarray(b) for b in bs]),
                     *[batches_for(r0 + i) for i in range(R)])
             eb = eval_batches_for(r0, R) if eval_batches_for is not None else None
-            state, out = engine.superstep(state, batches, eb)
+            state, out = engine.superstep(state, batches, eb,
+                                          participation=masks)
             ev = out.get("eval_loss")
             loss, cb = out["loss"], out["comm_bytes"]
+            aw, st = out.get("active_workers"), out.get("staleness")
         # keep only the metric buffers alive; the rest (notably the
         # parameter-sized psi tree of the R=1 path) must be freeable as soon
         # as the dispatch's consumers drop it
-        pending.append((r0, R, loss, ev, cb))
+        pending.append((r0, R, loss, ev, cb, aw, st))
         if on_state is not None and on_state_every and (r0 + R) % on_state_every == 0:
             while pending:  # CSV/metrics must never lag a saved checkpoint
                 drain_one()

@@ -197,28 +197,40 @@ class TrainEngine:
     def init(self, rng: jax.Array) -> TrainState:
         return diloco_init(self.model, self.dcfg, self.icfg, rng)
 
-    def step(self, state: TrainState, batches: PyTree) -> tuple[TrainState, dict]:
+    def step(self, state: TrainState, batches: PyTree,
+             participation: PyTree | None = None) -> tuple[TrainState, dict]:
         """One communication round; async dispatch, donated state.
 
         The degenerate R=1 dispatch of :meth:`superstep` — same executor,
         single-round metrics (``loss`` [H] plus the round's ``psi``). On a
         mesh, the committed shardings of ``state`` (see :meth:`place_state`)
         and the batches propagate through jit, so the round lowers with the
-        production layout."""
+        production layout. ``participation`` is the round's [K] elastic
+        worker mask (elastic configs only)."""
         state, out = self.superstep(
-            state, jax.tree.map(lambda b: b[None], batches))
-        return state, {"loss": out["loss"][0], "psi": out["psi"],
-                       "comm_bytes": out["comm_bytes"][0]}
+            state, jax.tree.map(lambda b: b[None], batches),
+            participation=(None if participation is None
+                           else jax.tree.map(lambda p: p[None], participation)))
+        info = {k: (v if k == "psi" else v[0]) for k, v in out.items()}
+        return state, info
 
     def superstep(self, state: TrainState, batches: PyTree,
-                  eval_batches: PyTree | None = None) -> tuple[TrainState, dict]:
+                  eval_batches: PyTree | None = None,
+                  participation: PyTree | None = None) -> tuple[TrainState, dict]:
         """R communication rounds in ONE dispatch; donated state.
 
         ``batches`` leaves are round-stacked [R, H, K, B, ...]. Returns
         ``(state, {"loss": f32[R, H]})`` plus ``"eval_loss": f32[R]`` when
         ``eval_batches`` (leaves [R, B, ...]) are supplied — the post-sync
         outer params of every round are evaluated inside the same program.
+        ``participation`` ([R, K] float32 {0,1}, elastic configs only)
+        supplies each round's worker mask; the scan threads row r into the
+        state carry before round r runs.
         """
+        import jax.numpy as jnp
+
+        if participation is not None:
+            participation = jnp.asarray(participation, jnp.float32)
         if self.mesh is not None:
             from repro.launch.sharding import batch_shardings
 
@@ -230,8 +242,8 @@ class TrainEngine:
                             leading_scan=1))
                 return self.jitted_round(
                     state, self.place_batches(batches, leading_scan=2),
-                    eval_batches)
-        return self.jitted_round(state, batches, eval_batches)
+                    eval_batches, participation)
+        return self.jitted_round(state, batches, eval_batches, participation)
 
     def eval_loss(self, params: PyTree, batch: PyTree) -> jax.Array:
         """Loss of the synced (outer) params on one un-stacked batch."""
@@ -242,7 +254,7 @@ class TrainEngine:
     def lower(self, state: TrainState, batches: PyTree):
         """Lower the degenerate R=1 dispatch (the single-round program)."""
         return self.jitted_round.lower(
-            state, jax.tree.map(lambda b: b[None], batches), None)
+            state, jax.tree.map(lambda b: b[None], batches), None, None)
 
 
 def dp_engine(model: Model, inner_name: str, icfg: OptimizerConfig,

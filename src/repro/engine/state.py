@@ -17,7 +17,16 @@ A registered-dataclass pytree replacing the raw ``dict`` state that
   * ``round`` — the on-device round counter. It lives in the state (not on
     the host) so that the superstep executor's scan-over-R carry advances it
     R times per dispatch and checkpoints taken at superstep boundaries
-    resume at the true round index.
+    resume at the true round index;
+  * ``participation`` — optional [K] float32 {0,1} per-round worker mask
+    (elastic DiLoCo: 0 = dropped this round). ``None`` on non-elastic
+    configs, which keeps the legacy leaf set (old checkpoints load
+    unchanged) and lets the round function emit the exact dense program;
+  * ``pending`` — optional delayed-sync FIFO (``--sync-delay d``): leaves
+    are ``[d, ...]``-stacked pseudogradients awaiting application. Round r
+    computes Ψ_r (communication, EF, byte accounting all happen at r) but
+    the outer descent applies ``pending[0]`` = Ψ_{r-d}; the FIFO shifts
+    inside the superstep scan carry, so R>1 dispatch and donation survive.
 
 Being a real pytree node, TrainState flows through ``jax.jit`` (with buffer
 donation), ``jax.eval_shape``, checkpointing, and sharding-tree construction
@@ -36,7 +45,8 @@ import jax
 
 PyTree = Any
 
-_FIELDS = ("outer_params", "outer_opt", "worker_params", "inner_state", "round", "ef")
+_FIELDS = ("outer_params", "outer_opt", "worker_params", "inner_state", "round",
+           "ef", "participation", "pending")
 
 
 @dataclasses.dataclass
@@ -47,6 +57,8 @@ class TrainState:
     inner_state: PyTree
     round: jax.Array | Any
     ef: PyTree | None = None
+    participation: jax.Array | None = None
+    pending: PyTree | None = None
 
     # -- mapping-style compatibility with the pre-engine dict state ---------
 

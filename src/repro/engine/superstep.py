@@ -63,19 +63,36 @@ def build_superstep_fn(round_fn: Callable,
       scan), so its full metrics survive. For R > 1 psi is not stacked
       (R parameter-sized trees would dwarf the state).
 
+    Elastic runs pass ``participation`` ([R, K] float32 {0,1} masks, one row
+    per round): the scan threads row r into the carry's ``participation``
+    field before round r runs, so the per-round mask travels through the
+    same ``lax.scan`` xs as the batches and the carry structure never
+    changes (the state must already carry a participation leaf — i.e. the
+    config is elastic). The delayed-sync pending FIFO needs no handling
+    here at all: it lives in the TrainState, so the scan carry shifts it
+    round by round and R>1 dispatch + donation survive unchanged.
+
     R is read from the static leading batch dim at trace time; each distinct
-    (R, with/without eval) pair is one trace of the same jitted executor.
+    (R, with/without eval, with/without participation) tuple is one trace of
+    the same jitted executor.
     """
 
     def superstep_fn(state: PyTree, batches: PyTree,
-                     eval_batches: PyTree | None = None) -> tuple[PyTree, dict]:
+                     eval_batches: PyTree | None = None,
+                     participation: PyTree | None = None) -> tuple[PyTree, dict]:
         R = jax.tree.leaves(batches)[0].shape[0]
         do_eval = eval_loss_fn is not None and eval_batches is not None
+        if participation is not None and state.get("participation") is None:
+            raise ValueError(
+                "per-round participation masks need an elastic TrainState "
+                "(DiLoCoConfig(elastic=True)): the scan carry cannot gain "
+                "a participation leaf the initial state lacks")
 
         if R == 1:  # degenerate case: exactly the single-round program
+            if participation is not None:
+                state = state.replace(participation=participation[0])
             state, info = round_fn(state, jax.tree.map(lambda b: b[0], batches))
-            out = {"loss": info["loss"][None], "psi": info["psi"],
-                   "comm_bytes": info["comm_bytes"][None]}
+            out = {k: (v if k == "psi" else v[None]) for k, v in info.items()}
             if do_eval:
                 out["eval_loss"] = eval_loss_fn(
                     state["outer_params"],
@@ -83,14 +100,16 @@ def build_superstep_fn(round_fn: Callable,
             return state, out
 
         def body(carry: PyTree, xs) -> tuple[PyTree, dict]:
-            rb, eb = xs
+            rb, eb, pr = xs
+            if pr is not None:
+                carry = carry.replace(participation=pr)
             carry, info = round_fn(carry, rb)
-            ys = {"loss": info["loss"], "comm_bytes": info["comm_bytes"]}
+            ys = {k: v for k, v in info.items() if k != "psi"}
             if do_eval:
                 ys["eval_loss"] = eval_loss_fn(carry["outer_params"], eb)
             return carry, ys
 
-        xs = (batches, eval_batches if do_eval else None)
+        xs = (batches, eval_batches if do_eval else None, participation)
         state, ys = jax.lax.scan(body, state, xs)
         return state, ys
 

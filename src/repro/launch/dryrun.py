@@ -48,7 +48,8 @@ def run_one(arch: str, shape: str, multi_pod: bool, sync_interval: int = 30,
             compression: str = "none", bits: int = 4,
             topk_frac: float = 0.01, attn_impl: str = "xla",
             ns_impl: str = "jnp", outer_kernel: bool = False,
-            wire_impl: str = "jnp") -> list[dict]:
+            wire_impl: str = "jnp", straggler_sigma: float = 0.25,
+            straggler_drop: float = 0.0) -> list[dict]:
     """Lower + compile all step plans for one (arch, shape, mesh) combo."""
     from repro.core.compression import CompressionConfig
 
@@ -187,6 +188,36 @@ def run_one(arch: str, shape: str, multi_pod: bool, sync_interval: int = 30,
                     "visited_fraction": round(visited_fraction(
                         S, cfg.attn_block_q, cfg.attn_block_kv,
                         causal=True, window=cfg.sliding_window), 4),
+                }
+            if plan.meta["kind"] in ("train", "round", "superstep"):
+                # straggler evidence at the paper's K=16 scale: per-round
+                # wall-clock p50/p99 when every worker draws a lognormal
+                # latency multiplier and an i.i.d. drop coin, vs the
+                # deterministic lockstep estimate — "what does p99 worker
+                # latency cost at K=16?" (uses the plan's measured per-sync
+                # wire bytes when the comm block carries them)
+                from repro.core.wallclock import (
+                    RunSpec,
+                    StragglerModel,
+                    straggler_stats,
+                )
+
+                ishape = INPUT_SHAPES[shape]
+                wspec = RunSpec(
+                    n_params=float(n_params), n_active_params=float(n_active),
+                    batch_tokens=float(ishape.global_batch * ishape.seq_len),
+                    seq_len=ishape.seq_len, n_steps=sync_interval,
+                    sync_interval=sync_interval, n_workers=16,
+                    wire_bytes_per_sync=float(
+                        comm["measured_bytes_per_sync_per_worker"])
+                    if comm is not None else 0.0)
+                smodel = StragglerModel(sigma=straggler_sigma,
+                                        drop_prob=straggler_drop)
+                rec["straggler_wallclock"] = {
+                    "n_workers": 16, "sigma": straggler_sigma,
+                    "drop_prob": straggler_drop,
+                    "bandwidth_gbit_s": 1.0,
+                    **straggler_stats(wspec, 1e9, smodel),
                 }
             donation = None
             if plan.name in ("round_step", "superstep"):
@@ -418,6 +449,14 @@ def build_parser() -> argparse.ArgumentParser:
                     help="quantize/dequantize backend for the wire stages; "
                          "'pallas' shard_maps the row axis over "
                          "('pod','data')")
+    ap.add_argument("--straggler-sigma", type=float, default=0.25,
+                    help="lognormal sigma of the per-worker latency "
+                         "multiplier in the straggler_wallclock evidence "
+                         "block (p50/p99 round wall-clock at K=16)")
+    ap.add_argument("--straggler-drop", type=float, default=0.0,
+                    help="per-(round, worker) drop probability in the "
+                         "straggler_wallclock evidence block (dropped "
+                         "workers leave the round's slowest-worker max)")
     ap.add_argument("--out", default="results/dryrun")
     return ap
 
@@ -460,7 +499,9 @@ def main() -> None:
                                topk_frac=args.topk_frac,
                                attn_impl=args.attn_impl, ns_impl=args.ns_impl,
                                outer_kernel=args.outer_kernel,
-                               wire_impl=args.wire_impl)
+                               wire_impl=args.wire_impl,
+                               straggler_sigma=args.straggler_sigma,
+                               straggler_drop=args.straggler_drop)
                 with open(path, "w") as f:
                     json.dump(recs, f, indent=2)
 

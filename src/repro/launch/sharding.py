@@ -137,7 +137,16 @@ def diloco_state_shardings(mesh: Mesh, state: PyTree, tensor_parallel: bool = Tr
         if key in ("outer_params", "outer_opt"):
             return params_shardings(mesh, sub, outer=True,
                                     tensor_parallel=tensor_parallel)
-        # counters
+        if key == "pending":
+            # delayed-sync FIFO: [d, ...]-stacked pseudogradients. The tiny
+            # FIFO depth stays unsharded; the payload keeps the outer-state
+            # ZeRO layout so the shift + descent never reshard.
+            sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+            return tree_map_with_path(
+                lambda p, x: NamedSharding(mesh, P(None, *param_spec(
+                    p, x.shape[1:], sizes, outer=True,
+                    tensor_parallel=tensor_parallel))), sub)
+        # counters + the [K] elastic participation mask: replicated
         return jax.tree.map(lambda x: NamedSharding(mesh, P()), sub)
 
     if hasattr(state, "map_groups"):  # TrainState

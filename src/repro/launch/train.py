@@ -34,6 +34,7 @@ from repro.checkpoint import load_checkpoint, save_checkpoint
 from repro.configs import get_config, reduce_config
 from repro.core.compression import CompressionConfig
 from repro.core.diloco import DiLoCoConfig
+from repro.core.faults import FaultPlan, parse_drop_schedule
 from repro.data import DataConfig, MarkovStream, batches_for_round, batches_for_span
 from repro.engine import TrainEngine, run_rounds
 from repro.models import build_model
@@ -65,6 +66,11 @@ def make_diloco_cfg(args) -> DiLoCoConfig:
         error_feedback=args.error_feedback,
         collective="gather" if args.compression == "topk" else "a2a_rs_ag",
     )
+    # elastic execution is switched on by any fault knob: a drop probability,
+    # a scripted drop schedule, or a delayed outer sync — the participation
+    # mask + pending FIFO only enter the program when actually requested, so
+    # the default path lowers the exact pre-elastic program
+    elastic = args.drop_prob > 0 or bool(args.drop_schedule)
     return DiLoCoConfig(
         n_workers=args.workers,
         sync_interval=args.sync_interval,
@@ -76,7 +82,17 @@ def make_diloco_cfg(args) -> DiLoCoConfig:
         streaming_partitions=args.streaming,
         ns_impl=args.ns_impl,
         outer_kernel=args.outer_kernel,
+        elastic=elastic,
+        sync_delay=args.sync_delay,
     )
+
+
+def make_fault_plan(args, n_workers: int) -> FaultPlan | None:
+    """The host-side participation-mask generator, or None for lockstep."""
+    schedule = parse_drop_schedule(args.drop_schedule) if args.drop_schedule else None
+    plan = FaultPlan(n_workers=n_workers, drop_prob=args.drop_prob,
+                     schedule=schedule, seed=args.drop_seed)
+    return None if plan.is_trivial else plan
 
 
 def parse_mesh(spec: str):
@@ -168,30 +184,37 @@ def train(args) -> dict:
         writer = csv.writer(f)
         if start_round == 0:
             writer.writerow(["round", "step", "train_loss", "eval_loss",
-                             "comm_bytes", "wall_s"])
+                             "comm_bytes", "active_workers", "staleness",
+                             "wall_s"])
 
         def on_round(rec):
             losses.append(rec["eval_loss"])
             steps.append(rec["step"])
             # comm_bytes is the round's *measured* per-worker wire traffic,
             # drained from the engine's [R] device buffer (actual wire-buffer
-            # sizes, not the modeled compression ratio)
+            # sizes, not the modeled compression ratio); active_workers /
+            # staleness are the elastic evidence (== K / 0 on lockstep runs)
+            aw = rec.get("active_workers", float(dcfg.n_workers))
+            st = rec.get("staleness", float(dcfg.sync_delay))
             writer.writerow([rec["round"], rec["step"], f"{rec['train_loss']:.5f}",
                              f"{rec['eval_loss']:.5f}", f"{rec['comm_bytes']:.0f}",
+                             f"{aw:.0f}", f"{st:.0f}",
                              f"{time.time()-t_start:.1f}"])
             f.flush()
             if args.verbose:
                 print(f"round {rec['round']:4d} step {rec['step']:6d} "
                       f"train {rec['train_loss']:.4f} eval {rec['eval_loss']:.4f} "
-                      f"comm {rec['comm_bytes']:.2e}B")
+                      f"comm {rec['comm_bytes']:.2e}B active {aw:.0f}")
 
         def on_state(r, st):
             save_checkpoint(os.path.join(args.out, "ckpt.npz"), st, step=r + 1)
 
+        fault_plan = make_fault_plan(args, dcfg.n_workers)
         state, _history = run_rounds(
             engine, state, lambda r: batches_for_round(data, r, dcfg.sync_interval),
             args.rounds, start=start_round,
             rounds_per_dispatch=args.rounds_per_dispatch,
+            participation_for=fault_plan.masks if fault_plan is not None else None,
             span_batches_for=lambda r0, n: batches_for_span(
                 data, r0, dcfg.sync_interval, n),
             eval_batches_for=eval_batches_for,
@@ -238,6 +261,24 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--topk-frac", type=float, default=0.1)
     ap.add_argument("--error-feedback", action="store_true")
     ap.add_argument("--streaming", type=int, default=1, help="J partitions")
+    ap.add_argument("--sync-delay", type=int, default=0,
+                    help="apply the pseudogradient d rounds late (delayed/"
+                         "overlapped outer sync): round r reduces the fresh "
+                         "pseudogradient but descends on the one from round "
+                         "r-d via an in-program FIFO; 0 = lockstep")
+    ap.add_argument("--drop-prob", type=float, default=0.0,
+                    help="per-(round, worker) i.i.d. drop probability "
+                         "(elastic execution: dropped workers freeze, ship no "
+                         "wire packet, and are excluded from the reduce)")
+    ap.add_argument("--drop-schedule", default=None,
+                    help="scripted drops 'round:worker[;round:worker...]', "
+                         "e.g. '1:2;1:3;4:0' — each worker is dropped only "
+                         "for the rounds listed and rejoins at the next sync")
+    ap.add_argument("--drop-seed", type=int, default=0,
+                    help="seed of the per-round drop draws (masks are a pure "
+                         "function of (seed, round), so any "
+                         "--rounds-per-dispatch chunking sees identical "
+                         "faults)")
     ap.add_argument("--ns-impl", default="jnp", choices=["jnp", "pallas"])
     ap.add_argument("--attn-impl", default="xla", choices=["xla", "pallas"],
                     help="attention backend: 'xla' (dense/blockwise) or "

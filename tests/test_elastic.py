@@ -1,0 +1,357 @@
+"""Elastic DiLoCo: worker churn, stragglers, and delayed outer sync.
+
+Fault-injection harness invariants:
+
+* an all-ones participation mask is **bitwise identical** to the dense
+  (non-elastic) program — the engine's runtime cond dispatches the literal
+  maskless computation whenever nobody dropped;
+* a dropped worker freezes in place: EF residual and inner-optimizer state
+  come back bit-identical, and rejoin is the normal sync broadcast;
+* the masked reduce is exactly the subset mean over surviving workers, for
+  every wire format;
+* ``sync_delay`` applies the pseudogradient through the pending FIFO, late;
+* the straggler wall-clock model collapses to the deterministic estimate at
+  zero variance and its tail is monotone in the drop rate;
+* the train CLI completes a scripted K=4 drop/rejoin run with --sync-delay 1
+  and logs ``active_workers`` / ``staleness`` to metrics.csv.
+"""
+import csv
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import DiLoCoConfig, make_outer
+from repro.core.collectives import measured_sync_bytes
+from repro.core.compression import CompressionConfig
+from repro.core.faults import FaultPlan, parse_drop_schedule
+from repro.core.wallclock import (
+    RunSpec,
+    StragglerModel,
+    straggler_round_times,
+    straggler_stats,
+)
+from repro.core.wire import decode_leaf, encode_leaf
+from repro.data import DataConfig, MarkovStream, batches_for_round, batches_for_span
+from repro.engine import TrainEngine
+from repro.models import ModelConfig, build_model
+from repro.optim import OptimizerConfig
+
+CFG = ModelConfig(arch_type="dense", n_layers=2, d_model=32, n_heads=2, n_kv_heads=2,
+                  d_ff=64, vocab=64, remat=False, dtype="float32", qk_norm=True)
+ICFG = OptimizerConfig(lr=1e-2, weight_decay=0.0)
+
+WIRE = {
+    "none": CompressionConfig(kind="none"),
+    "quant": CompressionConfig(kind="quant", bits=4, rowwise=True,
+                               error_feedback=True, collective="a2a_rs_ag"),
+    "topk": CompressionConfig(kind="topk", topk_frac=0.25,
+                              error_feedback=True, collective="gather"),
+}
+
+
+def _stream(n_workers, bs=2, s=16, seed=3):
+    return MarkovStream(DataConfig(vocab=CFG.vocab, seq_len=s, batch_per_worker=bs,
+                                   n_workers=n_workers, seed=seed))
+
+
+def _engine(K=2, H=4, inner="muon", comp="none", elastic=False, sync_delay=0):
+    dcfg = DiLoCoConfig(n_workers=K, sync_interval=H, inner_name=inner,
+                        compression=WIRE[comp], elastic=elastic,
+                        sync_delay=sync_delay)
+    engine = TrainEngine(build_model(CFG), dcfg, ICFG)
+    return engine, engine.init(jax.random.PRNGKey(0))
+
+
+def _assert_trees_equal(a, b, what=""):
+    fa = jax.tree_util.tree_flatten_with_path(a)[0]
+    fb = jax.tree.leaves(b)
+    assert len(fa) == len(fb)
+    for (path, la), lb in zip(fa, fb):
+        np.testing.assert_array_equal(
+            np.asarray(la), np.asarray(lb),
+            err_msg=f"{what}{jax.tree_util.keystr(path)}")
+
+
+# ---------------------------------------------------------------------------
+# All-ones mask == dense program, bit for bit
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("comp", ["none", "quant", "topk"])
+def test_all_ones_mask_bitwise_equals_dense(comp):
+    """The elastic config under full participation replays the non-elastic
+    engine exactly: params, losses, EF residuals, and comm_bytes all bitwise
+    equal over 3 rounds (the runtime cond runs the literal dense program)."""
+    e_dense, s_dense = _engine(comp=comp)
+    e_el, s_el = _engine(comp=comp, elastic=True)
+    assert s_el["participation"] is not None  # all-ones at init
+    for r in range(3):
+        batches = batches_for_round(_stream(2), r, 4)
+        s_dense, i_dense = e_dense.step(s_dense, batches)
+        s_el, i_el = e_el.step(s_el, batches)
+        np.testing.assert_array_equal(np.asarray(i_dense["loss"]),
+                                      np.asarray(i_el["loss"]))
+        assert float(i_dense["comm_bytes"]) == float(i_el["comm_bytes"])
+        assert float(i_el["active_workers"]) == 2.0
+    _assert_trees_equal(s_dense["outer_params"], s_el["outer_params"], "outer.")
+    _assert_trees_equal(s_dense["worker_params"], s_el["worker_params"], "worker.")
+    if s_dense["ef"] is not None:
+        _assert_trees_equal(s_dense["ef"], s_el["ef"], "ef.")
+
+
+# ---------------------------------------------------------------------------
+# Drop semantics: frozen state, subset reduce, rejoin broadcast
+# ---------------------------------------------------------------------------
+
+
+def test_drop_then_rejoin_preserves_ef_and_inner_state():
+    """A dropped worker's EF residual and inner-optimizer state come back
+    bit-identical through its dropped round; its params rejoin via the
+    normal sync broadcast."""
+    engine, state = _engine(K=3, H=2, comp="quant", elastic=True)
+    # round 0: everyone participates -> EF residuals become nonzero
+    state, _ = engine.step(state, batches_for_round(_stream(3), 0, 2))
+    ef_before = jax.tree.map(lambda x: np.asarray(x[1]), state["ef"])
+    inner_before = jax.tree.map(lambda x: np.asarray(x[1]), state["inner_state"])
+    assert any(float(np.abs(l).max()) > 0 for l in jax.tree.leaves(ef_before))
+    # round 1: worker 1 drops
+    state, info = engine.step(state, batches_for_round(_stream(3), 1, 2),
+                              participation=np.array([1, 0, 1], np.float32))
+    assert float(info["active_workers"]) == 2.0
+    _assert_trees_equal(
+        ef_before, jax.tree.map(lambda x: x[1], state["ef"]), "ef.")
+    _assert_trees_equal(
+        inner_before, jax.tree.map(lambda x: x[1], state["inner_state"]), "inner.")
+    # rejoin IS the broadcast: every worker (the dropped one included) left
+    # the sync holding the new outer params
+    for k in range(3):
+        _assert_trees_equal(
+            state["outer_params"],
+            jax.tree.map(lambda x: x[k], state["worker_params"]), f"w{k}.")
+    # round 2: the worker rejoins and trains again (the mask is per-round
+    # driver input — it sticks in the state until overwritten)
+    state, info = engine.step(state, batches_for_round(_stream(3), 2, 2),
+                              participation=np.ones(3, np.float32))
+    assert float(info["active_workers"]) == 3.0
+
+
+@pytest.mark.parametrize("comp", ["none", "quant", "topk"])
+def test_masked_reduce_equals_hand_computed_subset_mean(comp):
+    """OuterOptimizer.reduce under a mask == encode/decode each surviving
+    worker independently, then average exactly those workers."""
+    import dataclasses
+
+    K = 4
+    ccfg = dataclasses.replace(WIRE[comp], error_feedback=False)
+    dcfg = DiLoCoConfig(n_workers=K, sync_interval=2, compression=ccfg)
+    outer = make_outer(dcfg)
+    params = {"w": jnp.zeros((6, 8), jnp.float32)}
+    deltas = {"w": jax.random.normal(jax.random.PRNGKey(7), (K, 6, 8))}
+    mask = jnp.asarray([1.0, 0.0, 1.0, 0.0])
+    psi, _ = outer.reduce(params, deltas, None, participation=mask)
+    if comp == "none":
+        vals = deltas["w"].astype(jnp.float32)
+    else:  # wire rows are per-worker independent: survivors' codes are
+        # unchanged by the dropped workers' (never-sent) rows
+        vals = decode_leaf(encode_leaf(deltas["w"], ccfg, batch_ndim=1),
+                           impl=ccfg.wire_impl)
+    hand = (vals[0] + vals[2]) * 0.5  # the two survivors, exactly
+    if comp == "quant":  # a2a_rs_ag re-quantizes the reduced shard (Q2/D2)
+        hand = decode_leaf(encode_leaf(hand, ccfg, batch_ndim=0),
+                           impl=ccfg.wire_impl)
+    np.testing.assert_array_equal(np.asarray(psi["w"]), np.asarray(hand))
+
+
+def test_masked_round_comm_bytes_scale_by_surviving_fraction():
+    engine, state = _engine(K=4, H=2, inner="adamw", comp="quant", elastic=True)
+    dense = measured_sync_bytes(state["outer_params"], WIRE["quant"], 4)
+    state, info = engine.step(state, batches_for_round(_stream(4), 0, 2),
+                              participation=np.array([1, 0, 1, 0], np.float32))
+    np.testing.assert_allclose(float(info["comm_bytes"]), dense * 0.5, rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Delayed outer sync: the pending FIFO
+# ---------------------------------------------------------------------------
+
+
+def test_sync_delay_first_round_holds_outer_params():
+    """With sync_delay=1 round 0 applies the FIFO's zero pseudogradient: the
+    outer params hold still, and the fresh Psi_0 enters the queue."""
+    engine, state = _engine(K=2, H=2, inner="adamw", sync_delay=1)
+    p0 = jax.tree.map(np.asarray, state["outer_params"])
+    state, info = engine.step(state, batches_for_round(_stream(2), 0, 2))
+    assert float(info["staleness"]) == 1.0
+    _assert_trees_equal(p0, state["outer_params"], "outer.")
+    # pending[0] is exactly the fresh pseudogradient the round reduced
+    _assert_trees_equal(jax.tree.map(lambda q: q[0], state["pending"]),
+                        info["psi"], "pending.")
+    # round 1 applies Psi_0: now the outer params move
+    state, _ = engine.step(state, batches_for_round(_stream(2), 1, 2))
+    moved = jax.tree.leaves(jax.tree.map(
+        lambda a, b: float(np.abs(np.asarray(a) - b).max()),
+        state["outer_params"], p0))
+    assert max(moved) > 0
+
+
+def test_sync_delay_fifo_shifts_each_round():
+    engine, state = _engine(K=2, H=2, inner="adamw", sync_delay=2)
+    for r in range(3):
+        state, info = engine.step(state, batches_for_round(_stream(2), r, 2))
+        # tail of the FIFO is always the round's fresh psi
+        _assert_trees_equal(jax.tree.map(lambda q: q[-1], state["pending"]),
+                            info["psi"], f"r{r}.pending.")
+
+
+def test_sync_delay_config_guards():
+    model = build_model(CFG)
+    from repro.core import diloco_init
+    with pytest.raises(ValueError, match="outer optimizer"):
+        diloco_init(model, DiLoCoConfig(n_workers=1, sync_interval=1,
+                                        outer_enabled=False, sync_delay=1),
+                    ICFG, jax.random.PRNGKey(0))
+    with pytest.raises(ValueError, match="streaming"):
+        diloco_init(model, DiLoCoConfig(n_workers=2, sync_interval=4,
+                                        streaming_partitions=2, sync_delay=1),
+                    ICFG, jax.random.PRNGKey(0))
+
+
+# ---------------------------------------------------------------------------
+# Superstep: elastic masks thread through the scan-over-R dispatch
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("inner", ["adamw", "muon"])
+def test_superstep_elastic_matches_sequential_rounds_bitwise(inner):
+    """One R=3 dispatch with a per-round mask stack replays 3 sequential
+    masked engine.step rounds exactly — drops included."""
+    H, R = 4, 3
+    masks = np.array([[1, 1], [1, 0], [1, 1]], np.float32)
+    e1, s1 = _engine(H=H, inner=inner, elastic=True)
+    losses = []
+    for r in range(R):
+        s1, info = e1.step(s1, batches_for_round(_stream(2), r, H),
+                           participation=masks[r])
+        losses.append(np.asarray(info["loss"]))
+
+    e2, s2 = _engine(H=H, inner=inner, elastic=True)
+    s2, out = e2.superstep(s2, batches_for_span(_stream(2), 0, H, R),
+                           participation=masks)
+    np.testing.assert_array_equal(np.asarray(out["loss"]), np.stack(losses))
+    np.testing.assert_array_equal(np.asarray(out["active_workers"]),
+                                  np.array([2.0, 1.0, 2.0], np.float32))
+    _assert_trees_equal(s1["outer_params"], s2["outer_params"], "outer.")
+    _assert_trees_equal(s1["worker_params"], s2["worker_params"], "worker.")
+
+
+# ---------------------------------------------------------------------------
+# FaultPlan: host-side mask generation
+# ---------------------------------------------------------------------------
+
+
+def test_parse_drop_schedule():
+    assert parse_drop_schedule("1:2;1:3,4:0") == {1: (2, 3), 4: (0,)}
+    assert parse_drop_schedule("") == {}
+    with pytest.raises(ValueError, match="bad --drop-schedule"):
+        parse_drop_schedule("1-2")
+    with pytest.raises(ValueError, match="negative"):
+        parse_drop_schedule("1:-2")
+
+
+def test_fault_plan_masks_are_chunking_invariant():
+    plan = FaultPlan(n_workers=4, drop_prob=0.4, seed=5)
+    full = plan.masks(0, 8)
+    np.testing.assert_array_equal(full[2:6], plan.masks(2, 4))
+    np.testing.assert_array_equal(
+        full, np.stack([plan.mask_for_round(r) for r in range(8)]))
+
+
+def test_fault_plan_always_keeps_one_survivor():
+    plan = FaultPlan(n_workers=3, drop_prob=1.0)
+    assert plan.masks(0, 16).sum(axis=1).min() == 1.0
+    sched = FaultPlan(n_workers=2, schedule={0: (0, 1)})
+    assert sched.mask_for_round(0).sum() == 1.0
+    assert sched.mask_for_round(1).sum() == 2.0  # rejoin after the round
+
+
+# ---------------------------------------------------------------------------
+# Straggler wall-clock model
+# ---------------------------------------------------------------------------
+
+_SPEC16 = RunSpec(n_params=1e8, n_active_params=1e8, batch_tokens=2**17,
+                  seq_len=1024, n_steps=300, sync_interval=30, n_workers=16)
+
+
+def test_straggler_zero_variance_reproduces_deterministic_exactly():
+    stats = straggler_stats(_SPEC16, 1e9, StragglerModel())
+    det = stats["deterministic_round_s"]
+    assert stats["p50_round_s"] == det
+    assert stats["p99_round_s"] == det
+    assert stats["p99_over_det"] == 1.0
+    times = straggler_round_times(_SPEC16, 1e9, StragglerModel())
+    assert float(np.ptp(times)) == 0.0
+
+
+def test_straggler_percentiles_monotone_in_drop_rate():
+    """Common random numbers: raising drop_prob only removes workers from
+    the round max, so p50/p99 are non-increasing — sampling noise included."""
+    prev = None
+    for drop in (0.0, 0.1, 0.3, 0.6):
+        s = straggler_stats(_SPEC16, 1e9,
+                            StragglerModel(sigma=0.5, drop_prob=drop))
+        if prev is not None:
+            assert s["p50_round_s"] <= prev["p50_round_s"]
+            assert s["p99_round_s"] <= prev["p99_round_s"]
+        prev = s
+    assert prev["p99_round_s"] >= prev["p50_round_s"]
+
+
+def test_straggler_tail_costs_more_at_higher_sigma():
+    lo = straggler_stats(_SPEC16, 1e9, StragglerModel(sigma=0.1))
+    hi = straggler_stats(_SPEC16, 1e9, StragglerModel(sigma=0.8))
+    assert hi["p99_over_det"] > lo["p99_over_det"] > 1.0
+
+
+def test_straggler_sample_keeps_one_survivor():
+    lat, active = StragglerModel(sigma=0.5, drop_prob=1.0).sample(8)
+    assert active.sum(axis=1).min() == 1
+    assert lat.shape == active.shape
+
+
+# ---------------------------------------------------------------------------
+# Scenario: the train CLI under scripted churn + delayed sync
+# ---------------------------------------------------------------------------
+
+
+def test_train_cli_fault_scenario_completes_and_logs_columns(tmp_path):
+    """A K=4 run with mid-run drops (workers 1 and 2 out for round 1) and
+    --sync-delay 1 completes; metrics.csv carries active_workers/staleness;
+    the final loss stays within a pinned tolerance of the lockstep run."""
+    from repro.launch.train import build_parser, train
+
+    base = ["--arch", "smollm-135m", "--reduced", "--inner", "adamw",
+            "--lr", "4e-3", "--workers", "4", "--sync-interval", "2",
+            "--rounds", "3", "--batch-per-worker", "2", "--seq-len", "32"]
+    lockstep = train(build_parser().parse_args(
+        base + ["--out", str(tmp_path / "lockstep")]))
+    faulty = train(build_parser().parse_args(
+        base + ["--drop-schedule", "1:1;1:2", "--sync-delay", "1",
+                "--out", str(tmp_path / "faulty")]))
+
+    with open(os.path.join(tmp_path, "faulty", "metrics.csv")) as f:
+        rows = list(csv.DictReader(f))
+    assert {"active_workers", "staleness"} <= set(rows[0])
+    assert [float(r["active_workers"]) for r in rows] == [4.0, 2.0, 4.0]
+    assert all(float(r["staleness"]) == 1.0 for r in rows)
+    # the lockstep CSV carries the dense defaults in the same columns
+    with open(os.path.join(tmp_path, "lockstep", "metrics.csv")) as f:
+        dense_rows = list(csv.DictReader(f))
+    assert all(float(r["active_workers"]) == 4.0 for r in dense_rows)
+    assert all(float(r["staleness"]) == 0.0 for r in dense_rows)
+
+    assert np.isfinite(faulty["final_loss"])
+    # pinned degradation budget: churn + 1-round staleness on a 3-round run
+    assert abs(faulty["final_loss"] - lockstep["final_loss"]) < 2.0

@@ -222,7 +222,8 @@ def test_streaming_round_signature_matches_dense():
         state = engine.init(jax.random.PRNGKey(0))
         _, info = engine.step(state, batches_for_round(_stream(2), 0, 4))
         infos[J] = info
-    assert sorted(infos[1]) == sorted(infos[2]) == ["comm_bytes", "loss", "psi"]
+    assert sorted(infos[1]) == sorted(infos[2]) == [
+        "active_workers", "comm_bytes", "loss", "psi", "staleness"]
     assert infos[1]["loss"].shape == infos[2]["loss"].shape == (4,)
     # streaming's J segment syncs each ship their partition's share: the
     # measured per-round wire bytes must equal the dense single sync

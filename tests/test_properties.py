@@ -147,3 +147,115 @@ def test_identical_workers_zero_interference(seed):
     mats = jnp.broadcast_to(one, (4, 10, 10))
     g = interference_gap(mats, s_frac=0.5)
     np.testing.assert_allclose(float(g), 0.0, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# Elastic DiLoCo: masks, wire-byte accounting, stragglers
+# ---------------------------------------------------------------------------
+
+_ELASTIC_CACHE: dict = {}
+
+
+def _elastic_engine(K):
+    """One compiled elastic engine per K, shared across hypothesis examples
+    (engine.step donates its state, so each example re-inits)."""
+    if K not in _ELASTIC_CACHE:
+        from repro.core import DiLoCoConfig
+        from repro.engine import TrainEngine
+        from repro.models import ModelConfig, build_model
+        from repro.optim import OptimizerConfig
+
+        cfg = ModelConfig(arch_type="dense", n_layers=2, d_model=32, n_heads=2,
+                          n_kv_heads=2, d_ff=64, vocab=64, remat=False,
+                          dtype="float32", qk_norm=True)
+        dcfg = DiLoCoConfig(
+            n_workers=K, sync_interval=2, inner_name="adamw", elastic=True,
+            compression=CompressionConfig(kind="quant", bits=4, rowwise=True))
+        _ELASTIC_CACHE[K] = TrainEngine(build_model(cfg), dcfg, OptimizerConfig(
+            lr=1e-2, weight_decay=0.0))
+    return _ELASTIC_CACHE[K]
+
+
+@settings(**SETTINGS)
+@given(st.integers(0, 10_000), st.sampled_from([2, 4, 8]), st.data())
+def test_masked_round_comm_bytes_equal_dense_times_surviving_fraction(seed, K, data):
+    """For ANY participation mask the round's comm_bytes metric is exactly
+    the dense measured wire bytes scaled by the surviving fraction —
+    dropped workers' packets are never charged."""
+    from repro.core.collectives import measured_sync_bytes
+    from repro.data import DataConfig, MarkovStream, batches_for_round
+
+    engine = _elastic_engine(K)
+    mask = np.asarray(
+        data.draw(st.lists(st.sampled_from([0.0, 1.0]), min_size=K, max_size=K)
+                  .filter(lambda m: sum(m) > 0)), np.float32)
+    state = engine.init(jax.random.PRNGKey(seed % 7))
+    dense = measured_sync_bytes(state["outer_params"],
+                                engine.dcfg.compression, K)
+    stream = MarkovStream(DataConfig(vocab=64, seq_len=16, batch_per_worker=2,
+                                     n_workers=K, seed=3))
+    _, info = engine.step(state, batches_for_round(stream, 0, 2),
+                          participation=mask)
+    np.testing.assert_allclose(float(info["comm_bytes"]),
+                               dense * (mask.sum() / K), rtol=1e-6)
+    assert float(info["active_workers"]) == mask.sum()
+
+
+@settings(**SETTINGS)
+@given(st.sampled_from([2, 4]), st.sampled_from(["none", "quant", "topk"]),
+       st.booleans(), st.sampled_from([2, 4, 8]))
+def test_streaming_segment_bytes_sum_exactly_to_single_sync(J, kind, rowwise, K):
+    """J>1 streaming ships each partition's share: the per-segment measured
+    wire bytes sum exactly to the dense single-sync total."""
+    from repro.core.collectives import measured_sync_bytes
+    from repro.core.streaming import streaming_masks
+
+    params = _streaming_params()
+    ccfg = CompressionConfig(kind=kind, bits=4, topk_frac=0.25, rowwise=rowwise,
+                             collective="gather" if kind == "topk" else "a2a_rs_ag")
+    masks = streaming_masks(params, J)
+    per_segment = [measured_sync_bytes(params, ccfg, K, mask=m) for m in masks]
+    assert sum(per_segment) == measured_sync_bytes(params, ccfg, K)
+
+
+def _streaming_params():
+    if "params" not in _ELASTIC_CACHE:
+        from repro.models import ModelConfig, build_model
+
+        cfg = ModelConfig(arch_type="dense", n_layers=2, d_model=32, n_heads=2,
+                          n_kv_heads=2, d_ff=64, vocab=64, remat=False,
+                          dtype="float32", qk_norm=True)
+        _ELASTIC_CACHE["params"] = build_model(cfg).init(jax.random.PRNGKey(0))
+    return _ELASTIC_CACHE["params"]
+
+
+@settings(**SETTINGS)
+@given(st.integers(0, 10_000), st.floats(0.0, 0.9), st.floats(0.0, 0.5),
+       st.floats(0.0, 1.0))
+def test_straggler_round_times_monotone_in_drop_rate(seed, drop, extra, sigma):
+    """Common random numbers: adding drop probability only removes workers
+    from the round max, so every sampled round time is non-increasing."""
+    from repro.core.wallclock import RunSpec, StragglerModel, straggler_round_times
+
+    spec = RunSpec(n_params=1e6, n_active_params=1e6, batch_tokens=2**12,
+                   seq_len=64, n_steps=30, sync_interval=30, n_workers=16)
+    t_lo = straggler_round_times(spec, 1e9, StragglerModel(
+        sigma=sigma, drop_prob=drop, seed=seed, n_rounds=256))
+    t_hi = straggler_round_times(spec, 1e9, StragglerModel(
+        sigma=sigma, drop_prob=min(drop + extra, 1.0), seed=seed, n_rounds=256))
+    assert np.all(t_hi <= t_lo + 1e-12)
+
+
+@settings(**SETTINGS)
+@given(st.integers(0, 10_000), st.integers(0, 50), st.integers(1, 8),
+       st.floats(0.0, 1.0))
+def test_fault_plan_chunking_invariance_and_survivor(seed, r0, n, drop):
+    """Masks are a pure function of (seed, absolute round) — any chunking of
+    the same run sees identical masks — and never drop everyone."""
+    from repro.core.faults import FaultPlan
+
+    plan = FaultPlan(n_workers=4, drop_prob=drop, seed=seed)
+    stack = plan.masks(r0, n)
+    np.testing.assert_array_equal(
+        stack, np.stack([plan.mask_for_round(r0 + i) for i in range(n)]))
+    assert stack.sum(axis=1).min() >= 1.0
