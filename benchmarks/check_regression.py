@@ -1,0 +1,161 @@
+"""Benchmark-regression gate: diff BENCH_<target>.json against the baseline.
+
+    PYTHONPATH=src python -m benchmarks.check_regression --json results/bench
+
+The CI tier runs the pinned :data:`REGRESSION_TARGETS` subset through
+``benchmarks.run --json`` and hands the emitted ``BENCH_<target>.json``
+artifacts to this checker, which compares every row against the committed
+``benchmarks/baseline.json`` and exits 1 on any regression.
+
+Comparison semantics: the direction of "worse" is read off each row's
+``derived`` unit prefix — ``steps_per_s`` regresses when the value DROPS
+below ``baseline * (1 - tol)``; ``us_per_call`` (and any other ``*_s`` /
+``*_us`` timing unit) regresses when it RISES above ``baseline * (1 + tol)``.
+Unitless rows are checked two-sided. The default tolerance band is wide
+(50%) because the values are wall-clock on shared CI runners; the gate
+exists to catch step-function regressions (a kernel dropping out of its
+fused path, the superstep degrading to per-round dispatch), not percent
+drift. Per-row overrides live in baseline.json's ``tolerance`` map.
+
+Rows present in the run but absent from the baseline are reported as NEW
+(not failures — a freshly added bench lands first, its baseline next);
+baseline rows missing from the run FAIL, so a silently dying bench cannot
+pass the gate. ``--update`` rewrites the baseline from the run instead of
+checking (the maintainer path after an intentional perf change).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+# The pinned CI subset: dispatch-architecture throughput, the optimizer
+# sweep, and the kernel microbenches. Kept deliberately small — every
+# target here runs on every gated CI invocation.
+REGRESSION_TARGETS = ("train_throughput", "optimizer_bench", "kernels")
+
+DEFAULT_TOLERANCE = 0.50
+BASELINE_PATH = os.path.join(os.path.dirname(__file__), "baseline.json")
+
+# derived-field unit prefix -> regression direction
+_LOWER_IS_BETTER = ("us_per_call", "ms_per_call", "s_per_call", "seconds",
+                    "us", "ms", "wall_s")
+_HIGHER_IS_BETTER = ("steps_per_s", "tokens_per_s", "per_s", "gflops",
+                     "speedup")
+
+
+def direction(derived: str) -> int:
+    """+1 = higher is better, -1 = lower is better, 0 = two-sided."""
+    unit = (derived or "").split(";", 1)[0].strip()
+    if unit in _HIGHER_IS_BETTER or unit.endswith("_per_s"):
+        return 1
+    if unit in _LOWER_IS_BETTER or unit.endswith(("_us", "_ms", "_s")):
+        return -1
+    return 0
+
+
+def compare_rows(run_rows: dict, base_rows: dict, tolerance: dict) -> list[str]:
+    """Return the list of failure strings for one target."""
+    failures = []
+    for name, base in base_rows.items():
+        if name not in run_rows:
+            failures.append(f"{name}: MISSING from run (baseline has it)")
+            continue
+        row = run_rows[name]
+        try:
+            val, ref = float(row["value"]), float(base["value"])
+        except (TypeError, ValueError):
+            if str(row["value"]) != str(base["value"]):
+                failures.append(f"{name}: non-numeric value changed "
+                                f"{base['value']!r} -> {row['value']!r}")
+            continue
+        tol = float(tolerance.get(name, DEFAULT_TOLERANCE))
+        d = direction(base.get("derived", ""))
+        if d >= 0 and val < ref * (1 - tol):
+            failures.append(f"{name}: {val} < {ref} * (1 - {tol}) "
+                            f"[{base.get('derived', '')}]")
+        if d <= 0 and val > ref * (1 + tol):
+            failures.append(f"{name}: {val} > {ref} * (1 + {tol}) "
+                            f"[{base.get('derived', '')}]")
+    return failures
+
+
+def load_run(json_dir: str, targets) -> dict[str, dict]:
+    """{target: {row_name: row}} from the BENCH_<target>.json artifacts."""
+    out = {}
+    for target in targets:
+        path = os.path.join(json_dir, f"BENCH_{target}.json")
+        if not os.path.exists(path):
+            out[target] = None  # the whole target failed to produce output
+            continue
+        with open(path) as f:
+            doc = json.load(f)
+        out[target] = {r["name"]: r for r in doc["rows"]}
+    return out
+
+
+def build_parser() -> argparse.ArgumentParser:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", required=True, metavar="DIR",
+                    help="directory holding the run's BENCH_<target>.json "
+                         "artifacts (benchmarks.run --json DIR)")
+    ap.add_argument("--baseline", default=BASELINE_PATH,
+                    help="committed baseline to diff against")
+    ap.add_argument("--targets", default=",".join(REGRESSION_TARGETS),
+                    help="comma-separated target subset")
+    ap.add_argument("--update", action="store_true",
+                    help="rewrite the baseline from this run instead of "
+                         "checking (after an intentional perf change)")
+    return ap
+
+
+def main() -> int:
+    args = build_parser().parse_args()
+    targets = [t for t in args.targets.split(",") if t]
+    run = load_run(args.json, targets)
+
+    if args.update:
+        base = {"targets": {}, "tolerance": {}}
+        if os.path.exists(args.baseline):
+            with open(args.baseline) as f:
+                base = json.load(f)
+        for target, rows in run.items():
+            if rows is None:
+                print(f"refusing to update: no BENCH_{target}.json in run")
+                return 1
+            base["targets"][target] = {
+                n: {"value": r["value"], "derived": r["derived"]}
+                for n, r in rows.items()}
+        with open(args.baseline, "w") as f:
+            json.dump(base, f, indent=1, sort_keys=True)
+            f.write("\n")
+        print(f"baseline updated: {args.baseline}")
+        return 0
+
+    with open(args.baseline) as f:
+        base = json.load(f)
+    tolerance = base.get("tolerance", {})
+    failures: list[str] = []
+    for target in targets:
+        rows = run[target]
+        if rows is None:
+            failures.append(f"{target}: BENCH_{target}.json missing "
+                            f"(bench crashed or was not run)")
+            continue
+        base_rows = base["targets"].get(target, {})
+        failures.extend(compare_rows(rows, base_rows, tolerance))
+        for name in rows:
+            if name not in base_rows:
+                print(f"NEW (no baseline yet): {name} = {rows[name]['value']}")
+    if failures:
+        print(f"{len(failures)} benchmark regression(s):")
+        for f_ in failures:
+            print(f"  REGRESSION {f_}")
+        return 1
+    print(f"benchmark gate clean: {len(targets)} targets vs {args.baseline}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

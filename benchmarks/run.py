@@ -2,8 +2,14 @@
 
     PYTHONPATH=src python -m benchmarks.run            # everything
     PYTHONPATH=src python -m benchmarks.run --only fig2,tab5
+    PYTHONPATH=src python -m benchmarks.run --only kernels --json results/
 
 Prints ``name,value,derived`` CSV rows (and writes results/benchmarks.csv).
+``--json DIR`` additionally writes one ``BENCH_<target>.json`` per target —
+``{"target", "rows": [{"name", "value", "derived"}, ...], "elapsed_s"}`` —
+the machine-readable artifact the CI benchmark-regression tier diffs
+against the committed ``benchmarks/baseline.json``
+(:mod:`benchmarks.check_regression`).
 """
 from __future__ import annotations
 
@@ -47,6 +53,9 @@ def build_parser() -> argparse.ArgumentParser:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None, help="comma-separated subset")
     ap.add_argument("--out", default="results/benchmarks.csv")
+    ap.add_argument("--json", default=None, metavar="DIR",
+                    help="also write one BENCH_<target>.json per target into "
+                         "DIR (the regression tier's comparison artifact)")
     return ap
 
 
@@ -56,6 +65,8 @@ def main() -> None:
     benches = all_benchmarks()
     names = args.only.split(",") if args.only else list(benches)
     os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    if args.json:
+        os.makedirs(args.json, exist_ok=True)
     rows = []
     print("name,value,derived")
     for name in names:
@@ -74,7 +85,15 @@ def main() -> None:
         for row in out:
             print(f"{row['name']},{row['value']},{row['derived']}", flush=True)
             rows.append(row)
-        print(f"# {name} done in {time.time() - t0:.1f}s", file=sys.stderr, flush=True)
+        elapsed = time.time() - t0
+        print(f"# {name} done in {elapsed:.1f}s", file=sys.stderr, flush=True)
+        if args.json:
+            import json
+
+            with open(os.path.join(args.json, f"BENCH_{name}.json"), "w") as f:
+                json.dump({"target": name, "rows": out,
+                           "elapsed_s": round(elapsed, 2)}, f, indent=1)
+                f.write("\n")
     with open(args.out, "w", newline="") as f:
         w = csv.DictWriter(f, fieldnames=["name", "value", "derived"])
         w.writeheader()

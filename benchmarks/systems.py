@@ -119,9 +119,30 @@ def bench_train_throughput(rounds: int = 4, warmup: int = 1,
 
         return run
 
+    single_dispatch_telemetry: dict = {}
+
+    def bench_single_dispatch() -> float:
+        # whole-span dispatch via the cost model ("auto" unmeasured = one
+        # program for the run); telemetry pins the dispatch count the row's
+        # derived field reports
+        engine = TrainEngine(model, dcfg, icfg)
+        state = engine.init(jax.random.PRNGKey(0))
+        state, _ = run_rounds(engine, state, lambda r: round_batches[r], warmup)
+        span = {(warmup, rounds): batches_for_span(stream, warmup, H, rounds)}
+        state, _ = engine.superstep(state, span[(warmup, rounds)])
+        jax.block_until_ready(state["outer_params"])
+        t0 = time.perf_counter()
+        state, _ = run_rounds(engine, state, lambda r: round_batches[r],
+                              total, start=warmup, rounds_per_dispatch="auto",
+                              span_batches_for=lambda r0, n: span[(r0, n)],
+                              telemetry=single_dispatch_telemetry)
+        jax.block_until_ready(state["outer_params"])
+        return rounds * H / (time.perf_counter() - t0)
+
     variants = {"per_step": bench_per_step, "seed_path": bench_seed_path,
                 "engine": bench_engine}
     variants.update({f"superstep_r{R}": bench_superstep(R) for R in R_SWEEP})
+    variants["single_dispatch"] = bench_single_dispatch
     best = {name: 0.0 for name in variants}
     for _ in range(reps):
         for name, fn in variants.items():
@@ -144,6 +165,13 @@ def bench_train_throughput(rounds: int = 4, warmup: int = 1,
             "derived": f"steps_per_s;rounds_per_dispatch={R};"
                        f"speedup_vs_r1_engine={v / best['engine']:.2f}x",
         })
+    v = best["single_dispatch"]
+    rows.append({
+        "name": "train_throughput/single_dispatch", "value": round(v, 3),
+        "derived": f"steps_per_s;"
+                   f"dispatches={single_dispatch_telemetry.get('dispatches')};"
+                   f"speedup_vs_r1_engine={v / best['engine']:.2f}x",
+    })
     return rows
 
 

@@ -14,6 +14,7 @@ from repro.engine.engine import (  # noqa: F401
     dp_engine,
 )
 from repro.engine.superstep import (  # noqa: F401
+    auto_rounds_per_dispatch,
     build_superstep_fn,
     effective_rounds_per_dispatch,
 )

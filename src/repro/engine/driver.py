@@ -35,7 +35,7 @@ PyTree = Any
 
 def run_rounds(engine, state, batches_for: Callable[[int], PyTree],
                rounds: int, *, start: int = 0,
-               rounds_per_dispatch: int = 1,
+               rounds_per_dispatch: int | str = 1,
                span_batches_for: Callable[[int, int], PyTree] | None = None,
                eval_batches_for: Callable[[int, int], PyTree] | None = None,
                eval_fn: Callable[[Any, int], jax.Array] | None = None,
@@ -43,6 +43,10 @@ def run_rounds(engine, state, batches_for: Callable[[int], PyTree],
                on_round: Callable[[dict], None] | None = None,
                on_state: Callable[[int, Any], None] | None = None,
                on_state_every: int = 1,
+               checkpoint_in_program: bool = False,
+               host_overhead_s: float | None = None,
+               device_round_s: float | None = None,
+               telemetry: dict | None = None,
                max_in_flight: int = 2) -> tuple[Any, list[dict]]:
     """Run rounds ``start..rounds-1`` through the engine.
 
@@ -56,6 +60,12 @@ def run_rounds(engine, state, batches_for: Callable[[int], PyTree],
     host-side alternative (a separately-jitted device scalar per round); it
     needs the state between rounds, so it pins the dispatch width to R=1.
 
+    ``rounds_per_dispatch`` may be the string ``"auto"``: the dispatch cost
+    model (:func:`repro.engine.superstep.auto_rounds_per_dispatch`, fed the
+    measured ``host_overhead_s`` / ``device_round_s`` when supplied) picks R
+    — whole-run single dispatch when unmeasured. Any resolved R replays the
+    identical arithmetic bit for bit.
+
     ``participation_for(r0, n)`` (elastic runs) supplies the [n, K] float32
     worker masks for rounds ``r0..r0+n-1``; the driver threads them into
     every dispatch and drains the per-round ``active_workers`` /
@@ -64,19 +74,57 @@ def run_rounds(engine, state, batches_for: Callable[[int], PyTree],
     ``on_round(metrics)`` fires per round when a superstep's metrics are
     drained to host floats. ``on_state(r, state)`` fires every
     ``on_state_every``-th round (r+1 divisible) with the new state, for
-    checkpointing; the requested ``rounds_per_dispatch`` is clamped to divide
-    that cadence, and all pending metrics are drained first so whatever
-    on_round persisted (e.g. the CSV) never lags a saved checkpoint.
-    Returns the final state and the per-round metrics.
+    checkpointing. By default the requested ``rounds_per_dispatch`` is
+    clamped to divide that cadence, and all pending metrics are drained
+    first so whatever on_round persisted (e.g. the CSV) never lags a saved
+    checkpoint. With ``checkpoint_in_program=True`` the cadence clamp is
+    dropped entirely: the driver passes per-round boolean ``ckpt_flags``
+    into each superstep and installs a sink on the engine: the io_callback
+    stashes each flagged round's carry (device arrays — converting on the
+    callback thread deadlocks the CPU runtime against the running dispatch)
+    and the driver replays the stash through ``on_state`` as numpy
+    TrainStates once the producing dispatch has drained — R (and hence
+    "auto" = the whole run) no longer needs to divide the checkpoint
+    cadence. The carries are captured mid-dispatch but written after it
+    completes, so a run killed mid-span keeps its previous checkpoint.
+
+    ``telemetry`` (optional dict) is filled with the resolved dispatch plan:
+    ``rounds_per_dispatch``, ``dispatches`` (incremented as they happen),
+    ``in_program_checkpoints``. Returns the final state and the per-round
+    metrics.
     """
     span = rounds - start
+    in_prog_ckpt = (checkpoint_in_program and on_state is not None
+                    and bool(on_state_every) and eval_fn is None)
     R = effective_rounds_per_dispatch(
         rounds_per_dispatch if eval_fn is None else 1, span,
-        on_state_every if on_state is not None else 0, start=start)
+        on_state_every if (on_state is not None and not in_prog_ckpt) else 0,
+        start=start, host_overhead_s=host_overhead_s,
+        device_round_s=device_round_s)
 
     pending: collections.deque = collections.deque()
     history: list[dict] = []
     H = engine.dcfg.sync_interval
+    if telemetry is not None:
+        telemetry.update(rounds_per_dispatch=R, dispatches=0,
+                         in_program_checkpoints=in_prog_ckpt)
+    ckpt_stash: collections.deque = collections.deque()
+    if in_prog_ckpt:
+        # io_callback sink: the carry arrives as a device-leaf TrainState
+        # with the round counter already advanced past the flagged round.
+        # The sink only STASHES it — converting here (np.asarray/device_get
+        # on the callback thread) deadlocks the CPU runtime against the
+        # dispatch that fired the callback; flush_checkpoints converts on
+        # the main thread once that dispatch has fully drained.
+        def _sink(state_dev):
+            ckpt_stash.append(state_dev)
+
+        engine.checkpoint_sink = _sink
+
+    def flush_checkpoints() -> None:
+        while ckpt_stash:
+            st = jax.tree.map(np.asarray, ckpt_stash.popleft())
+            on_state(int(st["round"]) - 1, st)
 
     def drain_one() -> None:
         r0, n, loss, ev, cb, aw, st = pending.popleft()
@@ -106,7 +154,7 @@ def run_rounds(engine, state, batches_for: Callable[[int], PyTree],
     for r0 in range(start, rounds, R):
         masks = (np.asarray(participation_for(r0, R), np.float32)
                  if participation_for is not None else None)
-        if R == 1 and eval_batches_for is None:
+        if R == 1 and eval_batches_for is None and not in_prog_ckpt:
             # classic path: single-round dispatch + optional host-side eval
             state, info = engine.step(
                 state, batches_for(r0),
@@ -122,21 +170,38 @@ def run_rounds(engine, state, batches_for: Callable[[int], PyTree],
                     lambda *bs: np.stack([np.asarray(b) for b in bs]),
                     *[batches_for(r0 + i) for i in range(R)])
             eb = eval_batches_for(r0, R) if eval_batches_for is not None else None
+            flags = (np.asarray([(r0 + i + 1) % on_state_every == 0
+                                 for i in range(R)], bool)
+                     if in_prog_ckpt else None)
             state, out = engine.superstep(state, batches, eb,
-                                          participation=masks)
+                                          participation=masks,
+                                          ckpt_flags=flags)
             ev = out.get("eval_loss")
             loss, cb = out["loss"], out["comm_bytes"]
             aw, st = out.get("active_workers"), out.get("staleness")
+        if telemetry is not None:
+            telemetry["dispatches"] += 1
         # keep only the metric buffers alive; the rest (notably the
         # parameter-sized psi tree of the R=1 path) must be freeable as soon
         # as the dispatch's consumers drop it
         pending.append((r0, R, loss, ev, cb, aw, st))
-        if on_state is not None and on_state_every and (r0 + R) % on_state_every == 0:
+        if (on_state is not None and on_state_every and not in_prog_ckpt
+                and (r0 + R) % on_state_every == 0):
             while pending:  # CSV/metrics must never lag a saved checkpoint
                 drain_one()
             on_state(r0 + R - 1, state)
         while len(pending) > max_in_flight:
             drain_one()
+        if in_prog_ckpt and not pending:
+            # every dispatch issued so far has drained (drain_one blocks on
+            # its metric buffers), so the stashed carries are safely readable
+            flush_checkpoints()
     while pending:
         drain_one()
+    if in_prog_ckpt:
+        # the sink belongs to THIS run; drop it so a later run without
+        # in-program checkpoints can never fire a stale on_state
+        jax.block_until_ready(jax.tree.leaves(state))
+        flush_checkpoints()
+        engine.checkpoint_sink = None
     return state, history

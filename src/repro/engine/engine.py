@@ -130,10 +130,37 @@ class TrainEngine:
         def eval_loss_fn(params, batch):
             with kernel_partitioning(self.kernel_parts):
                 return model.loss(params, batch)[0]
+        # In-program checkpoint plumbing: the superstep's io_callback lands
+        # in _emit_checkpoint, which forwards to whatever sink the driver
+        # installed for the current run (checkpoint_sink is host-side mutable
+        # state read at EXECUTION time, so one compiled trace serves every
+        # run regardless of where its checkpoints go).
+        self.checkpoint_sink: Callable | None = None
         self.superstep_fn = build_superstep_fn(self.round_fn,
-                                               eval_loss_fn=eval_loss_fn)
+                                               eval_loss_fn=eval_loss_fn,
+                                               checkpoint_cb=self._emit_checkpoint)
         self._jitted: Callable | None = None
         self._eval_loss = jax.jit(eval_loss_fn)
+        # driver telemetry: every superstep/step dispatch increments this —
+        # the single-dispatch acceptance test (and the CI smoke) pins it
+        self.dispatch_count = 0
+
+    def _emit_checkpoint(self, state_dev: PyTree) -> None:
+        """Host side of the in-program checkpoint io_callback.
+
+        Receives the scan carry as a same-structure TrainState whose leaves
+        are device arrays (bit-identical to what ``jax.device_get`` of the
+        live state would return at that round — the callback reads the
+        carry, it never re-computes anything). The sink MUST NOT block on a
+        host transfer (``np.asarray`` / ``device_get``): this runs on the
+        XLA callback thread while the dispatch that fired it is still
+        executing, and on the CPU backend that transfer is serviced by the
+        very thread parked inside the callback custom call — it deadlocks.
+        Sinks stash the arrays and let the driver convert them from the
+        main thread once the dispatch has drained."""
+        sink = self.checkpoint_sink
+        if sink is not None:
+            sink(state_dev)
 
     # -- construction helpers ----------------------------------------------
 
@@ -216,7 +243,8 @@ class TrainEngine:
 
     def superstep(self, state: TrainState, batches: PyTree,
                   eval_batches: PyTree | None = None,
-                  participation: PyTree | None = None) -> tuple[TrainState, dict]:
+                  participation: PyTree | None = None,
+                  ckpt_flags: PyTree | None = None) -> tuple[TrainState, dict]:
         """R communication rounds in ONE dispatch; donated state.
 
         ``batches`` leaves are round-stacked [R, H, K, B, ...]. Returns
@@ -225,12 +253,19 @@ class TrainEngine:
         outer params of every round are evaluated inside the same program.
         ``participation`` ([R, K] float32 {0,1}, elastic configs only)
         supplies each round's worker mask; the scan threads row r into the
-        state carry before round r runs.
+        state carry before round r runs. ``ckpt_flags`` ([R] bool) marks the
+        rounds whose post-round state is emitted to the host through the
+        in-program io_callback (install :attr:`checkpoint_sink` first) —
+        this is what lets a whole run with a checkpoint cadence execute as
+        one dispatch.
         """
         import jax.numpy as jnp
 
+        self.dispatch_count += 1
         if participation is not None:
             participation = jnp.asarray(participation, jnp.float32)
+        if ckpt_flags is not None:
+            ckpt_flags = jnp.asarray(ckpt_flags, bool)
         if self.mesh is not None:
             from repro.launch.sharding import batch_shardings
 
@@ -242,8 +277,9 @@ class TrainEngine:
                             leading_scan=1))
                 return self.jitted_round(
                     state, self.place_batches(batches, leading_scan=2),
-                    eval_batches, participation)
-        return self.jitted_round(state, batches, eval_batches, participation)
+                    eval_batches, participation, ckpt_flags)
+        return self.jitted_round(state, batches, eval_batches, participation,
+                                 ckpt_flags)
 
     def eval_loss(self, params: PyTree, batch: PyTree) -> jax.Array:
         """Loss of the synced (outer) params on one un-stacked batch."""

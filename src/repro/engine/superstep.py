@@ -28,10 +28,18 @@ rounds). The superstep retires that last per-round host round-trip:
     what keeps R a pure scheduling knob — every R that divides the run
     replays the identical arithmetic, bit for bit.
 
-Eval/checkpoint cadence is handled by *choosing* R, not by branching inside
-the program: :func:`effective_rounds_per_dispatch` clamps the requested R to
-a common divisor of the remaining rounds and the checkpoint interval, so
-superstep boundaries always land on cadence boundaries.
+Eval cadence is handled by *choosing* R; checkpoint cadence no longer has
+to be: with a checkpoint sink installed (``checkpoint_cb``) the scan body
+emits the post-round state to the host through
+``jax.experimental.io_callback`` on the rounds a boolean ``ckpt_flags``
+mask selects, so the WHOLE run can be one donated dispatch regardless of
+the checkpoint interval. Without flags the lowered program is literally
+the pre-checkpoint program (the callback branch only enters the trace when
+a mask is passed), which is what keeps the bit-parity pins intact.
+:func:`effective_rounds_per_dispatch` still clamps a hand-chosen R to the
+run's cadences — and resolves the ``"auto"`` request through a dispatch
+cost model (measured host overhead vs device round time, whole-run when
+unmeasured).
 """
 from __future__ import annotations
 
@@ -42,9 +50,15 @@ import jax
 
 PyTree = Any
 
+# Fraction of a dispatch the host is allowed to cost before the cost model
+# grows R ("auto" mode): R* is the smallest span divisor with
+# host_overhead <= MAX_DISPATCH_OVERHEAD_FRAC * R * device_round_time.
+MAX_DISPATCH_OVERHEAD_FRAC = 0.01
+
 
 def build_superstep_fn(round_fn: Callable,
-                       eval_loss_fn: Callable | None = None) -> Callable:
+                       eval_loss_fn: Callable | None = None,
+                       checkpoint_cb: Callable | None = None) -> Callable:
     """Wrap a round function into the R-rounds-per-dispatch executor.
 
     ``round_fn(state, round_batches) -> (state, {"loss": f32[H], "psi": ...})``
@@ -72,21 +86,48 @@ def build_superstep_fn(round_fn: Callable,
     here at all: it lives in the TrainState, so the scan carry shifts it
     round by round and R>1 dispatch + donation survive unchanged.
 
+    In-program checkpoints: when the builder received a ``checkpoint_cb``
+    host callable and the caller passes ``ckpt_flags`` (a ``[R]`` bool array,
+    one per round), the post-round state of every flagged round is shipped to
+    the host via an unordered ``jax.experimental.io_callback`` under a
+    ``lax.cond`` — the device never leaves the program, the host sink
+    receives the carry as a same-structure pytree of numpy leaves, and the
+    round counter travels in the state so the sink knows which round it got.
+    The emission branch reads the carry and computes nothing, so flagged and
+    unflagged dispatches replay identical arithmetic; with ``ckpt_flags=None``
+    (the default) the cond is not traced at all and the program is
+    byte-for-byte the pre-checkpoint executor.
+
     R is read from the static leading batch dim at trace time; each distinct
-    (R, with/without eval, with/without participation) tuple is one trace of
-    the same jitted executor.
+    (R, with/without eval, with/without participation, with/without
+    ckpt_flags) tuple is one trace of the same jitted executor.
     """
+
+    def emit_checkpoint(flag, carry):
+        from jax.experimental import io_callback
+
+        def emit(c):
+            io_callback(checkpoint_cb, None, c, ordered=False)
+            return 0
+
+        jax.lax.cond(flag, emit, lambda c: 0, carry)
 
     def superstep_fn(state: PyTree, batches: PyTree,
                      eval_batches: PyTree | None = None,
-                     participation: PyTree | None = None) -> tuple[PyTree, dict]:
+                     participation: PyTree | None = None,
+                     ckpt_flags: PyTree | None = None) -> tuple[PyTree, dict]:
         R = jax.tree.leaves(batches)[0].shape[0]
         do_eval = eval_loss_fn is not None and eval_batches is not None
+        do_ckpt = checkpoint_cb is not None and ckpt_flags is not None
         if participation is not None and state.get("participation") is None:
             raise ValueError(
                 "per-round participation masks need an elastic TrainState "
                 "(DiLoCoConfig(elastic=True)): the scan carry cannot gain "
                 "a participation leaf the initial state lacks")
+        if ckpt_flags is not None and checkpoint_cb is None:
+            raise ValueError(
+                "ckpt_flags passed but the superstep was built without a "
+                "checkpoint_cb host sink (build_superstep_fn(checkpoint_cb=))")
 
         if R == 1:  # degenerate case: exactly the single-round program
             if participation is not None:
@@ -97,28 +138,63 @@ def build_superstep_fn(round_fn: Callable,
                 out["eval_loss"] = eval_loss_fn(
                     state["outer_params"],
                     jax.tree.map(lambda e: e[0], eval_batches))[None]
+            if do_ckpt:
+                emit_checkpoint(ckpt_flags[0], state)
             return state, out
 
         def body(carry: PyTree, xs) -> tuple[PyTree, dict]:
-            rb, eb, pr = xs
+            rb, eb, pr, cf = xs
             if pr is not None:
                 carry = carry.replace(participation=pr)
             carry, info = round_fn(carry, rb)
             ys = {k: v for k, v in info.items() if k != "psi"}
             if do_eval:
                 ys["eval_loss"] = eval_loss_fn(carry["outer_params"], eb)
+            if cf is not None:
+                emit_checkpoint(cf, carry)
             return carry, ys
 
-        xs = (batches, eval_batches if do_eval else None, participation)
+        xs = (batches, eval_batches if do_eval else None, participation,
+              ckpt_flags if do_ckpt else None)
         state, ys = jax.lax.scan(body, state, xs)
         return state, ys
 
     return superstep_fn
 
 
-def effective_rounds_per_dispatch(requested: int, rounds_to_run: int,
+def auto_rounds_per_dispatch(rounds_to_run: int,
+                             host_overhead_s: float | None = None,
+                             device_round_s: float | None = None,
+                             max_overhead_frac: float = MAX_DISPATCH_OVERHEAD_FRAC) -> int:
+    """Cost-model choice of the superstep length R.
+
+    Each dispatch costs a fixed host-side overhead (trace-cache lookup,
+    donation bookkeeping, argument transfer, metric-buffer bookkeeping) that
+    amortizes over the R device rounds it carries. The model picks the
+    SMALLEST divisor of ``rounds_to_run`` whose per-dispatch overhead stays
+    under ``max_overhead_frac`` of the device time it buys —
+    ``host_overhead_s <= frac * R * device_round_s`` — because beyond that
+    point larger R only grows host-side batch staging and metric latency.
+    With no measurements (the driver cannot time a round it has not run) the
+    model returns the whole span: maximal amortization, ONE dispatch for the
+    run, the olmax whole-run-on-device regime.
+    """
+    if rounds_to_run <= 1:
+        return max(1, rounds_to_run)
+    if not host_overhead_s or not device_round_s:
+        return rounds_to_run
+    need = host_overhead_s / (max_overhead_frac * device_round_s)
+    for r in range(1, rounds_to_run + 1):
+        if rounds_to_run % r == 0 and r >= need:
+            return r
+    return rounds_to_run
+
+
+def effective_rounds_per_dispatch(requested, rounds_to_run: int,
                                   checkpoint_every: int = 0,
-                                  start: int = 0) -> int:
+                                  start: int = 0, *,
+                                  host_overhead_s: float | None = None,
+                                  device_round_s: float | None = None) -> int:
     """Clamp a requested superstep length to the run's cadences.
 
     The superstep must divide (a) the number of rounds left to run — the run
@@ -131,8 +207,20 @@ def effective_rounds_per_dispatch(requested: int, rounds_to_run: int,
     not necessarily the *largest* divisor <= requested (requesting R=4 on a
     6-round run yields 2, not 3; gcd keeps the rule deterministic and
     order-free). R = 1 recovers the classic one-dispatch-per-round driver.
+
+    ``requested="auto"`` delegates the choice to the dispatch cost model
+    (:func:`auto_rounds_per_dispatch`, fed the measured ``host_overhead_s``
+    and ``device_round_s`` when the caller has them) before the same cadence
+    clamps apply. Callers that fold checkpoints into the program
+    (``ckpt_flags`` + the engine's checkpoint sink) pass
+    ``checkpoint_every=0`` — the whole point of in-program emission is that
+    R no longer needs to divide the checkpoint cadence.
     """
-    r = max(1, int(requested))
+    if requested == "auto":
+        r = auto_rounds_per_dispatch(rounds_to_run, host_overhead_s,
+                                     device_round_s)
+    else:
+        r = max(1, int(requested))
     if rounds_to_run > 0:
         r = math.gcd(r, rounds_to_run)
     if checkpoint_every:

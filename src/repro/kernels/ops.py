@@ -24,6 +24,7 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import autotune
 from repro.kernels.matmul import matmul_epilogue, ns_stack_spec
 from repro.kernels.outer_update import fused_nesterov_update, outer_update_spec
 from repro.kernels.partition import active_partitioning, shard_wrap
@@ -101,11 +102,19 @@ def _ns_orthogonalize_jit(g, iters, eps, block):
 
 
 def ns_orthogonalize(g: jax.Array, iters: int = 5, eps: float = 1e-7,
-                     block: int = 128) -> jax.Array:
+                     block: int | None = None) -> jax.Array:
     """Newton–Schulz orthogonalization of the trailing 2 dims via the Pallas
     matmul-epilogue kernel. Batched leading dims are folded into the matrix
     stack — vmapped on one device, shard_mapped over the stack axis when a
-    mesh is routed (whole matrices always stay device-local)."""
+    mesh is routed (whole matrices always stay device-local).
+
+    ``block=None`` (the default) consults the autotune table for this
+    (m, n, dtype, backend) and falls back to the historical 128 on a miss;
+    sweep entries are bitwise-gated, so a tuned block can only retile the
+    NS matmuls without splitting the contraction."""
+    if block is None:
+        m, n = g.shape[-2:]
+        block = autotune.ns_block(m, n, str(g.dtype)) or 128
     part = active_partitioning()
     if part is None:
         return _ns_orthogonalize_jit(g, iters, eps, block)
@@ -130,11 +139,19 @@ def _quantize_rowwise_jit(x, bits, block_rows):
     return _quantize_body(x, bits=bits, block_rows=block_rows)
 
 
-def quantize_rowwise(x: jax.Array, bits: int = 4, block_rows: int = 8):
+def quantize_rowwise(x: jax.Array, bits: int = 4, block_rows: int | None = None):
     """Fused row-wise linear quant->dequant. Returns (dequantized, codes, lo, scale).
 
     On a routed mesh the row axis is shard_mapped per ``rowwise_specs``
-    (rows are independent — each carries its own lo/scale)."""
+    (rows are independent — each carries its own lo/scale).
+
+    ``block_rows=None`` consults the autotune table for this wire shape and
+    falls back to the historical 8 on a miss. block_rows is pure row tiling
+    (every row quantizes against its own lo/scale), so any tuned value is
+    bitwise-inert — the sweep's gate re-verifies that per shape anyway."""
+    if block_rows is None:
+        block_rows = autotune.quantize_block_rows(
+            x.shape[0], x.shape[1], bits, str(x.dtype)) or 8
     part = active_partitioning()
     if part is None:
         return _quantize_rowwise_jit(x, bits, block_rows)
@@ -161,8 +178,15 @@ def _dequantize_rowwise_jit(codes, lo, scale, block_rows):
 
 
 def dequantize_rowwise(codes: jax.Array, lo: jax.Array, scale: jax.Array,
-                       block_rows: int = 8) -> jax.Array:
-    """Fused receiver-side reconstruction: (codes u8 [m, n], lo, scale) -> f32."""
+                       block_rows: int | None = None) -> jax.Array:
+    """Fused receiver-side reconstruction: (codes u8 [m, n], lo, scale) -> f32.
+
+    ``block_rows=None`` resolves through the autotune table under the SAME
+    key the quantizer uses (the wire shape + bits=4 wire default), so both
+    ends of the wire pick the same tiling."""
+    if block_rows is None:
+        block_rows = autotune.quantize_block_rows(
+            codes.shape[0], codes.shape[1], 4, "float32") or 8
     part = active_partitioning()
     if part is None:
         return _dequantize_rowwise_jit(codes, lo, scale, block_rows)

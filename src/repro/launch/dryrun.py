@@ -23,7 +23,13 @@ import traceback
 
 import jax
 
-from repro.configs import ASSIGNED_ARCHS, INPUT_SHAPES, get_config, shape_supported
+from repro.configs import (
+    ASSIGNED_ARCHS,
+    INPUT_SHAPES,
+    config_for_shape,
+    get_config,
+    shape_supported,
+)
 from repro.launch.mesh import make_production_mesh
 from repro.launch.steps import build_plans
 from repro.models.api import build_model
@@ -91,9 +97,15 @@ def run_one(arch: str, shape: str, multi_pod: bool, sync_interval: int = 30,
     kparts = kernel_specs(mesh, cfg0)
     uses_pallas = (attn_impl == "pallas" or ns_impl == "pallas"
                    or outer_kernel or wire_impl == "pallas")
+    from repro.kernels.autotune import autotune_evidence
+
     kernels_evidence = {
         "attn_impl": attn_impl, "ns_impl": ns_impl,
         "outer_kernel": outer_kernel, "wire_impl": wire_impl,
+        # which block-size knobs the committed autotune table resolved for
+        # this shape's sequence length (empty 'tuned' = all constants)
+        "autotune": autotune_evidence(config_for_shape(cfg0, shape),
+                                      INPUT_SHAPES[shape].seq_len),
         "shard_map": kparts is not None,
         "partitioning": None if kparts is None else {
             "flash_axes": list(kparts.flash_axes),
@@ -457,12 +469,23 @@ def build_parser() -> argparse.ArgumentParser:
                     help="per-(round, worker) drop probability in the "
                          "straggler_wallclock evidence block (dropped "
                          "workers leave the round's slowest-worker max)")
+    ap.add_argument("--autotune", default="on", choices=["on", "off"],
+                    help="consult the committed kernel autotune table when "
+                         "resolving block sizes ('off' restores the raw "
+                         "constants); the resolution lands in every record's "
+                         "kernels.autotune evidence block")
+    ap.add_argument("--autotune-table", default=None,
+                    help="path of the autotune JSON table (default: the "
+                         "committed src/repro/kernels/autotune_table.json)")
     ap.add_argument("--out", default="results/dryrun")
     return ap
 
 
 def main() -> None:
     args = build_parser().parse_args()
+    from repro.kernels.autotune import configure
+
+    configure(enabled=args.autotune == "on", table_path=args.autotune_table)
 
     archs = list(ASSIGNED_ARCHS) if (args.all or not args.arch) else [args.arch]
     shapes = list(INPUT_SHAPES) if (args.all or not args.shape) else [args.shape]

@@ -78,12 +78,17 @@ def _context_struct(cfg: ModelConfig, lead: tuple[int, ...]) -> jax.ShapeDtypeSt
 
 def production_model_config(cfg: ModelConfig, shape: str) -> ModelConfig:
     cfg = config_for_shape(cfg, shape)
-    # pin the attention block sizes to divisors of the plan's sequence length
-    # so every step plan (and the roofline's visited-fraction term) sees the
-    # same static blocks the attention impls will actually run with
+    # best-known attention blocks from the committed autotune table first
+    # (bitwise-gated at sweep time; a table miss or --no-autotune leaves the
+    # ModelConfig constants), then pin the block sizes to divisors of the
+    # plan's sequence length so every step plan (and the roofline's
+    # visited-fraction term) sees the same static blocks the attention impls
+    # will actually run with
+    from repro.kernels.autotune import tuned_model_config
     from repro.kernels.flash_attention import clamp_block
 
     S = INPUT_SHAPES[shape].seq_len
+    cfg = tuned_model_config(cfg, S)
     cfg = cfg.replace(attn_block_q=clamp_block(cfg.attn_block_q, S),
                       attn_block_kv=clamp_block(cfg.attn_block_kv, S))
     model = build_model(cfg)
@@ -189,21 +194,38 @@ def build_train_plans(arch_cfg: ModelConfig, shape: str, mesh: Mesh,
     # quantize + fused outer update in the sync) shard_maps itself from it
     kparts = kernel_specs(mesh, cfg)
 
+    # Every donated plan pins its OUTPUT state to the committed input layout.
+    # Without the constraint GSPMD is free to propagate a different sharding
+    # onto the returned TrainState (observed on the single-pod 16x16 mesh:
+    # TP-unfriendly archs commit the outer state without a 'model' dim, but
+    # propagation re-shards the outputs over 'model') — and an output whose
+    # per-chip layout differs from the donated input cannot alias, silently
+    # forfeiting the in-place update donation exists for.
+    def pin_state(new_state):
+        return jax.lax.with_sharding_constraint(new_state, state_sh)
+
     def train_step(state, batch):
         with activation_sharding(rules), kernel_partitioning(kparts):
-            return inner_step(model, opt, state, batch, spmd_axis=spmd_axis)
+            new_state, info = inner_step(model, opt, state, batch,
+                                         spmd_axis=spmd_axis)
+        return pin_state(new_state), info
 
     def sync_step(state):
         with kernel_partitioning(kparts):
             new_state, _psi = outer_step(dcfg, state, outer=outer)
-        return new_state
+        return pin_state(new_state)
 
     # the fused round executor — same builder the TrainEngine compiles
     from repro.engine import build_round_fn, build_superstep_fn
 
-    round_fn = build_round_fn(model, dcfg, opt, masks=None, rules=rules,
-                              spmd_axis=spmd_axis, outer=outer,
-                              kernel_parts=kparts)
+    round_fn0 = build_round_fn(model, dcfg, opt, masks=None, rules=rules,
+                               spmd_axis=spmd_axis, outer=outer,
+                               kernel_parts=kparts)
+
+    def round_fn(state, batches):
+        new_state, info = round_fn0(state, batches)
+        return pin_state(new_state), info
+
     H = dcfg.sync_interval
     round_batch_abs = jax.tree.map(
         lambda b: jax.ShapeDtypeStruct((H, *b.shape), b.dtype), batch_abs)

@@ -120,10 +120,21 @@ def train(args) -> dict:
         max_seq_len=seq_len,
         sliding_window=min(cfg.sliding_window, seq_len) if cfg.sliding_window else 0,
         attn_impl=args.attn_impl,
-        blockwise_threshold=args.blockwise_threshold,
-        attn_block_q=args.attn_block_q,
-        attn_block_kv=args.attn_block_kv,
     )
+    # block-size resolution order: autotune table (bitwise-gated best-known
+    # configs, --autotune off restores the raw constants) < explicit CLI
+    # overrides (None = not passed)
+    from repro.kernels.autotune import configure, tuned_model_config
+
+    configure(enabled=args.autotune == "on", table_path=args.autotune_table)
+    if args.autotune == "on":
+        cfg = tuned_model_config(cfg, seq_len)
+    overrides = {k: v for k, v in (
+        ("blockwise_threshold", args.blockwise_threshold),
+        ("attn_block_q", args.attn_block_q),
+        ("attn_block_kv", args.attn_block_kv)) if v is not None}
+    if overrides:
+        cfg = cfg.replace(**overrides)
     model = build_model(cfg)
 
     dcfg = make_diloco_cfg(args)
@@ -210,6 +221,7 @@ def train(args) -> dict:
             save_checkpoint(os.path.join(args.out, "ckpt.npz"), st, step=r + 1)
 
         fault_plan = make_fault_plan(args, dcfg.n_workers)
+        telemetry: dict = {}
         state, _history = run_rounds(
             engine, state, lambda r: batches_for_round(data, r, dcfg.sync_interval),
             args.rounds, start=start_round,
@@ -221,12 +233,21 @@ def train(args) -> dict:
             on_round=on_round,
             on_state=on_state if args.checkpoint_every else None,
             on_state_every=args.checkpoint_every,
+            checkpoint_in_program=args.checkpoint_in_program,
+            telemetry=telemetry,
         )
 
+    # the dispatch evidence line the CI single-dispatch smoke greps: with
+    # --rounds-per-dispatch auto and no cadence pinning the whole run is ONE
+    # donated device program, so dispatches must read 1
+    print(f"dispatch telemetry: dispatches={telemetry.get('dispatches')} "
+          f"rounds_per_dispatch={telemetry.get('rounds_per_dispatch')} "
+          f"in_program_checkpoints={telemetry.get('in_program_checkpoints')}")
     final = smoothed_eval_loss(losses, steps, dcfg.sync_interval)
     print(f"final smoothed eval loss: {final:.4f} "
           f"(floor={data.entropy_floor_nats():.4f} nats)")
-    return {"final_loss": final, "losses": losses, "steps": steps, "state": state}
+    return {"final_loss": final, "losses": losses, "steps": steps, "state": state,
+            "telemetry": telemetry}
 
 
 def build_parser() -> argparse.ArgumentParser:
@@ -242,10 +263,15 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--workers", type=int, default=4)
     ap.add_argument("--sync-interval", type=int, default=6)
     ap.add_argument("--rounds", type=int, default=20)
-    ap.add_argument("--rounds-per-dispatch", type=int, default=1,
-                    help="rounds per device dispatch (superstep length R); "
-                         "auto-clamped to divide the run and the checkpoint "
-                         "cadence — any dividing R is bitwise-identical")
+    ap.add_argument("--rounds-per-dispatch",
+                    type=lambda v: v if v == "auto" else int(v),
+                    default="auto",
+                    help="rounds per device dispatch (superstep length R), or "
+                         "'auto' (the default): the dispatch cost model picks "
+                         "R — the whole run as ONE device program when "
+                         "unmeasured. Auto-clamped to divide the run and the "
+                         "checkpoint cadence — any dividing R is "
+                         "bitwise-identical")
     ap.add_argument("--lr", type=float, default=2e-2)
     ap.add_argument("--weight-decay", type=float, default=1e-4)
     ap.add_argument("--schedule", default="cosine", choices=["cosine", "constant"])
@@ -292,19 +318,36 @@ def build_parser() -> argparse.ArgumentParser:
                          "XLA_FLAGS=--xla_force_host_platform_device_count=8); "
                          "P is the 'pod' worker axis and must divide "
                          "--workers")
-    ap.add_argument("--blockwise-threshold", type=int, default=4096,
+    ap.add_argument("--blockwise-threshold", type=int, default=None,
                     help="seq length at which attn_impl=xla switches from "
-                         "dense softmax to blockwise online-softmax")
-    ap.add_argument("--attn-block-q", type=int, default=512,
+                         "dense softmax to blockwise online-softmax (default: "
+                         "autotune table, else the config constant 4096)")
+    ap.add_argument("--attn-block-q", type=int, default=None,
                     help="attention q-block rows (both impls; clamped to "
-                         "divide the sequence)")
-    ap.add_argument("--attn-block-kv", type=int, default=1024,
+                         "divide the sequence; default: autotune table, else "
+                         "the config constant 512)")
+    ap.add_argument("--attn-block-kv", type=int, default=None,
                     help="attention kv-block rows (both impls; clamped to "
-                         "divide the sequence)")
+                         "divide the sequence; default: autotune table, else "
+                         "the config constant 1024)")
+    ap.add_argument("--autotune", default="on", choices=["on", "off"],
+                    help="consult the committed kernel autotune table for "
+                         "block sizes ('off' restores the raw constants); "
+                         "entries are bitwise-gated at sweep time, so this "
+                         "never changes any loss bit")
+    ap.add_argument("--autotune-table", default=None,
+                    help="path of the autotune JSON table (default: the "
+                         "committed src/repro/kernels/autotune_table.json)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--out", default="results/train")
     ap.add_argument("--resume", default=None)
     ap.add_argument("--checkpoint-every", type=int, default=0)
+    ap.add_argument("--checkpoint-in-program", action="store_true",
+                    help="emit checkpoints from INSIDE the running device "
+                         "program (io_callback) instead of between "
+                         "dispatches, so --rounds-per-dispatch (and 'auto' = "
+                         "the whole run) no longer needs to divide "
+                         "--checkpoint-every")
     ap.add_argument("--verbose", action="store_true")
     return ap
 

@@ -1,0 +1,156 @@
+"""Kernel autotune tables: key hashing, lookup/fallback routing, and the
+bitwise-inertness contract of the committed entries on the parity path."""
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops
+from repro.kernels.autotune import (
+    DEFAULT_TABLE_PATH,
+    AutotuneTable,
+    autotune_key,
+    autotune_scope,
+    quantize_block_rows,
+    tuned_model_config,
+)
+from repro.models.common import ModelConfig
+
+
+def test_autotune_key_is_stable_and_distinct():
+    k = autotune_key("quantize", (512, 256, 4), "float32", "cpu")
+    assert k == "quantize/512x256x4/float32/cpu"
+    # every component participates in the key
+    assert autotune_key("ns", (512, 256, 4), "float32", "cpu") != k
+    assert autotune_key("quantize", (512, 256, 8), "float32", "cpu") != k
+    assert autotune_key("quantize", (512, 256, 4), "bfloat16", "cpu") != k
+    assert autotune_key("quantize", (512, 256, 4), "float32", "tpu") != k
+    # numpy ints hash like python ints
+    assert autotune_key("quantize", tuple(np.int64([512, 256, 4])),
+                        "float32", "cpu") == k
+
+
+def test_table_lookup_hit_miss_and_record(tmp_path):
+    t = AutotuneTable()
+    t.record("quantize", (64, 32, 4), "float32", "cpu", {"block_rows": 16},
+             {"speedup": 2.0})
+    assert t.lookup("quantize", (64, 32, 4), "float32", "cpu") == {"block_rows": 16}
+    assert t.lookup("quantize", (64, 33, 4), "float32", "cpu") is None
+    # save/load round-trips
+    path = str(tmp_path / "table.json")
+    t.save(path)
+    t2 = AutotuneTable.load(path)
+    assert t2.entries == t.entries
+
+
+def test_scope_routes_lookups_and_disable_falls_back(tmp_path):
+    path = str(tmp_path / "t.json")
+    t = AutotuneTable(path=path)
+    t.record("quantize", (8, 4, 4), "float32", jax.default_backend(),
+             {"block_rows": 2})
+    t.save()
+    with autotune_scope(enabled=True, table_path=path):
+        assert quantize_block_rows(8, 4, 4, "float32") == 2
+        assert quantize_block_rows(9, 4, 4, "float32") is None  # miss
+    with autotune_scope(enabled=False):
+        assert quantize_block_rows(8, 4, 4, "float32") is None  # off
+
+
+def test_tuned_model_config_applies_only_known_knobs(tmp_path):
+    cfg = ModelConfig(n_heads=4, n_kv_heads=2, head_dim=16, max_seq_len=128,
+                      dtype="float32")
+    path = str(tmp_path / "t.json")
+    t = AutotuneTable(path=path)
+    t.record("attention", (128, 4, 2, 16), "float32", jax.default_backend(),
+             {"attn_block_q": 64, "attn_block_kv": 32, "junk_knob": 7})
+    t.save()
+    with autotune_scope(enabled=True, table_path=path):
+        tuned = tuned_model_config(cfg, 128)
+        assert tuned.attn_block_q == 64 and tuned.attn_block_kv == 32
+        assert tuned.blockwise_threshold == cfg.blockwise_threshold
+        # an unrelated key in the entry must not reach ModelConfig.replace
+        assert not hasattr(tuned, "junk_knob")
+        # a shape miss returns the config untouched
+        assert tuned_model_config(cfg, 256) is cfg
+    with autotune_scope(enabled=False):
+        assert tuned_model_config(cfg, 128) is cfg
+
+
+def test_committed_table_is_wellformed():
+    """The committed JSON parses, and every entry carries a config plus the
+    sweep's bitwise-verification evidence."""
+    with open(DEFAULT_TABLE_PATH) as f:
+        entries = json.load(f)
+    assert entries, "committed autotune table is empty"
+    for key, ent in entries.items():
+        kernel = key.split("/", 1)[0]
+        assert kernel in ("attention", "quantize", "ns"), key
+        assert "config" in ent and ent["config"], key
+        assert ent["evidence"].get("verified_bitwise") is True, (
+            f"{key}: committed without bitwise verification")
+
+
+@pytest.mark.parametrize("shape", [(512, 256), (1024, 512)])
+def test_tuned_quantize_bitwise_inert_vs_default(shape):
+    """The table's block_rows must reproduce the default tiling bit for bit
+    on the wire shapes the committed table covers (the parity contract)."""
+    x = jax.random.normal(jax.random.PRNGKey(0), shape, jnp.float32)
+    with autotune_scope(enabled=False):
+        ref = ops.quantize_rowwise(x, bits=4)  # block_rows falls back to 8
+    with autotune_scope(enabled=True):
+        tuned = ops.quantize_rowwise(x, bits=4)
+    for a, b in zip(ref, tuned):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_tuned_ns_bitwise_inert_vs_default():
+    g = jax.random.normal(jax.random.PRNGKey(1), (256, 256), jnp.float32)
+    with autotune_scope(enabled=False):
+        ref = ops.ns_orthogonalize(g)
+    with autotune_scope(enabled=True):
+        tuned = ops.ns_orthogonalize(g)
+    np.testing.assert_array_equal(np.asarray(ref), np.asarray(tuned))
+
+
+def test_tuned_attention_bitwise_inert_on_parity_shape():
+    """Reduced smollm's attention shape (the parity path) must produce the
+    identical attend() output with the committed table on and off."""
+    from repro.configs import get_config, reduce_config
+    from repro.models.attention import attend, init_attention
+
+    cfg = reduce_config(get_config("smollm-135m")).replace(max_seq_len=128)
+    S = 128
+    p = init_attention(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, S, cfg.d_model),
+                          jnp.float32)
+    pos = jnp.arange(S)
+
+    def run():
+        c = tuned_model_config(cfg, S)
+        return np.asarray(jax.jit(lambda p, x: attend(p, c, x, pos))(p, x))
+
+    with autotune_scope(enabled=False):
+        ref = run()
+    with autotune_scope(enabled=True):
+        tuned = run()
+    np.testing.assert_array_equal(ref, tuned)
+
+
+def test_sweep_rejects_non_inert_candidates():
+    """The sweep's bitwise gate: a candidate that changes the output must
+    never win, whatever its timing."""
+    from repro.kernels.autotune import _sweep
+
+    calls = []
+
+    def run(knob):
+        calls.append(knob)
+        # knob 1 is the default; knob 2 is 'faster' but changes the result
+        return jnp.array([1.0 if knob == 1 else 2.0])
+
+    best, ev = _sweep(run, {"knob": 1}, [{"knob": 2}], reps=1)
+    assert best == {"knob": 1}
+    assert ev["rejected_not_bitwise"] == 1
+    assert ev["verified_bitwise"] is True

@@ -57,8 +57,84 @@ def _fast_shards(workflow) -> list[dict]:
 
 def test_workflow_has_required_jobs(workflow):
     jobs = workflow["jobs"]
-    for name in ("lint", "fast-tests", "smoke", "slow-tests"):
+    for name in ("lint", "fast-tests", "smoke", "slow-tests",
+                 "bench-regression"):
         assert name in jobs, f"CI must define the {name} job"
+
+
+def test_concurrency_cancels_superseded_pr_runs(workflow):
+    """Force-pushing a PR branch must cancel the superseded run; pushes to
+    main (and scheduled runs) must always complete for bisectability."""
+    conc = workflow.get("concurrency")
+    assert conc, "workflow must define a concurrency group"
+    assert "github.ref" in conc["group"]
+    assert "pull_request" in str(conc["cancel-in-progress"])
+
+
+def test_every_job_has_a_timeout(workflow):
+    for name, job in workflow["jobs"].items():
+        assert "timeout-minutes" in job, f"{name} job has no timeout-minutes"
+
+
+def test_single_dispatch_smoke_pins_dispatch_count(workflow):
+    """The smoke tier must run a reduced whole-run as ONE device dispatch and
+    grep the driver telemetry for it — with a checkpoint cadence that does
+    NOT divide the run, so the in-program io_callback path is what's pinned."""
+    cmds = " ".join(s.get("run", "") for s in workflow["jobs"]["smoke"]["steps"])
+    assert "--rounds-per-dispatch auto" in cmds
+    assert "--checkpoint-in-program" in cmds
+    assert "dispatches=1" in cmds, "smoke must assert the dispatch count"
+
+
+def test_bench_regression_job_runs_gate_and_uploads_artifacts(workflow):
+    job = workflow["jobs"]["bench-regression"]
+    assert "if" in job, "bench tier must be schedule/label/dispatch gated"
+    cmds = [s.get("run", "") for s in job["steps"]]
+    run_cmd = next(c for c in cmds if "benchmarks.run" in c)
+    assert "--json" in run_cmd, "bench run must emit the JSON artifacts"
+    assert any("benchmarks.check_regression" in c for c in cmds), (
+        "bench tier must diff against the committed baseline")
+    uploads = [s for s in job["steps"]
+               if "upload-artifact" in str(s.get("uses", ""))]
+    assert uploads and "BENCH_" in uploads[0]["with"]["path"]
+
+
+def _check_regression_module():
+    import importlib.util
+
+    spec = importlib.util.spec_from_file_location(
+        "check_regression",
+        os.path.join(REPO, "benchmarks", "check_regression.py"))
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def test_bench_baseline_in_sync_with_target_list(workflow):
+    """The committed baseline must cover exactly the pinned REGRESSION_TARGETS,
+    and the CI job's --only list must match — a target added to one place but
+    not the others fails here, not silently in the gated tier."""
+    import json
+
+    mod = _check_regression_module()
+    targets = set(mod.REGRESSION_TARGETS)
+    with open(os.path.join(REPO, "benchmarks", "baseline.json")) as f:
+        base = json.load(f)
+    assert set(base["targets"]) == targets, (
+        f"baseline.json targets {sorted(base['targets'])} != pinned "
+        f"{sorted(targets)} (regenerate with benchmarks.check_regression "
+        f"--update)")
+    for target, rows in base["targets"].items():
+        assert rows, f"baseline target {target} has no rows"
+        for name, row in rows.items():
+            assert name.split("/", 1)[0] in (target, "kernel"), name
+            assert "value" in row and "derived" in row
+    run_cmd = next(s["run"] for s in
+                   workflow["jobs"]["bench-regression"]["steps"]
+                   if "benchmarks.run" in s.get("run", ""))
+    only = next(tok for tok in run_cmd.split() if "," in tok)
+    assert set(only.split(",")) == targets, (
+        f"CI --only list {only} != pinned REGRESSION_TARGETS")
 
 
 def test_fast_shards_cover_every_nonslow_file_exactly_once(workflow):

@@ -47,6 +47,29 @@ for arch, shape in [("smollm-135m", "train_4k"), ("mamba2-370m", "decode_32k"),
                 plan.args[0], c.as_text(), c.memory_analysis(),
                 mesh.devices.size)
         out[f"{arch}/{shape}/{plan.name}"] = rec
+
+# no-pod regression config: on a single-pod mesh whose 'model' axis is wider
+# than 'data', GSPMD used to propagate a 'model'-sharded layout onto the
+# (unconstrained) output state even though the committed outer-state layout
+# drops 'model' on TP-unfriendly archs — a layout mismatch that silently
+# broke donation of the round/superstep outer state (the 16x16 production
+# mesh hit exactly this). The plan fns now pin their outputs with
+# with_sharding_constraint, so this config must alias like any other.
+nopod = make_debug_mesh(data=2, model=4)
+cfg = reduce_config(get_config("smollm-135m"))
+plans = build_plans(cfg, "train_4k", nopod,
+                   dcfg=DiLoCoConfig(n_workers=1, sync_interval=4))
+for plan in plans:
+    with nopod:
+        c = jax.jit(plan.fn, in_shardings=plan.in_shardings,
+                    donate_argnums=plan.donate).lower(*plan.args).compile()
+    rec = {"ok": True}
+    if plan.name in ("round_step", "superstep"):
+        from repro.launch.dryrun import round_step_donation_report
+        rec["donation"] = round_step_donation_report(
+            plan.args[0], c.as_text(), c.memory_analysis(),
+            nopod.devices.size)
+    out[f"nopod/{plan.name}"] = rec
 print(json.dumps(out))
 """
 
@@ -58,7 +81,7 @@ def test_dryrun_on_8_device_world():
                          text=True, env=env, cwd=os.path.dirname(os.path.dirname(__file__)))
     assert res.returncode == 0, res.stderr[-3000:]
     out = json.loads(res.stdout.strip().splitlines()[-1])
-    assert len(out) == 6  # train has train+sync+round+superstep plans
+    assert len(out) == 10  # 6 combo plans + 4 no-pod train plans
     # the DiLoCo sync step must exist and every plan lowered
     assert all(v["ok"] for v in out.values())
     # the train step moves bytes over the wire (FSDP gathers)
@@ -73,4 +96,10 @@ def test_dryrun_on_8_device_world():
         # aliased bytes cover at least the outer params+opt shard
         donation = rec["donation"]
         assert donation["outer_opt_bytes_global"] > 0
+        assert donation["outer_state_aliased"], donation
+    # the no-pod (K=1, model > data) mesh is the configuration where GSPMD
+    # output-sharding propagation used to break outer-state donation — it
+    # must stay fully aliased now that the plan fns pin their outputs
+    for plan in ("round_step", "superstep"):
+        donation = out[f"nopod/{plan}"]["donation"]
         assert donation["outer_state_aliased"], donation

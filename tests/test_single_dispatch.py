@@ -1,0 +1,175 @@
+"""Whole-run single-dispatch execution: one donated device program for the
+entire training span, with checkpoints emitted from inside the program via
+io_callback. Pins (a) bitwise equality of the whole-run dispatch against
+sequential supersteps, (b) byte-identical checkpoints between the in-program
+and host-side emission paths, (c) the driver telemetry's dispatch count, and
+(d) the "auto" dispatch cost model."""
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from repro.checkpoint import save_checkpoint
+from repro.core import DiLoCoConfig
+from repro.data import DataConfig, MarkovStream, batches_for_round, batches_for_span
+from repro.engine import TrainEngine, run_rounds
+from repro.engine.superstep import auto_rounds_per_dispatch, effective_rounds_per_dispatch
+from repro.models import ModelConfig, build_model
+from repro.optim import OptimizerConfig
+
+CFG = ModelConfig(arch_type="dense", n_layers=2, d_model=32, n_heads=2,
+                  n_kv_heads=2, d_ff=64, vocab=64, remat=False,
+                  dtype="float32", qk_norm=True)
+ICFG = OptimizerConfig(lr=1e-2, weight_decay=0.0)
+H, K = 3, 2
+
+
+def _stream(seed=3):
+    return MarkovStream(DataConfig(vocab=CFG.vocab, seq_len=16,
+                                   batch_per_worker=2, n_workers=K, seed=seed))
+
+
+def _fresh():
+    model = build_model(CFG)
+    dcfg = DiLoCoConfig(n_workers=K, sync_interval=H, inner_name="muon")
+    engine = TrainEngine(model, dcfg, ICFG)
+    return engine, engine.init(jax.random.PRNGKey(0))
+
+
+def _run(rounds, rounds_per_dispatch, *, checkpoint_in_program=False,
+         on_state=None, on_state_every=0, seed=3):
+    engine, state = _fresh()
+    stream = _stream(seed)
+    telemetry = {}
+    state, history = run_rounds(
+        engine, state, lambda r: batches_for_round(stream, r, H), rounds,
+        rounds_per_dispatch=rounds_per_dispatch,
+        span_batches_for=lambda r0, n: batches_for_span(stream, r0, H, n),
+        on_state=on_state, on_state_every=on_state_every,
+        checkpoint_in_program=checkpoint_in_program, telemetry=telemetry)
+    return state, history, telemetry
+
+
+def _leaves(state):
+    return [np.asarray(x) for x in jax.tree.leaves(
+        {"p": state["outer_params"], "u": state["outer_opt"],
+         "round": state["round"]})]
+
+
+# ---------------------------------------------------------------------------
+# whole run == sequential supersteps, bit for bit, in ONE dispatch
+# ---------------------------------------------------------------------------
+
+
+def test_whole_run_single_dispatch_matches_sequential_bitwise():
+    rounds = 6
+    ref_state, ref_hist, ref_tel = _run(rounds, 2)
+    one_state, one_hist, one_tel = _run(rounds, "auto")
+    assert ref_tel["dispatches"] == 3
+    assert one_tel["dispatches"] == 1
+    assert one_tel["rounds_per_dispatch"] == rounds
+    for a, b in zip(_leaves(ref_state), _leaves(one_state)):
+        np.testing.assert_array_equal(a, b)
+    # per-round metric records are identical too
+    assert len(ref_hist) == len(one_hist) == rounds
+    for ra, rb in zip(ref_hist, one_hist):
+        assert ra == rb
+
+
+# ---------------------------------------------------------------------------
+# in-program (io_callback) checkpoints == host-side checkpoints, byte for byte
+# ---------------------------------------------------------------------------
+
+
+def test_in_program_checkpoint_bytes_identical_to_host_path(tmp_path):
+    rounds, every = 4, 2
+
+    def saves(sub, **kw):
+        d = tmp_path / sub
+        os.makedirs(d)
+        seen = []
+
+        def on_state(r, st):
+            path = str(d / f"ckpt_{r}.npz")
+            save_checkpoint(path, st, step=r + 1)
+            seen.append(path)
+
+        state, _, tel = _run(rounds, "auto", on_state=on_state,
+                             on_state_every=every, **kw)
+        return state, seen, tel
+
+    host_state, host_ckpts, host_tel = saves("host")
+    prog_state, prog_ckpts, prog_tel = saves("prog", checkpoint_in_program=True)
+    # host path: the cadence clamps auto down to R=2 (2 dispatches); the
+    # in-program path keeps the whole run in ONE dispatch
+    assert host_tel["dispatches"] == 2 and not host_tel["in_program_checkpoints"]
+    assert prog_tel["dispatches"] == 1 and prog_tel["in_program_checkpoints"]
+    assert [os.path.basename(p) for p in host_ckpts] == \
+           [os.path.basename(p) for p in prog_ckpts] == \
+           ["ckpt_1.npz", "ckpt_3.npz"]
+    for a, b in zip(host_ckpts, prog_ckpts):
+        za, zb = np.load(a), np.load(b)
+        assert sorted(za.files) == sorted(zb.files)
+        for k in za.files:
+            np.testing.assert_array_equal(za[k], zb[k], err_msg=k)
+    # and the two runs end in the identical final state
+    for a, b in zip(_leaves(host_state), _leaves(prog_state)):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_in_program_checkpoint_cadence_need_not_divide_run(tmp_path):
+    """5 rounds, checkpoint every 2: impossible for a single host-side
+    dispatch (R must divide the cadence), routine for the io_callback path."""
+    rounds, every = 5, 2
+    got = []
+
+    def on_state(r, st):
+        got.append((r, int(np.asarray(st["round"]))))
+
+    _, _, tel = _run(rounds, "auto", on_state=on_state, on_state_every=every,
+                     checkpoint_in_program=True)
+    assert tel["dispatches"] == 1 and tel["rounds_per_dispatch"] == rounds
+    assert got == [(1, 2), (3, 4)]  # rounds 2 and 4 completed
+
+
+def test_ckpt_flags_require_sink():
+    engine, state = _fresh()
+    stream = _stream()
+    batches = batches_for_span(stream, 0, H, 2)
+    with pytest.raises(ValueError, match="checkpoint_cb"):
+        from repro.engine.superstep import build_superstep_fn
+
+        fn = build_superstep_fn(lambda s, b: (s, {"loss": s["round"]}))
+        fn(state, batches, ckpt_flags=np.array([True, False]))
+
+
+# ---------------------------------------------------------------------------
+# the "auto" dispatch cost model
+# ---------------------------------------------------------------------------
+
+
+def test_auto_rounds_unmeasured_is_whole_run():
+    assert auto_rounds_per_dispatch(12) == 12
+    assert auto_rounds_per_dispatch(1) == 1
+    assert auto_rounds_per_dispatch(0) == 0 or auto_rounds_per_dispatch(0) == 1
+
+
+def test_auto_rounds_cost_model_picks_smallest_amortizing_divisor():
+    # overhead 1ms, round 50ms, 1% budget -> need R >= 2; smallest divisor
+    # of 12 that is >= 2 is 2
+    assert auto_rounds_per_dispatch(12, 0.001, 0.05) == 2
+    # overhead 10ms, round 20ms -> need R >= 50 -> whole span (no divisor)
+    assert auto_rounds_per_dispatch(12, 0.010, 0.020) == 12
+    # generous budget: overhead amortized at R=1 already
+    assert auto_rounds_per_dispatch(12, 0.0001, 0.05) == 1
+
+
+def test_effective_rounds_auto_respects_cadence_clamps():
+    # auto (unmeasured) = whole span, then gcd with the checkpoint cadence
+    assert effective_rounds_per_dispatch("auto", 12, checkpoint_every=4) == 4
+    assert effective_rounds_per_dispatch("auto", 12, checkpoint_every=0) == 12
+    # measured: the cost model's choice still gets clamped
+    assert effective_rounds_per_dispatch(
+        "auto", 12, checkpoint_every=3, host_overhead_s=0.01,
+        device_round_s=0.02) == 3
