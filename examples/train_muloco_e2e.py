@@ -2,7 +2,11 @@
 with cosine schedule, eval logging, checkpointing and resume — the full
 production path via repro.launch.train, which executes rounds through the
 unified TrainEngine in supersteps (here 5 rounds per donated, jitted
-dispatch, eval folded in + async metrics drain).
+dispatch, eval folded in + async metrics drain). Crash-safe by default:
+checkpoints are round-stamped, checksummed, and fsync'd, so killing this
+script at any point and re-running it with --resume auto continues from
+the newest valid checkpoint with a byte-identical metrics trail; the
+health sentinel rolls back and skips any round that goes non-finite.
 
     PYTHONPATH=src python examples/train_muloco_e2e.py
 """
@@ -21,9 +25,12 @@ args = build_parser().parse_args([
     "--lr", "2e-2",
     "--schedule", "cosine",
     "--checkpoint-every", "10",
+    "--keep-checkpoints", "2",     # ckpt_<round>.npz retention + LATEST
+    "--health-sentinel", "on",     # rollback-on-NaN/spike insurance
+    "--resume", "auto",            # idempotent: re-running continues the run
     "--out", "results/example_muloco",
     "--verbose",
 ])
 out = train(args)
 print(f"trained to smoothed eval loss {out['final_loss']:.4f}; "
-      f"checkpoint + metrics.csv in results/example_muloco/")
+      f"checkpoints + metrics.csv in results/example_muloco/")

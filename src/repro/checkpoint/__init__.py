@@ -1,1 +1,10 @@
-from repro.checkpoint.checkpoint import load_checkpoint, save_checkpoint  # noqa: F401
+from repro.checkpoint.checkpoint import (  # noqa: F401
+    CheckpointError,
+    checkpoint_path,
+    list_checkpoints,
+    load_checkpoint,
+    load_latest_valid,
+    read_manifest,
+    save_checkpoint,
+    save_round_checkpoint,
+)

@@ -4,12 +4,30 @@ Leaves are flattened to 'path' keys via the same path encoding used by the
 optimizer partition rules, gathered to host, and written atomically. Restore
 rebuilds the exact tree structure from a template (or from the stored paths)
 and re-places leaves under the caller's shardings via device_put.
+
+Crash safety (the durable half of the recovery subsystem):
+
+* every leaf carries a CRC32 in the meta record; :func:`load_checkpoint`
+  verifies them on restore, so silent on-disk corruption (bit rot, torn
+  writes that survived the rename) raises :class:`CheckpointError` instead
+  of feeding garbage into the optimizer;
+* writes are fsync-before-rename durable: the tmp file is fsynced before
+  ``os.replace`` and the containing directory is fsynced after, so a host
+  crash immediately after the rename cannot leave a zero-length
+  "checkpoint" behind on journaled filesystems;
+* :func:`save_round_checkpoint` writes round-stamped ``ckpt_<round>.npz``
+  files under a keep-newest-N retention policy with an atomically-rewritten
+  ``LATEST`` manifest, and :func:`load_latest_valid` walks newest -> oldest
+  past truncated / corrupt / checksum-failing files — the ``--resume auto``
+  loader never trusts a file it has not fully verified.
 """
 from __future__ import annotations
 
 import json
 import os
+import re
 import tempfile
+import zlib
 from typing import Any
 
 import jax
@@ -21,12 +39,53 @@ from repro.utils.tree import tree_leaves_with_paths
 PyTree = Any
 
 _META = "__tree_meta__"
+_CKPT_RE = re.compile(r"^ckpt_(\d+)\.npz$")
+LATEST_MANIFEST = "LATEST"
+
+
+class CheckpointError(RuntimeError):
+    """A checkpoint file failed verification (truncated, corrupt, or a leaf
+    checksum mismatch). :func:`load_latest_valid` treats it — like any I/O
+    or parse failure — as "this file is invalid, fall back to the previous
+    one"; direct :func:`load_checkpoint` callers see it raised."""
+
+
+def _fsync_dir(dirname: str) -> None:
+    """fsync the directory entry so a rename/create survives a host crash."""
+    try:
+        fd = os.open(dirname or ".", os.O_RDONLY)
+    except OSError:
+        return  # platform without directory fds: best effort
+    try:
+        os.fsync(fd)
+    except OSError:
+        pass
+    finally:
+        os.close(fd)
+
+
+def _write_atomic(path: str, write_fn) -> None:
+    """tmp-file -> ``write_fn(f)`` -> flush -> fsync -> rename -> dir fsync."""
+    dirname = os.path.dirname(path) or "."
+    os.makedirs(dirname, exist_ok=True)
+    fd, tmp = tempfile.mkstemp(dir=dirname, suffix=".tmp")
+    os.close(fd)
+    try:
+        with open(tmp, "wb") as f:
+            write_fn(f)
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, path)
+        _fsync_dir(dirname)
+    finally:
+        if os.path.exists(tmp):
+            os.unlink(tmp)
 
 
 def save_checkpoint(path: str, tree: PyTree, step: int = 0) -> None:
     flat = tree_leaves_with_paths(tree)
     arrays = {}
-    meta = {"step": step, "paths": [], "dtypes": []}
+    meta = {"step": step, "paths": [], "dtypes": [], "crc32": []}
     for i, (p, leaf) in enumerate(flat):
         key = f"leaf_{i}"
         arr = np.asarray(jax.device_get(leaf))
@@ -35,33 +94,60 @@ def save_checkpoint(path: str, tree: PyTree, step: int = 0) -> None:
             arr = arr.view(np.uint16 if arr.dtype.itemsize == 2 else np.uint8)
         arrays[key] = arr
         meta["paths"].append(p)
-    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
-    fd, tmp = tempfile.mkstemp(dir=os.path.dirname(path) or ".", suffix=".tmp")
-    os.close(fd)
-    try:
-        with open(tmp, "wb") as f:
-            np.savez(f, **arrays, **{_META: np.frombuffer(json.dumps(meta).encode(), dtype=np.uint8)})
-        os.replace(tmp, path)
-    finally:
-        if os.path.exists(tmp):
-            os.unlink(tmp)
+        # checksum the stored representation (post bit-view) so verification
+        # reads exactly what np.load hands back
+        meta["crc32"].append(zlib.crc32(np.ascontiguousarray(arr).tobytes()))
+
+    def write(f):
+        np.savez(f, **arrays,
+                 **{_META: np.frombuffer(json.dumps(meta).encode(), dtype=np.uint8)})
+
+    _write_atomic(path, write)
 
 
-def load_checkpoint(path: str, template: PyTree, shardings: PyTree | None = None) -> tuple[PyTree, int]:
-    """Restore into the structure of ``template`` (validates paths match)."""
+def load_checkpoint(path: str, template: PyTree, shardings: PyTree | None = None,
+                    verify: bool = True) -> tuple[PyTree, int]:
+    """Restore into the structure of ``template`` (validates paths match).
+
+    ``verify=True`` (the default) recomputes every leaf's CRC32 against the
+    checksums stored at save time and raises :class:`CheckpointError` on any
+    mismatch — a checkpoint is either verified whole or not loaded at all.
+    Pre-checksum checkpoints (no ``crc32`` meta) load without verification.
+    """
     import ml_dtypes  # numpy extension dtypes (bfloat16) shipped with jax
 
-    with np.load(path) as z:
-        meta = json.loads(bytes(z[_META]).decode())
-        arrays = []
-        for i, dt in enumerate(meta.get("dtypes", [])):
-            a = z[f"leaf_{i}"]
-            target = np.dtype(getattr(ml_dtypes, dt, dt) if dt == "bfloat16" else dt)
-            if a.dtype != target:
-                a = a.view(target)
-            arrays.append(a)
-        if not meta.get("dtypes"):
-            arrays = [z[f"leaf_{i}"] for i in range(len(meta["paths"]))]
+    if os.path.getsize(path) == 0:
+        # a crashed writer on a non-journaled fs can leave a zero-length
+        # file where the rename landed; classify, don't explode in np.load
+        raise CheckpointError(f"{path}: zero-length checkpoint file")
+    try:
+        with np.load(path) as z:
+            meta = json.loads(bytes(z[_META]).decode())
+            crcs = meta.get("crc32")
+            arrays = []
+            for i, dt in enumerate(meta.get("dtypes", [])):
+                a = z[f"leaf_{i}"]
+                if verify and crcs is not None:
+                    got = zlib.crc32(np.ascontiguousarray(a).tobytes())
+                    if got != crcs[i]:
+                        raise CheckpointError(
+                            f"{path}: leaf_{i} ({meta['paths'][i]}) checksum "
+                            f"mismatch: stored {crcs[i]:#010x}, "
+                            f"file has {got:#010x}")
+                target = np.dtype(
+                    getattr(ml_dtypes, dt, dt) if dt == "bfloat16" else dt)
+                if a.dtype != target:
+                    a = a.view(target)
+                arrays.append(a)
+            if not meta.get("dtypes"):
+                arrays = [z[f"leaf_{i}"] for i in range(len(meta["paths"]))]
+    except CheckpointError:
+        raise
+    except Exception as e:
+        # truncated zips, flipped bits in zip structure or member payloads
+        # (the zipfile layer CRC-checks too), unreadable meta: one unified
+        # "this checkpoint is invalid" signal for callers to classify on
+        raise CheckpointError(f"{path}: unreadable checkpoint ({e})") from e
     flat_t = tree_leaves_with_paths(template)
     t_paths = [p for p, _ in flat_t]
     if t_paths != meta["paths"]:
@@ -86,3 +172,101 @@ def load_checkpoint(path: str, template: PyTree, shardings: PyTree | None = None
     else:
         leaves = [jnp.asarray(a) for a in arrays]
     return jax.tree.unflatten(treedef, leaves), int(meta["step"])
+
+
+# ---------------------------------------------------------------------------
+# Round-stamped retention + the LATEST manifest + the auto-resume loader
+# ---------------------------------------------------------------------------
+
+
+def checkpoint_path(ckpt_dir: str, round: int) -> str:
+    return os.path.join(ckpt_dir, f"ckpt_{round}.npz")
+
+
+def list_checkpoints(ckpt_dir: str) -> list[tuple[int, str]]:
+    """(round, path) for every round-stamped file, newest first."""
+    if not os.path.isdir(ckpt_dir):
+        return []
+    found = []
+    for name in os.listdir(ckpt_dir):
+        m = _CKPT_RE.match(name)
+        if m:
+            found.append((int(m.group(1)), os.path.join(ckpt_dir, name)))
+    return sorted(found, reverse=True)
+
+
+def read_manifest(ckpt_dir: str) -> dict | None:
+    """The LATEST manifest dict, or None when absent/unparseable (the walker
+    never *trusts* the manifest — it is evidence for humans and tooling; the
+    directory listing is the source of truth for auto-resume)."""
+    path = os.path.join(ckpt_dir, LATEST_MANIFEST)
+    try:
+        with open(path, "rb") as f:
+            return json.loads(f.read().decode())
+    except (OSError, ValueError):
+        return None
+
+
+def _write_manifest(ckpt_dir: str, retained: list[tuple[int, str]]) -> None:
+    manifest = {
+        "latest": os.path.basename(retained[0][1]) if retained else None,
+        "round": retained[0][0] if retained else None,
+        "retained": [os.path.basename(p) for _, p in retained],
+    }
+    _write_atomic(os.path.join(ckpt_dir, LATEST_MANIFEST),
+                  lambda f: f.write(json.dumps(manifest).encode()))
+
+
+def save_round_checkpoint(ckpt_dir: str, tree: PyTree, round: int,
+                          keep: int = 3) -> str:
+    """Durably write ``ckpt_<round>.npz``, prune to the newest ``keep`` files,
+    and atomically rewrite the ``LATEST`` manifest. Returns the path written.
+
+    ``round`` is the number of completed rounds (the value of the state's
+    on-device round counter), so a resume from this file starts at exactly
+    that round. The prune never removes the file just written (``keep`` is
+    clamped to >= 1), and the manifest is rewritten only after the prune so
+    it always describes the files actually on disk.
+    """
+    path = checkpoint_path(ckpt_dir, round)
+    save_checkpoint(path, tree, step=round)
+    retained = list_checkpoints(ckpt_dir)
+    keep = max(1, int(keep))
+    for _, old in retained[keep:]:
+        if os.path.abspath(old) != os.path.abspath(path):
+            os.unlink(old)
+    retained = retained[:keep]
+    _write_manifest(ckpt_dir, retained)
+    return path
+
+
+def load_latest_valid(ckpt_dir: str, template: PyTree,
+                      shardings: PyTree | None = None
+                      ) -> tuple[PyTree, int, str] | None:
+    """Walk the round-stamped checkpoints newest -> oldest and load the first
+    one that fully verifies; returns ``(tree, round, path)`` or None when no
+    valid checkpoint exists.
+
+    Truncated files, zero-length files, corrupt zip/JSON structure, and leaf
+    checksum mismatches are all classified as "invalid, fall back" — the
+    resume path of a crashed run must make progress past whatever the crash
+    left behind, not die on it. Tree mismatches (a checkpoint from a
+    different config) are *also* skipped: an operator who changed the config
+    mid-experiment should fall back to an older compatible file or a fresh
+    start, not a stack trace.
+    """
+    skipped: list[str] = []
+    for round, path in list_checkpoints(ckpt_dir):
+        try:
+            tree, step = load_checkpoint(path, template, shardings=shardings)
+        except Exception as e:  # truncated/corrupt/mismatched: fall back
+            skipped.append(f"{os.path.basename(path)} ({type(e).__name__}: {e})")
+            continue
+        if skipped:
+            print(f"checkpoint: skipped {len(skipped)} invalid file(s): "
+                  + "; ".join(skipped))
+        return tree, step, path
+    if skipped:
+        print(f"checkpoint: no valid checkpoint in {ckpt_dir}; skipped: "
+              + "; ".join(skipped))
+    return None

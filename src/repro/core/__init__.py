@@ -16,3 +16,4 @@ from repro.core.diloco import (  # noqa: F401
     outer_step,
     OuterOptimizer,
 )
+from repro.core.health import HealthConfig, health_init, health_update  # noqa: F401

@@ -42,6 +42,7 @@ from repro.core.collectives import (
     segment_sync_update,
 )
 from repro.core.compression import CompressionConfig, compress, error_feedback
+from repro.core.health import HealthConfig, health_init, health_update
 from repro.core.streaming import masked_update, streaming_masks
 from repro.models.api import Model
 from repro.optim import (
@@ -86,6 +87,12 @@ class DiLoCoConfig:
     # steps start from params that have not yet seen Psi_r, masking sync
     # latency (SNOO-style staleness). 0 = lockstep (bit-exact legacy path).
     sync_delay: int = 0
+    # In-program health sentinel (core/health.py): when enabled the round
+    # emits a per-round anomaly-flag metric (non-finite loss/psi, loss spike
+    # vs a running EMA carried in the TrainState) that the driver's
+    # RecoveryPolicy reacts to. Disabled (default) adds no state leaf and no
+    # traced ops — the lowered program is unchanged.
+    health: HealthConfig = dataclasses.field(default_factory=HealthConfig)
 
     @property
     def is_muloco(self) -> bool:
@@ -272,6 +279,7 @@ def diloco_init(model: Model, dcfg: DiLoCoConfig, inner_cfg: OptimizerConfig, rn
         ef=outer.init_ef(params, K),
         participation=(jnp.ones((K,), jnp.float32) if dcfg.elastic else None),
         pending=pending,
+        health=health_init(dcfg.health),
     )
 
 
@@ -556,6 +564,20 @@ def diloco_round(model: Model, dcfg: DiLoCoConfig, opt, state: PyTree, batches: 
                                     participation=part)
             return state, losses, psi
 
+        def finish(state, losses, psi):
+            # health sentinel rides AFTER the participation cond so the flag
+            # sees the round's final losses/psi whichever branch produced
+            # them; with no health leaf this is the identity (zero ops)
+            health = state.get("health")
+            info = {"loss": losses, "psi": psi,
+                    "comm_bytes": comm_metric(comm),
+                    "active_workers": active, "staleness": staleness}
+            if health is not None:
+                new_health, flag = health_update(dcfg.health, health, losses, psi)
+                state = _updated(state, health=new_health)
+                info["health"] = flag
+            return state, info
+
         if participation is None:
             state, losses, psi = run_round(state, None)
         else:
@@ -570,9 +592,7 @@ def diloco_round(model: Model, dcfg: DiLoCoConfig, opt, state: PyTree, batches: 
                 lambda st: run_round(st, None),
                 lambda st: run_round(st, participation),
                 state)
-        return state, {"loss": losses, "psi": psi,
-                       "comm_bytes": comm_metric(comm),
-                       "active_workers": active, "staleness": staleness}
+        return finish(state, losses, psi)
 
     if H % J:
         raise ValueError(
@@ -609,9 +629,14 @@ def diloco_round(model: Model, dcfg: DiLoCoConfig, opt, state: PyTree, batches: 
             lambda st: run_segments(st, None),
             lambda st: run_segments(st, participation),
             state)
-    return state, {"loss": losses, "psi": psi,
-                   "comm_bytes": comm_metric(comm),
-                   "active_workers": active, "staleness": staleness}
+    info = {"loss": losses, "psi": psi, "comm_bytes": comm_metric(comm),
+            "active_workers": active, "staleness": staleness}
+    health = state.get("health")
+    if health is not None:  # same post-cond sentinel as the J==1 path
+        new_health, flag = health_update(dcfg.health, health, losses, psi)
+        state = _updated(state, health=new_health)
+        info["health"] = flag
+    return state, info
 
 
 def make_streaming_masks(state: PyTree, dcfg: DiLoCoConfig) -> list[PyTree] | None:

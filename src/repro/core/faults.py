@@ -1,4 +1,4 @@
-"""Fault injection: per-round worker participation for elastic DiLoCo.
+"""Fault injection: worker churn (elastic DiLoCo) and whole-run crash chaos.
 
 Production runs at the paper's K=16 scale lose workers — preemptions,
 hardware faults, stragglers cut off at the round barrier. Elastic DiLoCo
@@ -16,10 +16,19 @@ stacks the superstep scans over. Masks are a pure function of
 ``(seed, absolute round)``, so any rounds-per-dispatch chunking of the same
 run sees identical masks (the same property that makes R a pure scheduling
 knob for batches).
+
+Beyond worker churn, :class:`CrashPlan` injects *driver-level* faults so the
+crash-safety subsystem (checksummed checkpoints, the health sentinel, the
+recovery policy, preemption handling) is provable end-to-end: poison a
+chosen round's state with a NaN, corrupt a chosen round's labels into a loss
+spike, SIGKILL the process at a chosen round, and (for tests) truncate or
+bit-flip a checkpoint file on disk.
 """
 from __future__ import annotations
 
 import dataclasses
+import os
+import signal
 
 import numpy as np
 
@@ -88,3 +97,100 @@ class FaultPlan:
     @property
     def is_trivial(self) -> bool:
         return self.drop_prob <= 0 and not self.schedule
+
+
+# ---------------------------------------------------------------------------
+# Driver-level crash chaos: NaN / spike / SIGKILL injection
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class CrashPlan:
+    """Scripted crash/corruption events for proving the recovery paths.
+
+    * ``nan_round`` — poison one worker-parameter element with NaN at the
+      dispatch that STARTS at this round (``apply`` is the driver's
+      ``inject`` hook; the caller pins ``rounds_per_dispatch=1`` while a NaN
+      injection is armed so the poison lands exactly at the target round).
+      The NaN then flows through the real forward/backward/psi path — this
+      is a state-poisoning fault, because the token batches are integers and
+      cannot carry a NaN themselves.
+    * ``spike_round`` — overwrite one worker-parameter element with a large
+      *finite* value (``spike_value``) at that round's dispatch: a silent
+      data corruption (the exponent bit-flip kind) that sends the loss
+      through the roof without ever going non-finite, so it exercises the
+      EMA spike detector rather than the isfinite flags.
+    * ``kill_round`` — ``SIGKILL`` our own process the moment this round's
+      metrics drain (:meth:`maybe_kill` from the caller's ``on_round``): no
+      handlers, no cleanup, the honest crash the bitwise-resume invariant is
+      tested against.
+    """
+
+    nan_round: int | None = None
+    spike_round: int | None = None
+    kill_round: int | None = None
+    spike_value: float = 100.0  # the corrupted element's finite value
+
+    @property
+    def is_trivial(self) -> bool:
+        return (self.nan_round is None and self.spike_round is None
+                and self.kill_round is None)
+
+    @property
+    def needs_single_round_dispatch(self) -> bool:
+        """State poisoning edits the carry at a dispatch boundary; R must be
+        1 so the boundary IS the target round."""
+        return self.nan_round is not None or self.spike_round is not None
+
+    def _poison(self, state, value):
+        """Set one element of worker 0's first parameter leaf."""
+        import jax
+
+        leaves = jax.tree.leaves(state["worker_params"])
+        poisoned = leaves[0].at[(0,) * leaves[0].ndim].set(value)
+        wp = jax.tree.unflatten(
+            jax.tree.structure(state["worker_params"]),
+            [poisoned] + leaves[1:])
+        return (state.replace(worker_params=wp) if hasattr(state, "replace")
+                else {**state, "worker_params": wp})
+
+    def apply(self, r0: int, n: int, batches, state):
+        """The driver ``inject`` hook: corrupt the state (and/or the
+        span-stacked batches, leaves [n, H, K, B, ...]) for rounds
+        r0..r0+n-1. Returns ``(batches, state)`` unchanged when no event
+        lands here."""
+        import jax.numpy as jnp
+
+        if self.nan_round is not None and r0 == self.nan_round:
+            state = self._poison(state, jnp.nan)
+        if self.spike_round is not None and r0 == self.spike_round:
+            state = self._poison(state, self.spike_value)
+        return batches, state
+
+    def maybe_kill(self, round: int) -> None:
+        """SIGKILL self when ``round``'s metrics have drained (call from
+        ``on_round`` AFTER persisting the round's row, so the dead process
+        leaves exactly the on-disk trail a real crash would)."""
+        if self.kill_round is not None and round == self.kill_round:
+            os.kill(os.getpid(), signal.SIGKILL)
+
+
+# -- on-disk corruption helpers (tests exercise the loader's fallback) ------
+
+
+def truncate_file(path: str, keep_bytes: int = 0) -> None:
+    """Truncate a file in place — a torn write / partial flush."""
+    with open(path, "r+b") as f:
+        f.truncate(keep_bytes)
+
+
+def corrupt_file(path: str, offset: int = -64, flip: int = 0xFF) -> None:
+    """Flip the bits of one byte in place — silent on-disk corruption that
+    only a checksum can catch (the zip structure usually stays readable)."""
+    size = os.path.getsize(path)
+    pos = offset % size
+    with open(path, "r+b") as f:
+        f.seek(pos)
+        b = f.read(1)
+        f.seek(pos)
+        f.write(bytes([b[0] ^ flip]))

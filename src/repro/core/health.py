@@ -1,0 +1,89 @@
+"""In-program health sentinel: per-round anomaly flags at scan-carry cost.
+
+The superstep scan already stacks per-round metric buffers (`[R]` losses,
+comm bytes, ...). The sentinel rides the same mechanism: when enabled, the
+round function folds a tiny ``{"ema", "n"}`` running-statistics dict through
+the TrainState carry and emits one extra ``[R]`` float32 buffer of per-round
+**flag bitmasks**:
+
+  * bit 1 — a non-finite value appeared in the round's inner losses;
+  * bit 2 — the pseudogradient's sum-of-squares is non-finite (a NaN/Inf
+    reached the outer optimizer's input);
+  * bit 4 — the round's mean loss spiked above ``spike_factor`` x the
+    running EMA (only after ``warmup_rounds`` finite rounds, so cold-start
+    descent never trips it).
+
+The driver drains the buffer with the other metrics and hands nonzero flags
+to the :class:`repro.engine.recovery.RecoveryPolicy` (rollback to the last
+valid checkpoint + skip the offending span), or just records them when no
+policy is armed.
+
+Cost and parity: disabled (the default) the TrainState has no health leaf
+and the round function traces zero extra ops — the lowered program is
+*unchanged*, preserving the bitwise pins of PRs 1-9. Enabled, the additions
+are two scalar carries and three reductions per round; they read the losses
+and psi but never feed back into the parameter computation, so the training
+arithmetic itself is untouched either way.
+
+Because the EMA lives in the TrainState, it is checkpointed with everything
+else — a killed-and-resumed run replays identical spike decisions, keeping
+the bitwise-resume invariant intact with the sentinel armed.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+# flag bits in the per-round health buffer
+FLAG_NONFINITE_LOSS = 1
+FLAG_NONFINITE_PSI = 2
+FLAG_LOSS_SPIKE = 4
+
+
+@dataclasses.dataclass(frozen=True)
+class HealthConfig:
+    enabled: bool = False
+    spike_factor: float = 3.0  # flag when mean loss > factor * running EMA
+    ema_alpha: float = 0.2  # EMA weight of the newest round's mean loss
+    warmup_rounds: int = 3  # finite rounds before spike detection arms
+
+
+def health_init(hcfg: HealthConfig) -> PyTree | None:
+    """The carry dict ({"ema","n"} scalars), or None when disabled."""
+    if not hcfg.enabled:
+        return None
+    return {"ema": jnp.zeros((), jnp.float32), "n": jnp.zeros((), jnp.int32)}
+
+
+def health_update(hcfg: HealthConfig, health: PyTree, losses: jax.Array,
+                  psi: PyTree) -> tuple[PyTree, jax.Array]:
+    """Fold one round's losses ([H]) and pseudogradient into the running
+    stats; returns ``(new_health, flag)`` with ``flag`` the f32 bitmask.
+
+    The EMA only ingests finite mean losses (a NaN round must not poison the
+    detector that is supposed to catch the next one), and ``n`` counts those
+    finite rounds so warmup is measured in usable observations.
+    """
+    m = jnp.mean(losses.astype(jnp.float32))
+    finite_m = jnp.isfinite(m)
+    psi_ss = sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                 for l in jax.tree.leaves(psi))
+    bad_loss = ~jnp.isfinite(jnp.sum(losses.astype(jnp.float32)))
+    bad_psi = ~jnp.isfinite(psi_ss)
+    warm = health["n"] >= hcfg.warmup_rounds
+    spike = warm & finite_m & (m > hcfg.spike_factor * health["ema"])
+    flag = (FLAG_NONFINITE_LOSS * bad_loss.astype(jnp.float32)
+            + FLAG_NONFINITE_PSI * bad_psi.astype(jnp.float32)
+            + FLAG_LOSS_SPIKE * spike.astype(jnp.float32))
+    a = jnp.float32(hcfg.ema_alpha)
+    ema_next = jnp.where(health["n"] == 0, m, (1 - a) * health["ema"] + a * m)
+    new = {
+        "ema": jnp.where(finite_m, ema_next, health["ema"]),
+        "n": health["n"] + finite_m.astype(jnp.int32),
+    }
+    return new, flag

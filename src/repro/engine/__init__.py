@@ -19,3 +19,4 @@ from repro.engine.superstep import (  # noqa: F401
     effective_rounds_per_dispatch,
 )
 from repro.engine.driver import run_rounds  # noqa: F401
+from repro.engine.recovery import RecoveryPolicy, TrainingAborted  # noqa: F401

@@ -1,0 +1,57 @@
+"""Driver-side recovery: what to do when the health sentinel trips.
+
+The in-program sentinel (:mod:`repro.core.health`) gets anomalies OUT of the
+donated device program as a per-round ``[R]`` flag buffer; this module owns
+what happens next, on the host, when :func:`repro.engine.driver.run_rounds`
+drains a nonzero flag:
+
+1. **rollback** — restore the last valid checkpoint (the policy's
+   ``restore`` callable, typically
+   :func:`repro.checkpoint.load_latest_valid` over the run's retention
+   directory);
+2. **skip** — advance the restored state's on-device round counter past the
+   flagged round. Batches are a pure function of (seed, round), so bumping
+   the counter is precisely "never feed that data span again": the retry
+   cannot re-poison itself with the same batch;
+3. **escalate** — rollbacks are budgeted (``max_rollbacks``); when the
+   budget runs dry and a ``scale_lr`` rebuilder is provided, the inner LR is
+   backed off (``lr_backoff``) and the budget refills, up to
+   ``max_lr_halvings`` times; after that the run aborts with
+   :class:`TrainingAborted` rather than looping forever on a divergent
+   config.
+
+The policy is deliberately host-side and engine-agnostic: the device program
+never branches on health (bit-parity), and the driver's reaction is ordinary
+Python — restore, bump a counter, keep dispatching.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+PyTree = Any
+
+
+class TrainingAborted(RuntimeError):
+    """Recovery escalation exhausted (or no valid checkpoint to roll back
+    to): the run cannot make trustworthy progress and stops loudly."""
+
+
+@dataclasses.dataclass
+class RecoveryPolicy:
+    """How ``run_rounds`` reacts to a drained health fault.
+
+    ``restore()`` returns ``(state, checkpoint_round)`` — the freshest state
+    the driver may trust — or ``None`` when nothing valid exists (which
+    aborts: retrying from a poisoned state would be worse than stopping).
+    ``scale_lr(scale)`` (optional) rebuilds the execution engine with the
+    inner LR multiplied by ``scale`` and returns it (or ``None`` to keep the
+    current engine); it is the escalation step between "skip the bad span"
+    and "give up".
+    """
+
+    restore: Callable[[], tuple[PyTree, int] | None]
+    max_rollbacks: int = 3
+    scale_lr: Callable[[float], Any] | None = None
+    lr_backoff: float = 0.5
+    max_lr_halvings: int = 1

@@ -26,7 +26,12 @@ A registered-dataclass pytree replacing the raw ``dict`` state that
     are ``[d, ...]``-stacked pseudogradients awaiting application. Round r
     computes Ψ_r (communication, EF, byte accounting all happen at r) but
     the outer descent applies ``pending[0]`` = Ψ_{r-d}; the FIFO shifts
-    inside the superstep scan carry, so R>1 dispatch and donation survive.
+    inside the superstep scan carry, so R>1 dispatch and donation survive;
+  * ``health`` — optional health-sentinel running stats (``{"ema", "n"}``
+    scalars, :mod:`repro.core.health`): the loss EMA the in-program spike
+    detector compares against. Carried in the state so checkpoints capture
+    it and a killed-and-resumed run replays identical spike decisions.
+    ``None`` (no leaf, zero traced ops) when the sentinel is off.
 
 Being a real pytree node, TrainState flows through ``jax.jit`` (with buffer
 donation), ``jax.eval_shape``, checkpointing, and sharding-tree construction
@@ -46,7 +51,7 @@ import jax
 PyTree = Any
 
 _FIELDS = ("outer_params", "outer_opt", "worker_params", "inner_state", "round",
-           "ef", "participation", "pending")
+           "ef", "participation", "pending", "health")
 
 
 @dataclasses.dataclass
@@ -59,6 +64,7 @@ class TrainState:
     ef: PyTree | None = None
     participation: jax.Array | None = None
     pending: PyTree | None = None
+    health: PyTree | None = None
 
     # -- mapping-style compatibility with the pre-engine dict state ---------
 

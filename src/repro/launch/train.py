@@ -24,19 +24,27 @@ from __future__ import annotations
 
 import argparse
 import csv
+import dataclasses
 import os
+import signal
 import time
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-from repro.checkpoint import load_checkpoint, save_checkpoint
+from repro.checkpoint import (
+    load_checkpoint,
+    load_latest_valid,
+    save_round_checkpoint,
+)
 from repro.configs import get_config, reduce_config
 from repro.core.compression import CompressionConfig
 from repro.core.diloco import DiLoCoConfig
-from repro.core.faults import FaultPlan, parse_drop_schedule
+from repro.core.faults import CrashPlan, FaultPlan, parse_drop_schedule
+from repro.core.health import HealthConfig
 from repro.data import DataConfig, MarkovStream, batches_for_round, batches_for_span
-from repro.engine import TrainEngine, run_rounds
+from repro.engine import RecoveryPolicy, TrainEngine, run_rounds
 from repro.models import build_model
 from repro.optim import INNER_OPTIMIZERS, OUTER_OPTIMIZERS, OptimizerConfig
 
@@ -84,6 +92,11 @@ def make_diloco_cfg(args) -> DiLoCoConfig:
         outer_kernel=args.outer_kernel,
         elastic=elastic,
         sync_delay=args.sync_delay,
+        health=HealthConfig(
+            enabled=args.health_sentinel == "on",
+            spike_factor=args.health_spike_factor,
+            warmup_rounds=args.health_warmup,
+        ),
     )
 
 
@@ -164,13 +177,37 @@ def train(args) -> dict:
     engine = TrainEngine(model, dcfg, icfg, **ekw)
     rng = jax.random.PRNGKey(args.seed)
     state = engine.init(rng)
+    # the state sharding pytree: on a mesh the resume path MUST re-place the
+    # loaded leaves under the StepPlan layout (the default device_put would
+    # silently land everything on one device and the first dispatch would
+    # reshard — or OOM — at runtime)
+    shardings = (engine.state_shardings(
+        tensor_parallel=tp_friendly(cfg, mesh)) if mesh is not None else None)
     if mesh is not None:
-        state = engine.place_state(state, tensor_parallel=tp_friendly(cfg, mesh))
+        state = jax.device_put(state, shardings)
 
     start_round = 0
-    if args.resume and os.path.exists(args.resume):
-        state, start_round = load_checkpoint(args.resume, state)
-        print(f"resumed from {args.resume} at round {start_round}")
+    resumed_from = None
+    if args.resume == "auto":
+        got = load_latest_valid(args.out, engine.abstract_state(),
+                                shardings=shardings)
+        if got is not None:
+            state, start_round, resumed_from = got
+    elif args.resume and os.path.exists(args.resume):
+        state, start_round = load_checkpoint(args.resume, engine.abstract_state(),
+                                             shardings=shardings)
+        resumed_from = args.resume
+    if resumed_from is not None:
+        if mesh is not None:
+            # assert the resumed leaves actually sit under the plan layout
+            for leaf, want in zip(jax.tree.leaves(state),
+                                  jax.tree.leaves(shardings)):
+                assert leaf.sharding.is_equivalent_to(want, leaf.ndim), (
+                    f"resumed leaf placed under {leaf.sharding}, "
+                    f"expected {want}")
+        print(f"resumed from {resumed_from} at round {start_round}")
+        print(f"resume telemetry: resumed_from={os.path.basename(resumed_from)} "
+              f"start_round={start_round}")
 
     data = MarkovStream(DataConfig(
         vocab=cfg.vocab, seq_len=cfg.max_seq_len,
@@ -189,14 +226,39 @@ def train(args) -> dict:
 
     os.makedirs(args.out, exist_ok=True)
     csv_path = os.path.join(args.out, "metrics.csv")
+    header = ["round", "step", "train_loss", "eval_loss", "comm_bytes",
+              "active_workers", "staleness", "health", "rollbacks", "wall_s"]
     losses, steps = [], []
+    # Resume: reload the killed run's rows up to start_round so (a) the
+    # smoothed-EMA eval estimate continues from the SAME history the
+    # uninterrupted run would have (losses are logged at %.9g — exact f32
+    # round-trip via np.float32, so the smoothing replays bit-identically)
+    # and (b) the rewritten CSV drops any rows past the checkpoint we
+    # restored (rounds the dead process logged but whose state was lost) —
+    # the keystone invariant is a resumed metrics.csv tail byte-identical to
+    # the uninterrupted run's.
+    prior_rows: list[list[str]] = []
+    if start_round > 0 and os.path.exists(csv_path):
+        with open(csv_path, newline="") as f:
+            rdr = csv.reader(f)
+            for row in rdr:
+                if row and row[0].isdigit() and int(row[0]) < start_round:
+                    prior_rows.append(row)
+        for row in prior_rows:
+            losses.append(float(np.float32(row[3])))
+            steps.append(int(row[1]))
     t_start = time.time()
-    with open(csv_path, "a", newline="") as f:
+    with open(csv_path, "w", newline="") as f:
         writer = csv.writer(f)
-        if start_round == 0:
-            writer.writerow(["round", "step", "train_loss", "eval_loss",
-                             "comm_bytes", "active_workers", "staleness",
-                             "wall_s"])
+        writer.writerow(header)
+        writer.writerows(prior_rows)
+        f.flush()
+
+        fault_plan = make_fault_plan(args, dcfg.n_workers)
+        crash = CrashPlan(nan_round=args.inject_nan_round,
+                          spike_round=args.inject_spike_round,
+                          kill_round=args.inject_kill_round)
+        telemetry: dict = {}
 
         def on_round(rec):
             losses.append(rec["eval_loss"])
@@ -204,45 +266,113 @@ def train(args) -> dict:
             # comm_bytes is the round's *measured* per-worker wire traffic,
             # drained from the engine's [R] device buffer (actual wire-buffer
             # sizes, not the modeled compression ratio); active_workers /
-            # staleness are the elastic evidence (== K / 0 on lockstep runs)
+            # staleness are the elastic evidence (== K / 0 on lockstep runs),
+            # health the sentinel's flag bitmask (0 when the sentinel is off)
+            # and rollbacks the recovery count so far
             aw = rec.get("active_workers", float(dcfg.n_workers))
             st = rec.get("staleness", float(dcfg.sync_delay))
-            writer.writerow([rec["round"], rec["step"], f"{rec['train_loss']:.5f}",
-                             f"{rec['eval_loss']:.5f}", f"{rec['comm_bytes']:.0f}",
+            writer.writerow([rec["round"], rec["step"], f"{rec['train_loss']:.9g}",
+                             f"{rec['eval_loss']:.9g}", f"{rec['comm_bytes']:.0f}",
                              f"{aw:.0f}", f"{st:.0f}",
+                             f"{rec.get('health', 0.0):.0f}",
+                             telemetry.get("rollbacks", 0),
                              f"{time.time()-t_start:.1f}"])
             f.flush()
             if args.verbose:
                 print(f"round {rec['round']:4d} step {rec['step']:6d} "
                       f"train {rec['train_loss']:.4f} eval {rec['eval_loss']:.4f} "
                       f"comm {rec['comm_bytes']:.2e}B active {aw:.0f}")
+            # the SIGKILL injection fires only after the row is durably out:
+            # the dead process leaves exactly a real crash's on-disk trail
+            crash.maybe_kill(rec["round"])
 
         def on_state(r, st):
-            save_checkpoint(os.path.join(args.out, "ckpt.npz"), st, step=r + 1)
+            save_round_checkpoint(args.out, st, r + 1,
+                                  keep=args.keep_checkpoints)
 
-        fault_plan = make_fault_plan(args, dcfg.n_workers)
-        telemetry: dict = {}
-        state, _history = run_rounds(
-            engine, state, lambda r: batches_for_round(data, r, dcfg.sync_interval),
-            args.rounds, start=start_round,
-            rounds_per_dispatch=args.rounds_per_dispatch,
-            participation_for=fault_plan.masks if fault_plan is not None else None,
-            span_batches_for=lambda r0, n: batches_for_span(
-                data, r0, dcfg.sync_interval, n),
-            eval_batches_for=eval_batches_for,
-            on_round=on_round,
-            on_state=on_state if args.checkpoint_every else None,
-            on_state_every=args.checkpoint_every,
-            checkpoint_in_program=args.checkpoint_in_program,
-            telemetry=telemetry,
-        )
+        recovery = None
+        if dcfg.health.enabled and args.checkpoint_every:
+            template = engine.abstract_state()
+
+            def restore():
+                got = load_latest_valid(args.out, template, shardings=shardings)
+                return None if got is None else (got[0], got[1])
+
+            def scale_lr(scale):
+                # escalation: rebuild the engine with the inner LR backed off
+                # (same model/mesh/config — only icfg.lr changes)
+                return TrainEngine(
+                    model, dcfg, dataclasses.replace(icfg, lr=args.lr * scale),
+                    **ekw)
+
+            recovery = RecoveryPolicy(restore=restore,
+                                      max_rollbacks=args.health_max_rollbacks,
+                                      scale_lr=scale_lr)
+            if start_round == 0 and not os.path.exists(
+                    os.path.join(args.out, "ckpt_0.npz")):
+                # a round-0 fault needs something to roll back to
+                on_state(-1, state)
+
+        # a poisoning injection edits state at a dispatch boundary; pin R=1
+        # so the boundary IS the target round
+        rpd = (1 if crash.needs_single_round_dispatch
+               else args.rounds_per_dispatch)
+
+        # Preemption: SIGTERM/SIGINT flip a flag the driver probes before
+        # each dispatch; in-flight work finishes, metrics drain, and the
+        # final checkpoint below makes the run resumable with --resume auto.
+        stop = {"flag": False}
+
+        def _graceful(signum, frame):
+            stop["flag"] = True
+            print(f"signal {signum}: draining in-flight dispatches, then "
+                  f"writing a resumable checkpoint")
+
+        old_handlers = {}
+        for sig in (signal.SIGTERM, signal.SIGINT):
+            try:
+                old_handlers[sig] = signal.signal(sig, _graceful)
+            except ValueError:  # not the main thread (in-process tests)
+                pass
+        try:
+            state, _history = run_rounds(
+                engine, state,
+                lambda r: batches_for_round(data, r, dcfg.sync_interval),
+                args.rounds, start=start_round,
+                rounds_per_dispatch=rpd,
+                participation_for=fault_plan.masks if fault_plan is not None else None,
+                span_batches_for=lambda r0, n: batches_for_span(
+                    data, r0, dcfg.sync_interval, n),
+                eval_batches_for=eval_batches_for,
+                on_round=on_round,
+                on_state=on_state if args.checkpoint_every else None,
+                on_state_every=args.checkpoint_every,
+                checkpoint_in_program=args.checkpoint_in_program,
+                telemetry=telemetry,
+                recovery=recovery,
+                should_stop=lambda: stop["flag"],
+                inject=None if crash.is_trivial else crash.apply,
+            )
+        finally:
+            for sig, handler in old_handlers.items():
+                signal.signal(sig, handler)
+
+    if telemetry.get("preempted"):
+        done = int(jax.device_get(state["round"]))
+        path = save_round_checkpoint(args.out, state, done,
+                                     keep=args.keep_checkpoints)
+        print(f"preempted after round {done - 1}: wrote "
+              f"{os.path.basename(path)}; resume with --resume auto")
 
     # the dispatch evidence line the CI single-dispatch smoke greps: with
     # --rounds-per-dispatch auto and no cadence pinning the whole run is ONE
     # donated device program, so dispatches must read 1
     print(f"dispatch telemetry: dispatches={telemetry.get('dispatches')} "
           f"rounds_per_dispatch={telemetry.get('rounds_per_dispatch')} "
-          f"in_program_checkpoints={telemetry.get('in_program_checkpoints')}")
+          f"in_program_checkpoints={telemetry.get('in_program_checkpoints')} "
+          f"rollbacks={telemetry.get('rollbacks')} "
+          f"skipped_rounds={telemetry.get('skipped_rounds')} "
+          f"preempted={telemetry.get('preempted')}")
     final = smoothed_eval_loss(losses, steps, dcfg.sync_interval)
     print(f"final smoothed eval loss: {final:.4f} "
           f"(floor={data.entropy_floor_nats():.4f} nats)")
@@ -340,8 +470,48 @@ def build_parser() -> argparse.ArgumentParser:
                          "committed src/repro/kernels/autotune_table.json)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--out", default="results/train")
-    ap.add_argument("--resume", default=None)
+    ap.add_argument("--resume", default=None,
+                    help="checkpoint to resume from: a file path, or 'auto' "
+                         "to walk --out's round-stamped checkpoints newest to "
+                         "oldest past truncated/corrupt/checksum-failing "
+                         "files and restart from the freshest VALID one")
     ap.add_argument("--checkpoint-every", type=int, default=0)
+    ap.add_argument("--keep-checkpoints", type=int, default=3,
+                    help="retention: keep the newest N round-stamped "
+                         "ckpt_<round>.npz files (older ones are pruned; the "
+                         "LATEST manifest is rewritten atomically after every "
+                         "save)")
+    ap.add_argument("--health-sentinel", default="off", choices=["on", "off"],
+                    help="in-program health sentinel: every round emits an "
+                         "anomaly-flag metric (non-finite loss/psi, loss "
+                         "spike vs a running EMA) drained with the other "
+                         "metrics; with --checkpoint-every set, a flagged "
+                         "round triggers rollback to the last valid "
+                         "checkpoint + skip of the offending data span. "
+                         "'off' (default) adds zero ops — the lowered "
+                         "program is unchanged")
+    ap.add_argument("--health-spike-factor", type=float, default=3.0,
+                    help="flag a round whose mean train loss exceeds this "
+                         "multiple of the running EMA")
+    ap.add_argument("--health-warmup", type=int, default=3,
+                    help="finite rounds observed before spike detection arms")
+    ap.add_argument("--health-max-rollbacks", type=int, default=3,
+                    help="rollback budget before escalation (halve the inner "
+                         "LR, then abort)")
+    ap.add_argument("--inject-nan-round", type=int, default=None,
+                    help="fault injection: poison one worker-param element "
+                         "with NaN at this round (forces "
+                         "--rounds-per-dispatch 1 so the poison lands "
+                         "exactly there)")
+    ap.add_argument("--inject-spike-round", type=int, default=None,
+                    help="fault injection: overwrite one worker-param "
+                         "element with a large finite value at this round — "
+                         "a silent-data-corruption loss spike (forces "
+                         "--rounds-per-dispatch 1)")
+    ap.add_argument("--inject-kill-round", type=int, default=None,
+                    help="fault injection: SIGKILL this process the moment "
+                         "the given round's metrics row hits the CSV (the "
+                         "kill-resume harness; resume with --resume auto)")
     ap.add_argument("--checkpoint-in-program", action="store_true",
                     help="emit checkpoints from INSIDE the running device "
                          "program (io_callback) instead of between "

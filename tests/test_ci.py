@@ -86,6 +86,22 @@ def test_single_dispatch_smoke_pins_dispatch_count(workflow):
     assert "dispatches=1" in cmds, "smoke must assert the dispatch count"
 
 
+def test_kill_resume_smoke_drills_crash_recovery(workflow):
+    """The smoke tier must SIGKILL the pinned reduced muon run mid-run,
+    resume with --resume auto, and grep that the resumed run reports the
+    resume AND converges to the same pinned loss as the uninterrupted
+    reference — the crash-safety keystone, exercised on every PR."""
+    cmds = " ".join(s.get("run", "") for s in workflow["jobs"]["smoke"]["steps"])
+    assert "--inject-kill-round" in cmds, "smoke must SIGKILL a run mid-way"
+    assert "--resume auto" in cmds, "smoke must resume the killed run"
+    assert "resume telemetry: resumed_from=" in cmds, (
+        "smoke must grep the resume telemetry")
+    assert "final smoothed eval loss: 6.2911" in cmds, (
+        "resumed run must be pinned to the uninterrupted muon reference")
+    # the single-dispatch step asserts the round-stamped checkpoint names
+    assert "ckpt_4.npz" in cmds and "LATEST" in cmds
+
+
 def test_bench_regression_job_runs_gate_and_uploads_artifacts(workflow):
     job = workflow["jobs"]["bench-regression"]
     assert "if" in job, "bench tier must be schedule/label/dispatch gated"

@@ -1,0 +1,409 @@
+"""Crash-safe training: checksummed checkpoints, the health sentinel, and
+automatic rollback/resume.
+
+Invariants under test:
+
+* every checkpoint leaf carries a CRC32; a flipped bit on disk raises
+  ``CheckpointError`` instead of loading silently-corrupt weights;
+* a zero-length file (torn write caught at its worst) is classified invalid;
+* ``load_latest_valid`` walks newest -> oldest past truncated/corrupted/empty
+  files to the newest checkpoint that verifies, and returns None when none do;
+* round-stamped retention keeps exactly ``keep`` files and the ``LATEST``
+  manifest stays consistent with the directory;
+* the health sentinel flags non-finite losses/psi and EMA loss spikes with
+  distinct bits, and stays a None no-op when disabled (the bit-parity story);
+* an injected NaN round is rolled back to the last valid checkpoint, the
+  offending span is skipped (seed-keyed data makes skipping = advancing the
+  round counter), and the run completes with finite losses;
+* a restore that has nothing to offer escalates to ``TrainingAborted``;
+* ``should_stop`` preemption drains in-flight work and leaves a state that
+  resumes to the bitwise-identical uninterrupted trajectory;
+* the keystone: SIGKILL the train CLI at an arbitrary round, resume with
+  ``--resume auto``, and metrics.csv (minus the wall-clock column) is
+  byte-identical to the uninterrupted run's — for BOTH inner optimizers.
+"""
+import csv
+import os
+import signal
+import subprocess
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import (
+    CheckpointError,
+    checkpoint_path,
+    list_checkpoints,
+    load_checkpoint,
+    load_latest_valid,
+    read_manifest,
+    save_checkpoint,
+    save_round_checkpoint,
+)
+from repro.core import DiLoCoConfig, HealthConfig, health_init, health_update
+from repro.core.faults import CrashPlan, corrupt_file, truncate_file
+from repro.data import DataConfig, MarkovStream, batches_for_round, batches_for_span
+from repro.engine import RecoveryPolicy, TrainEngine, TrainingAborted, run_rounds
+from repro.models import ModelConfig, build_model
+from repro.optim import OptimizerConfig
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+# ---------------------------------------------------------------------------
+# Checksummed checkpoint files
+# ---------------------------------------------------------------------------
+
+
+def _tree(seed=0, big=False):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    w = jax.random.normal(k1, (128, 128) if big else (4, 3))
+    return {"w": w, "inner": {"b": jax.random.normal(k2, (5,)),
+                              "n": jnp.arange(4, dtype=jnp.int32)}}
+
+
+def _assert_trees_equal(a, b):
+    for la, lb in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+
+
+def test_checksum_roundtrip(tmp_path):
+    tree = _tree()
+    path = str(tmp_path / "ckpt.npz")
+    save_checkpoint(path, tree, step=7)
+    loaded, step = load_checkpoint(path, tree)
+    assert step == 7
+    _assert_trees_equal(tree, loaded)
+
+
+def test_on_disk_bit_flip_raises_checkpoint_error(tmp_path):
+    # one big leaf dominates the archive, so a mid-file flip lands in array
+    # payload; whichever CRC layer catches it (zip member or our meta), the
+    # caller sees the one unified invalid-checkpoint signal
+    tree = _tree(big=True)
+    path = str(tmp_path / "ckpt.npz")
+    save_checkpoint(path, tree, step=3)
+    corrupt_file(path, offset=os.path.getsize(path) // 2)
+    with pytest.raises(CheckpointError):
+        load_checkpoint(path, tree)
+
+
+def test_leaf_checksum_catches_tamper_behind_valid_zip(tmp_path):
+    # re-zip the archive with one payload byte flipped: the zip structure and
+    # member CRCs are freshly valid, so only the per-leaf checksum stored in
+    # the meta record can notice the weights changed since save time
+    tree = _tree()
+    path = str(tmp_path / "ckpt.npz")
+    save_checkpoint(path, tree, step=3)
+    with np.load(path) as z:
+        members = {k: np.array(z[k]) for k in z.files}
+    leaf = next(k for k in members if k.startswith("leaf_"))
+    members[leaf].view(np.uint8).reshape(-1)[0] ^= 0xFF
+    np.savez(path, **members)
+    with pytest.raises(CheckpointError, match="checksum mismatch"):
+        load_checkpoint(path, tree)
+    assert load_checkpoint(path, tree, verify=False)  # opt-out still loads
+
+
+def test_zero_length_file_is_invalid(tmp_path):
+    path = str(tmp_path / "ckpt.npz")
+    save_checkpoint(path, _tree(), step=1)
+    truncate_file(path, keep_bytes=0)
+    with pytest.raises(CheckpointError):
+        load_checkpoint(path, _tree())
+
+
+# ---------------------------------------------------------------------------
+# Retention + LATEST manifest + newest-valid fallback
+# ---------------------------------------------------------------------------
+
+
+def test_retention_prunes_to_keep_and_manifest_tracks(tmp_path):
+    d = str(tmp_path)
+    for r in (2, 4, 6, 8):
+        save_round_checkpoint(d, _tree(seed=r), r, keep=2)
+    names = [os.path.basename(p) for _, p in list_checkpoints(d)]
+    assert names == ["ckpt_8.npz", "ckpt_6.npz"]
+    man = read_manifest(d)
+    assert man["latest"] == "ckpt_8.npz" and man["round"] == 8
+    assert sorted(man["retained"]) == ["ckpt_6.npz", "ckpt_8.npz"]
+    # checkpoint_path is the naming contract list_checkpoints parses back
+    assert checkpoint_path(d, 8) == os.path.join(d, "ckpt_8.npz")
+
+
+@pytest.mark.parametrize("damage", [
+    lambda p: truncate_file(p, keep_bytes=100),
+    lambda p: truncate_file(p, keep_bytes=0),
+    lambda p: corrupt_file(p, offset=os.path.getsize(p) // 2),
+], ids=["truncated", "zero-length", "bit-flipped"])
+def test_load_latest_valid_falls_back_past_damaged_newest(tmp_path, damage):
+    d = str(tmp_path)
+    good = _tree(seed=4, big=True)
+    save_round_checkpoint(d, _tree(seed=2, big=True), 2, keep=3)
+    save_round_checkpoint(d, good, 4, keep=3)
+    save_round_checkpoint(d, _tree(seed=6, big=True), 6, keep=3)
+    damage(checkpoint_path(d, 6))
+    tree, step, path = load_latest_valid(d, good)
+    assert step == 4 and os.path.basename(path) == "ckpt_4.npz"
+    _assert_trees_equal(good, tree)
+
+
+def test_load_latest_valid_returns_none_when_all_damaged(tmp_path):
+    d = str(tmp_path)
+    for r in (2, 4):
+        save_round_checkpoint(d, _tree(seed=r, big=True), r, keep=3)
+        corrupt_file(checkpoint_path(d, r),
+                     offset=os.path.getsize(checkpoint_path(d, r)) // 2)
+    assert load_latest_valid(d, _tree(big=True)) is None
+    assert load_latest_valid(str(tmp_path / "missing"), _tree()) is None
+
+
+# ---------------------------------------------------------------------------
+# Health sentinel unit behaviour
+# ---------------------------------------------------------------------------
+
+_HCFG = HealthConfig(enabled=True, spike_factor=3.0, ema_alpha=0.2,
+                     warmup_rounds=2)
+
+
+def _step(health, losses, psi_val=0.0):
+    losses = jnp.asarray(losses, jnp.float32)
+    psi = {"w": jnp.full((2,), psi_val, jnp.float32)}
+    health, flag = health_update(_HCFG, health, losses, psi)
+    return health, int(flag)
+
+
+def test_health_disabled_is_none_and_noop():
+    assert health_init(HealthConfig()) is None  # default: off, no state leaf
+
+
+def test_health_flags_nonfinite_loss_and_psi():
+    h = health_init(_HCFG)
+    h, flag = _step(h, [1.0, jnp.nan])
+    assert flag & 1  # FLAG_NONFINITE_LOSS
+    h, flag = _step(h, [1.0, 1.0], psi_val=jnp.inf)
+    assert flag & 2  # FLAG_NONFINITE_PSI
+    h, flag = _step(h, [1.0, 1.0])
+    assert flag == 0
+
+
+def test_health_spike_fires_only_after_warmup():
+    h = health_init(_HCFG)
+    h, flag = _step(h, [100.0, 100.0])  # round 0: would-be spike, in warmup
+    assert flag == 0
+    h = health_init(_HCFG)
+    for _ in range(3):
+        h, flag = _step(h, [2.0, 2.0])
+        assert flag == 0
+    h, flag = _step(h, [20.0, 20.0])  # 10x the EMA, past warmup
+    assert flag & 4  # FLAG_LOSS_SPIKE
+    # the EMA ignores the spiked round's mean only when non-finite; a finite
+    # spike still updates it, so a persistent plateau stops flagging
+    for _ in range(8):
+        h, flag = _step(h, [20.0, 20.0])
+    assert flag == 0
+
+
+# ---------------------------------------------------------------------------
+# Driver-level rollback / escalation / preemption
+# ---------------------------------------------------------------------------
+
+_CFG = ModelConfig(arch_type="dense", n_layers=2, d_model=32, n_heads=2,
+                   n_kv_heads=2, d_ff=64, vocab=64, remat=False,
+                   dtype="float32", qk_norm=True)
+
+
+def _engine(health=False):
+    dcfg = DiLoCoConfig(n_workers=2, sync_interval=2, inner_name="adamw",
+                        health=HealthConfig(enabled=health, warmup_rounds=1))
+    engine = TrainEngine(build_model(_CFG), dcfg,
+                         OptimizerConfig(lr=1e-2, weight_decay=0.0))
+    return engine, engine.init(jax.random.PRNGKey(0))
+
+
+def _data():
+    return MarkovStream(DataConfig(vocab=_CFG.vocab, seq_len=16,
+                                   batch_per_worker=2, n_workers=2, seed=3))
+
+
+def _run(engine, state, rounds, start=0, **kw):
+    data = _data()
+    return run_rounds(
+        engine, state, lambda r: batches_for_round(data, r, 2),
+        rounds, start=start, rounds_per_dispatch=1,
+        span_batches_for=lambda r0, n: batches_for_span(data, r0, 2, n), **kw)
+
+
+def test_nan_fault_rolls_back_and_skips_offending_round(tmp_path):
+    engine, state = _engine(health=True)
+    d = str(tmp_path)
+    save_round_checkpoint(d, state, 0)
+    crash = CrashPlan(nan_round=2)
+    telemetry: dict = {}
+    recovery = RecoveryPolicy(
+        restore=lambda: load_latest_valid(d, engine.abstract_state())[:2])
+    state, history = _run(
+        engine, state, 4, telemetry=telemetry, recovery=recovery,
+        inject=crash.apply,
+        on_state=lambda r, st: save_round_checkpoint(d, st, r + 1),
+        on_state_every=1)
+    assert [h["round"] for h in history] == [0, 1, 3]  # round 2 skipped
+    assert telemetry["rollbacks"] == 1
+    assert telemetry["skipped_rounds"] == 1  # rolled ckpt_2 -> resumed at 3
+    assert all(np.isfinite(h["train_loss"]) for h in history)
+    assert int(jax.device_get(state["round"])) == 4
+
+
+def test_recovery_without_valid_checkpoint_aborts():
+    engine, state = _engine(health=True)
+    recovery = RecoveryPolicy(restore=lambda: None)
+    with pytest.raises(TrainingAborted):
+        _run(engine, state, 3, recovery=recovery,
+             inject=CrashPlan(nan_round=1).apply, telemetry={})
+
+
+def test_escalation_exhausts_rollbacks_then_aborts(tmp_path):
+    # the checkpoint itself is re-poisoned by the injector every round, so
+    # every retry flags again: max_rollbacks must bound the loop and (with no
+    # scale_lr escape hatch) end in TrainingAborted, not an infinite loop
+    engine, state = _engine(health=True)
+    d = str(tmp_path)
+    save_round_checkpoint(d, state, 0)
+    always = CrashPlan(nan_round=0)
+    recovery = RecoveryPolicy(
+        restore=lambda: load_latest_valid(d, engine.abstract_state())[:2],
+        max_rollbacks=2)
+    telemetry: dict = {}
+    with pytest.raises(TrainingAborted):
+        _run(engine, state, 3, recovery=recovery, telemetry=telemetry,
+             inject=lambda r0, n, b, s: always.apply(0, n, b, s))
+    assert telemetry["rollbacks"] == 2
+
+
+def test_should_stop_preempts_and_resumes_bitwise():
+    engine, state = _engine()
+    full_hist = _run(engine, engine.init(jax.random.PRNGKey(0)), 4)[1]
+
+    probes = iter([False, False, True])  # stop before the third dispatch
+    telemetry: dict = {}
+    state, hist = _run(engine, state, 4, telemetry=telemetry,
+                       should_stop=lambda: next(probes, True))
+    assert telemetry["preempted"] is True
+    done = int(jax.device_get(state["round"]))
+    assert done == 2 and [h["round"] for h in hist] == [0, 1]
+
+    state, tail = _run(engine, state, 4, start=done)
+    assert [h["round"] for h in tail] == [2, 3]
+    for a, b in zip(full_hist, hist + tail):
+        assert a["train_loss"] == b["train_loss"]  # bitwise, not approx
+
+
+# ---------------------------------------------------------------------------
+# Train CLI end-to-end: NaN rollback, SIGKILL keystone, SIGTERM preemption
+# ---------------------------------------------------------------------------
+
+_BASE = ["--reduced", "--inner", "adamw", "--lr", "4e-3", "--workers", "2",
+         "--sync-interval", "2", "--rounds", "6", "--batch-per-worker", "2",
+         "--seq-len", "32", "--seed", "0", "--checkpoint-every", "2"]
+
+
+def test_train_cli_nan_injection_rolls_back_and_completes(tmp_path):
+    from repro.launch.train import build_parser, train
+
+    out = train(build_parser().parse_args(
+        _BASE + ["--health-sentinel", "on", "--inject-nan-round", "3",
+                 "--out", str(tmp_path)]))
+    assert out["telemetry"]["rollbacks"] == 1
+    assert out["telemetry"]["skipped_rounds"] == 2  # ckpt_2 -> resume at 4
+    assert np.isfinite(out["final_loss"])
+    with open(tmp_path / "metrics.csv", newline="") as f:
+        rows = list(csv.DictReader(f))
+    assert [int(r["round"]) for r in rows] == [0, 1, 2, 4, 5]
+    assert all(r["health"] == "0" for r in rows)  # flagged round never logged
+    assert rows[-1]["rollbacks"] == "1"
+
+
+def _cli(args, out, env):
+    return subprocess.run(
+        [sys.executable, "-m", "repro.launch.train", *args, "--out", str(out)],
+        capture_output=True, text=True, env=env, cwd=REPO)
+
+
+def _env():
+    return {**os.environ, "PYTHONPATH": os.path.join(REPO, "src"),
+            "JAX_PLATFORMS": "cpu"}
+
+
+def _rows_sans_wall(path):
+    with open(path, newline="") as f:
+        return [row[:-1] for row in csv.reader(f)]  # wall_s is the last col
+
+
+@pytest.mark.parametrize("inner", ["adamw", "muon"])
+def test_sigkill_resume_metrics_tail_bitwise(tmp_path, inner):
+    """The keystone invariant: SIGKILL at round 3, --resume auto, and the
+    full metrics.csv (minus wall-clock) is byte-identical to an
+    uninterrupted run's — crash + recovery invisible to the arithmetic."""
+    env = _env()
+    base = [a if a != "adamw" else inner for a in _BASE]
+    ref = _cli(base, tmp_path / "ref", env)
+    assert ref.returncode == 0, ref.stderr
+
+    killed = _cli(base + ["--inject-kill-round", "3"], tmp_path / "crash", env)
+    assert killed.returncode == -signal.SIGKILL
+    assert os.path.exists(tmp_path / "crash" / "ckpt_2.npz")
+
+    resumed = _cli(base + ["--resume", "auto"], tmp_path / "crash", env)
+    assert resumed.returncode == 0, resumed.stderr
+    assert ("resume telemetry: resumed_from=ckpt_2.npz start_round=2"
+            in resumed.stdout)
+    assert (_rows_sans_wall(tmp_path / "crash" / "metrics.csv")
+            == _rows_sans_wall(tmp_path / "ref" / "metrics.csv"))
+
+
+def test_sigterm_preempts_with_resumable_checkpoint(tmp_path):
+    """SIGTERM mid-run: the handler drains in-flight dispatches, reports
+    preemption, exits 0 with a final checkpoint; --resume auto completes the
+    remaining rounds."""
+    env = _env()
+    args = [a if a != "6" else "200" for a in _BASE] + [
+        "--rounds-per-dispatch", "1", "--checkpoint-every", "1",
+        "--keep-checkpoints", "2", "--out", str(tmp_path)]
+    proc = subprocess.Popen(
+        [sys.executable, "-m", "repro.launch.train", *args],
+        stdout=subprocess.PIPE, stderr=subprocess.STDOUT, text=True,
+        env=env, cwd=REPO)
+    csv_path = tmp_path / "metrics.csv"
+    deadline = time.time() + 180
+    while time.time() < deadline and proc.poll() is None:
+        if csv_path.exists() and len(csv_path.read_text().splitlines()) >= 3:
+            break
+        time.sleep(0.2)
+    if proc.poll() is not None:
+        proc.communicate()
+        pytest.skip("run finished before SIGTERM could land")
+    proc.send_signal(signal.SIGTERM)
+    stdout, _ = proc.communicate(timeout=300)
+    if "preempted after round" not in stdout:
+        pytest.skip("SIGTERM landed after the final dispatch")
+    assert proc.returncode == 0, stdout
+    assert "preempted=True" in stdout
+    assert list_checkpoints(str(tmp_path)), "no resumable checkpoint on disk"
+
+    resumed = _cli(args[:-2] + ["--resume", "auto"], tmp_path, env)
+    assert resumed.returncode == 0, resumed.stderr
+    assert "resume telemetry: resumed_from=" in resumed.stdout
+    rows = _rows_sans_wall(csv_path)
+    assert int(rows[-1][0]) == 199  # header + all 200 rounds present
+    assert [int(r[0]) for r in rows[1:]] == list(range(200))
+
+
+def test_crash_plan_dispatch_pinning():
+    assert CrashPlan().is_trivial
+    assert not CrashPlan(kill_round=3).needs_single_round_dispatch
+    assert CrashPlan(nan_round=1).needs_single_round_dispatch
+    assert CrashPlan(spike_round=1).needs_single_round_dispatch
